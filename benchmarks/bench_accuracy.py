@@ -1,0 +1,119 @@
+"""Table 1 accuracy-trend reproduction at laptop scale.
+
+The paper's claim: batch-wise HRR compression costs <=0.3% accuracy at
+R<=16 vs vanilla SL, competitive with BottleNet++.  We reproduce the TREND
+on CPU with a conv split model on a synthetic class-conditional image task
+(offline environment; see DESIGN.md): C3-SL accuracy within noise of
+vanilla SL at R in {2,4,8}, mild drop allowed at 16.
+
+Front: 3 conv blocks -> cut (64, 8, 8), D = 4096 (same D as the paper's
+ResNet-50 cut).  Back: 2 conv blocks + fc.  ~300 steps of Adam.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec as codec_lib
+from repro.core.bottlenet import BottleNetPPCodec
+from repro.core.split import apply_codec
+from repro.data.pipeline import SyntheticImageDataset
+from repro.models.convnets import _bn, _init_bn, _init_conv, conv2d, max_pool
+from repro.optim import adam, apply_updates
+
+CUT = (64, 8, 8)  # D = 4096
+D = 64 * 8 * 8
+
+
+def init_small_convnet(rng, n_classes=10):
+    ks = jax.random.split(rng, 6)
+    return {
+        "c1": _init_conv(ks[0], 3, 32, 3), "b1": _init_bn(32),
+        "c2": _init_conv(ks[1], 32, 64, 3), "b2": _init_bn(64),
+        "c3": _init_conv(ks[2], 64, 64, 3), "b3": _init_bn(64),
+        "c4": _init_conv(ks[3], 64, 128, 3), "b4": _init_bn(128),
+        "fc": {"w": jax.random.normal(ks[4], (128, n_classes)) * 128 ** -0.5,
+               "b": jnp.zeros((n_classes,))},
+    }
+
+
+def front(p, x):
+    x = jax.nn.relu(_bn(conv2d(x, p["c1"]), p["b1"]))
+    x = max_pool(x)                                     # 16
+    x = jax.nn.relu(_bn(conv2d(x, p["c2"]), p["b2"]))
+    x = max_pool(x)                                     # 8
+    x = jax.nn.relu(_bn(conv2d(x, p["c3"]), p["b3"]))
+    return x                                            # (B, 64, 8, 8)
+
+
+def back(p, z):
+    x = jax.nn.relu(_bn(conv2d(z, p["c4"]), p["b4"]))
+    x = x.mean(axis=(2, 3))
+    return x @ p["fc"]["w"] + p["fc"]["b"]
+
+
+def run_one(codec, codec_params_init, steps=300, batch=64, lr=1e-3, seed=0):
+    rng = jax.random.PRNGKey(seed)
+    params = {"net": init_small_convnet(rng), "codec": codec_params_init}
+    opt = adam(lr)
+    opt_state = opt.init(params)
+    data = SyntheticImageDataset(n_classes=10, seed=seed)
+
+    def loss_fn(p, batch_):
+        z = front(p["net"], batch_["x"])
+        zhat = apply_codec(codec, p["codec"], z) if codec is not None else z
+        logits = back(p["net"], zhat)
+        logp = jax.nn.log_softmax(logits)
+        return -logp[jnp.arange(batch_["y"].shape[0]), batch_["y"]].mean()
+
+    @jax.jit
+    def step_fn(params, opt_state, batch_):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch_)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    for s in range(steps):
+        params, opt_state, loss = step_fn(params, opt_state, data.batch(batch, s))
+
+    # eval on fresh samples
+    @jax.jit
+    def acc_fn(params, batch_):
+        z = front(params["net"], batch_["x"])
+        zhat = apply_codec(codec, params["codec"], z) if codec is not None else z
+        logits = back(params["net"], zhat)
+        return (jnp.argmax(logits, -1) == batch_["y"]).mean()
+
+    accs = [float(acc_fn(params, data.batch(256, 10_000 + i))) for i in range(4)]
+    return sum(accs) / len(accs)
+
+
+def main(steps=300):
+    rng = jax.random.PRNGKey(42)
+    results = {}
+    t0 = time.time()
+    results["vanilla"] = run_one(None, {}, steps=steps)
+    print(f"vanilla,{results['vanilla']*100:.1f}", flush=True)
+    for R in (2, 4, 8, 16):
+        c = codec_lib.C3SLCodec(R=R, D=D)
+        results[f"c3sl_R{R}"] = run_one(c, c.init(rng), steps=steps)
+        print(f"c3sl_R{R},{results[f'c3sl_R{R}']*100:.1f}", flush=True)
+    # beyond-paper: unitary keys (exact-rotation binding) at the hardest R
+    cu = codec_lib.C3SLCodec(R=16, D=D, unitary=True)
+    results["c3sl_R16_unitary"] = run_one(cu, cu.init(rng), steps=steps)
+    print(f"c3sl_R16_unitary,{results['c3sl_R16_unitary']*100:.1f}", flush=True)
+    # beyond-paper: int8 wire at R=4 (4R x total compression)
+    cq = codec_lib.C3SLCodec(R=4, D=D, quant_bits=8)
+    results["c3sl_R4_int8"] = run_one(cq, cq.init(rng), steps=steps)
+    print(f"c3sl_R4_int8,{results['c3sl_R4_int8']*100:.1f}", flush=True)
+    bn = BottleNetPPCodec(R=4, C=CUT[0], H=CUT[1], W=CUT[2])
+    results["bnpp_R4"] = run_one(bn, bn.init(rng), steps=steps)
+    print(f"bnpp_R4,{results['bnpp_R4']*100:.1f}", flush=True)
+    print(f"# total {time.time()-t0:.0f}s")
+    return results
+
+
+if __name__ == "__main__":
+    main()

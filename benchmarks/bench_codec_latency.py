@@ -1,0 +1,50 @@
+"""Codec latency microbenchmark (CPU wall-time; TPU numbers come from the
+roofline analysis since this container has no TPU).
+
+Compares the three C3-SL execution backends (fft / direct / pallas-interpret)
+and BottleNet++ at the paper's shapes."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec as codec_lib
+from repro.core.bottlenet import BottleNetPPCodec
+
+
+def timeit(fn, *args, iters=10):
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main():
+    B, R = 64, 4
+    print("# codec round-trip latency (CPU reference)")
+    print("name,us_per_call,derived")
+    # O(D log D) fft backend at the paper's full D; O(D^2) backends at D=1024
+    # (1-core CPU container; the TPU story is in the roofline analysis)
+    for backend, D, iters in (("fft", 4096, 10), ("direct", 1024, 3),
+                              ("pallas", 1024, 3)):
+        Z = jax.random.normal(jax.random.PRNGKey(0), (B, D))
+        c = codec_lib.C3SLCodec(R=R, D=D, backend=backend)
+        p = c.init(jax.random.PRNGKey(1))
+        f = jax.jit(lambda z: c.decode(p, c.encode(p, z)))
+        us = timeit(f, Z, iters=iters)
+        print(f"c3sl_{backend},{us:.0f},B={B} D={D} R={R}", flush=True)
+    Z = jax.random.normal(jax.random.PRNGKey(0), (B, 4096))
+    bn = BottleNetPPCodec(R=R, C=1024, H=2, W=2)
+    pbn = bn.init(jax.random.PRNGKey(2))
+    Z4 = Z.reshape(B, 1024, 2, 2)
+    f = jax.jit(lambda z: bn.decode(pbn, bn.encode(pbn, z)))
+    us = timeit(f, Z4)
+    print(f"bottlenetpp,{us:.0f},B={B} C=1024 HxW=2x2 R={R}")
+
+
+if __name__ == "__main__":
+    main()

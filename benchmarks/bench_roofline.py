@@ -1,0 +1,49 @@
+"""Aggregate the dry-run JSONs into the EXPERIMENTS.md §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh="single", tag="baseline"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*_{mesh}_{tag}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9))
+    return rows
+
+
+def fmt_row(r):
+    if r["status"] != "ok":
+        return (f"{r['arch']},{r['shape']},{r['status']},,,,,,,")
+    t = r["roofline"]
+    return (f"{r['arch']},{r['shape']},ok,"
+            f"{t['compute_s']:.3f},{t['memory_s']:.3f},{t['collective_s']:.3f},"
+            f"{r['dominant'].replace('_s','')},"
+            f"{r['useful_flops_ratio']:.3f},"
+            f"{r['per_device']['peak_bytes']/2**30:.2f},"
+            f"{r.get('num_microbatches', 1)}")
+
+
+def main(mesh="single", tag="baseline"):
+    rows = load(mesh, tag)
+    print(f"# roofline table ({mesh} mesh, tag={tag}); terms in seconds/step")
+    print("arch,shape,status,compute_s,memory_s,collective_s,dominant,"
+          "useful_flops_ratio,peak_GiB,microbatches")
+    for r in rows:
+        print(fmt_row(r))
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skipped" for r in rows)
+    print(f"# {n_ok} ok, {n_skip} skipped (documented), {len(rows)} total")
+
+
+if __name__ == "__main__":
+    import sys
+    main(*(sys.argv[1:] or []))

@@ -1,0 +1,45 @@
+"""Paper Table 2 reproduction: codec parameter/FLOP formulas, exact.
+
+C3-SL:        params = R*D              flops = 2*B*D^2
+BottleNet++:  params = (Ck^2+1)(4C/R) + ((4C/R)k^2+1)C
+              flops  = B(2Ck^2+1)(4C/R)H'W' + B((8C/R)k^2+1)CHW
+"""
+from __future__ import annotations
+
+from repro.configs.paper import PAPER_RS, RESNET50_CIFAR100, VGG16_CIFAR10
+from repro.core.bottlenet import BottleNetPPCodec
+from repro.core.codec import C3SLCodec
+
+
+def rows():
+    out = []
+    for cfg in (VGG16_CIFAR10, RESNET50_CIFAR100):
+        C, H, W = cfg.cut_shape
+        B = cfg.batch_size
+        for R in PAPER_RS:
+            c3 = C3SLCodec(R=R, D=cfg.D)
+            bn = BottleNetPPCodec(R=R, C=C, H=H, W=W)
+            out.append({
+                "config": cfg.name, "R": R,
+                "c3sl_params": c3.param_count(),
+                "c3sl_flops": c3.flops(B),
+                "bnpp_params": bn.param_count(),
+                "bnpp_flops": bn.flops(B),
+                "mem_ratio": bn.param_count() / c3.param_count(),
+                "flop_ratio": bn.flops(B) / c3.flops(B),
+            })
+    return out
+
+
+def main():
+    print("# Table 2: codec params/FLOPs (exact formulas)")
+    print("config,R,c3sl_params,c3sl_flops,bnpp_params,bnpp_flops,"
+          "mem_ratio,flop_ratio")
+    for r in rows():
+        print(f"{r['config']},{r['R']},{r['c3sl_params']},{r['c3sl_flops']},"
+              f"{r['bnpp_params']},{r['bnpp_flops']},{r['mem_ratio']:.0f},"
+              f"{r['flop_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark entrypoint: one section per paper table + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+--fast skips the accuracy-trend training runs (several minutes on CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--accuracy-steps", type=int, default=300)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_accuracy, bench_codec_latency, bench_comm,
+                            bench_roofline, bench_table1, bench_table2)
+
+    sections = [
+        ("table2_formulas", bench_table2.main),
+        ("table1_columns", bench_table1.main),
+        ("comm_bytes", bench_comm.main),
+        ("codec_latency", bench_codec_latency.main),
+    ]
+    for name, fn in sections:
+        print(f"\n==== {name} ====", flush=True)
+        t0 = time.time()
+        fn()
+        print(f"# section {name}: {time.time()-t0:.1f}s", flush=True)
+
+    print("\n==== roofline (from dry-run artifacts, if present) ====", flush=True)
+    try:
+        bench_roofline.main()
+    except Exception as e:  # dry-run artifacts may not exist yet
+        print(f"# roofline aggregation skipped: {e}")
+
+    if not args.fast:
+        print("\n==== table1_accuracy_trend (laptop-scale) ====", flush=True)
+        bench_accuracy.main(steps=args.accuracy_steps)
+
+
+if __name__ == "__main__":
+    main()

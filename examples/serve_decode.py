@@ -1,0 +1,21 @@
+"""Serving example: batched token-by-token decode with the C3-SL codec
+compressing the cut-layer activations across the decode batch.
+
+    PYTHONPATH=src python examples/serve_decode.py
+
+Uses the attention-free rwkv6 family (O(1) decode state) at reduced scale;
+prints throughput and boundary-compression stats.  Equivalent to:
+    python -m repro.launch.serve --arch rwkv6-1.6b --reduced --codec c3sl
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import subprocess
+
+if __name__ == "__main__":
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "rwkv6-1.6b",
+         "--reduced", "--batch", "8", "--steps", "24", "--codec", "c3sl",
+         "--R", "4"], env=env))

@@ -1,0 +1,12 @@
+"""repro: C3-SL (circular-convolution batch-wise compression for split
+learning) as a production-grade multi-pod JAX framework.
+
+Public entry points:
+    repro.core.codec       — C3SLCodec / BottleNetPPCodec / IdentityCodec
+    repro.core.hrr         — HRR bind/unbind primitives (fft/direct/pallas)
+    repro.core.split       — logical + pod-pipeline split-learning steps
+    repro.models.lm        — CausalLM/EncDec init/loss/decode
+    repro.configs.base     — get_config/list_configs/reduced
+    repro.launch           — train / serve / dryrun drivers
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, latest_step

@@ -1,0 +1,68 @@
+"""Pytree checkpointing: npz payload + json manifest per step.
+
+Layout:  <dir>/step_<n>/arrays.npz  +  <dir>/step_<n>/manifest.json
+Arrays are keyed by their flattened tree path; restore validates structure
+against a template pytree and casts to the template's dtypes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, metadata: dict | None = None):
+    out = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    for path, leaf in flat:
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz has no native bf16; upcast losslessly
+            arr = arr.astype(np.float32)
+        arrays[_path_str(path)] = arr
+    np.savez(os.path.join(out, "arrays.npz"), **arrays)
+    manifest = {"step": step, "keys": sorted(arrays),
+                "metadata": metadata or {}}
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return out
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)$", d))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, template):
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "arrays.npz")
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = _path_str(p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != template {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,1 @@
+from repro.core import codec, hrr, metrics, split  # noqa: F401

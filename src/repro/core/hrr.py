@@ -1,0 +1,203 @@
+"""Holographic Reduced Representation (HRR) primitives for C3-SL.
+
+Conventions (Plate 1995):
+    circular convolution  (a (*) b)[d] = sum_j a[j] * b[(d - j) mod D]
+    circular correlation  (a (.) b)[d] = sum_j a[j] * b[(d + j) mod D]
+
+In the Fourier domain:  F(a (*) b) = F(a) . F(b),   F(a (.) b) = conj(F(a)) . F(b)
+
+C3-SL encoder:  S^g = sum_i  K_i (*) Z_i^g          (bind + superpose)
+C3-SL decoder:  Zhat_i^g = K_i (.) S^g              (unbind)
+
+Keys K_i ~ N(0, 1/D), unit-normalized, FIXED (never trained) — the paper's
+memory claim (R*D codec parameters) rests on this, so every op here wraps keys
+in stop_gradient.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def generate_keys(rng: jax.Array, R: int, D: int, dtype=jnp.float32,
+                  unitary: bool = False) -> jax.Array:
+    """R fixed random keys, each D-dim, ~N(0, 1/D) then unit-normalized.
+
+    unitary=False is the paper-faithful sampler.  Its retrieval noise has two
+    parts (Eq. 4): self-noise from |F(K)|^2 ~ Exp(1) spectral jitter (~1.0
+    relative) plus cross-talk (~sqrt(R-1) relative); training through the
+    codec absorbs it.
+
+    unitary=True is a beyond-paper improvement: project each key to unit
+    spectral magnitude (|F(K)_f| = 1 for all f).  Binding becomes an exact
+    rotation — self-retrieval is EXACT and only the sqrt(R-1) cross-talk
+    remains, at identical memory/FLOP cost.
+    """
+    k = jax.random.normal(rng, (R, D), jnp.float32) * (D ** -0.5)
+    if unitary:
+        F = jnp.fft.fft(k, axis=-1)
+        F = F / jnp.maximum(jnp.abs(F), 1e-12)
+        k = jnp.fft.ifft(F, axis=-1).real
+    k = k / jnp.linalg.norm(k, axis=-1, keepdims=True)
+    return k.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# FFT backend (beyond-paper O(D log D); XLA lowers FFT natively on TPU).
+# --------------------------------------------------------------------------
+
+def _fft_safe(x: jax.Array) -> jax.Array:
+    """XLA:CPU's FFT thunk requires a row-major operand; a barrier stops
+    layout assignment from propagating a transposed layout into the FFT
+    (hit in the pod-pipeline path where the operand comes via ppermute)."""
+    return jax.lax.optimization_barrier(x.astype(jnp.float32))
+
+
+def circ_conv_fft(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Circular convolution along the last axis (leading dims broadcast)."""
+    D = b.shape[-1]
+    out_dtype = jnp.result_type(a.dtype, b.dtype)
+    fa = jnp.fft.rfft(_fft_safe(a), axis=-1)
+    fb = jnp.fft.rfft(_fft_safe(b), axis=-1)
+    return jnp.fft.irfft(fa * fb, n=D, axis=-1).astype(out_dtype)
+
+
+def circ_corr_fft(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Circular correlation along the last axis (leading dims broadcast)."""
+    D = b.shape[-1]
+    out_dtype = jnp.result_type(a.dtype, b.dtype)
+    fa = jnp.fft.rfft(_fft_safe(a), axis=-1)
+    fb = jnp.fft.rfft(_fft_safe(b), axis=-1)
+    return jnp.fft.irfft(jnp.conj(fa) * fb, n=D, axis=-1).astype(out_dtype)
+
+
+# --------------------------------------------------------------------------
+# Direct backend (paper-faithful O(D^2) contraction; what the Pallas kernel
+# implements with Toeplitz tiling on the MXU).
+# --------------------------------------------------------------------------
+
+def _conv_index(D: int) -> jax.Array:
+    d = jnp.arange(D)
+    return (d[:, None] - d[None, :]) % D  # idx[d, j] = (d - j) mod D
+
+
+def _corr_index(D: int) -> jax.Array:
+    d = jnp.arange(D)
+    return (d[None, :] - d[:, None]) % D  # idx[d, m] = (m - d) mod D
+
+
+def circ_conv_direct(a: jax.Array, b: jax.Array) -> jax.Array:
+    D = b.shape[-1]
+    mat = jnp.take(a, _conv_index(D), axis=-1)  # (..., D, D): a[(d-j) mod D]
+    return jnp.einsum("...dj,...j->...d", mat, b)
+
+
+def circ_corr_direct(a: jax.Array, b: jax.Array) -> jax.Array:
+    D = b.shape[-1]
+    mat = jnp.take(a, _corr_index(D), axis=-1)  # (..., D, D): a[(d+j) mod D]
+    return jnp.einsum("...dj,...j->...d", mat, b)
+
+
+# --------------------------------------------------------------------------
+# Grouped encode / decode (the paper's Algorithm 1 inner loop, vectorized)
+# --------------------------------------------------------------------------
+
+def _bind_impl(Z, K, backend):
+    if backend == "fft":
+        # superpose in the Fourier domain: S = irfft(sum_i F(K_i) . F(Z_i)).
+        # One irfft of (..., D) instead of R of them — fewer FFTs than the
+        # naive form, and every FFT operand is a freshly materialized
+        # contiguous tensor (XLA:CPU's FFT thunk requires row-major input).
+        D = Z.shape[-1]
+        dt = Z.dtype
+        fk = jnp.fft.rfft(_fft_safe(K), axis=-1)
+        fz = jnp.fft.rfft(_fft_safe(Z), axis=-1)
+        return jnp.fft.irfft((fk * fz).sum(axis=-2), n=D, axis=-1).astype(dt)
+    if backend == "direct":
+        return circ_conv_direct(K, Z).sum(axis=-2)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def _unbind_impl(S, K, backend):
+    if backend == "fft":
+        D = S.shape[-1]
+        dt = S.dtype
+        fk = jnp.fft.rfft(_fft_safe(K), axis=-1)
+        fs = jnp.fft.rfft(_fft_safe(S), axis=-1)
+        prod = jnp.conj(fk) * fs[..., None, :]
+        return jnp.fft.irfft(prod, n=D, axis=-1).astype(dt)
+    if backend == "direct":
+        return circ_corr_direct(K, S[..., None, :])
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+# Custom VJPs: the codec is linear and its adjoints are again HRR ops with
+# the same keys (adjoint of bind = unbind, and vice versa).  This (a) makes
+# the compressed-gradient property explicit, and (b) routes the backward
+# pass through the same layout-safe FFT wrappers as the forward (XLA:CPU's
+# FFT thunk rejects non-row-major operands that autodiff-generated FFTs can
+# otherwise receive).
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _bind_vjp(Z, K, backend):
+    return _bind_impl(Z, K, backend)
+
+
+def _bind_fwd(Z, K, backend):
+    return _bind_impl(Z, K, backend), K
+
+
+def _bind_bwd(backend, K, dS):
+    return _unbind_impl(dS, K, backend), None
+
+
+_bind_vjp.defvjp(_bind_fwd, _bind_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _unbind_vjp(S, K, backend):
+    return _unbind_impl(S, K, backend)
+
+
+def _unbind_fwd(S, K, backend):
+    return _unbind_impl(S, K, backend), K
+
+
+def _unbind_bwd(backend, K, dZhat):
+    return _bind_impl(dZhat, K, backend), None
+
+
+_unbind_vjp.defvjp(_unbind_fwd, _unbind_bwd)
+
+
+def bind_superpose(Z: jax.Array, K: jax.Array, backend: str = "fft") -> jax.Array:
+    """Encode a group: Z (..., R, D) + keys K (R, D) -> S (..., D).
+
+    S = sum_i K_i (*) Z_i.  Keys take no gradient (paper Sec. 3.1).
+    """
+    K = jax.lax.stop_gradient(K)
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.bind_superpose_pallas(Z, K)
+    return _bind_vjp(Z, K, backend)
+
+
+def unbind(S: jax.Array, K: jax.Array, backend: str = "fft") -> jax.Array:
+    """Decode a group: S (..., D) + keys K (R, D) -> Zhat (..., R, D).
+
+    Zhat_i = K_i (.) S.
+    """
+    K = jax.lax.stop_gradient(K)
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.unbind_pallas(S, K)
+    return _unbind_vjp(S, K, backend)
+
+
+def retrieval_snr(Z: jax.Array, Zhat: jax.Array) -> jax.Array:
+    """Signal-to-noise ratio (dB) of HRR retrieval — diagnostics for Eq. 4."""
+    sig = jnp.sum(Z.astype(jnp.float32) ** 2)
+    err = jnp.sum((Z.astype(jnp.float32) - Zhat.astype(jnp.float32)) ** 2)
+    return 10.0 * jnp.log10(sig / jnp.maximum(err, 1e-12))

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticImageDataset, SyntheticTokenDataset,
+                                 input_specs, make_batch_iterator)

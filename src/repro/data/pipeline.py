@@ -1,0 +1,124 @@
+"""Deterministic synthetic data pipelines + dry-run input specs.
+
+Offline environment: no dataset downloads.  Two learnable synthetic tasks:
+
+  * SyntheticImageDataset — class-conditional image distribution (random
+    class templates + noise); CIFAR-shaped, used for the paper repro.
+  * SyntheticTokenDataset — LM sequences from a deterministic mixture of
+    per-class n-gram-ish generators, so next-token loss is reducible.
+
+`input_specs(cfg, shape)` produces the ShapeDtypeStruct batches every
+dry-run lowers against (the one carve-out for vlm/audio: precomputed
+patch/frame embeddings per DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# synthetic images (paper repro)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SyntheticImageDataset:
+    n_classes: int = 10
+    shape: tuple = (3, 32, 32)
+    noise: float = 0.6
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.templates = rng.normal(size=(self.n_classes, *self.shape)).astype(np.float32)
+
+    def batch(self, batch_size: int, step: int):
+        rng = np.random.default_rng((self.seed, step))
+        y = rng.integers(0, self.n_classes, size=batch_size)
+        x = self.templates[y] + self.noise * rng.normal(
+            size=(batch_size, *self.shape)).astype(np.float32)
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# synthetic tokens
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SyntheticTokenDataset:
+    vocab_size: int
+    seq_len: int
+    seed: int = 0
+    n_patterns: int = 64
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # deterministic successor table: tok -> likely next tok (learnable)
+        self.successor = rng.integers(0, self.vocab_size, size=self.vocab_size)
+
+    def batch(self, batch_size: int, step: int):
+        rng = np.random.default_rng((self.seed, step))
+        toks = np.empty((batch_size, self.seq_len + 1), np.int64)
+        toks[:, 0] = rng.integers(0, self.vocab_size, size=batch_size)
+        for t in range(1, self.seq_len + 1):
+            follow = self.successor[toks[:, t - 1]]
+            rand = rng.integers(0, self.vocab_size, size=batch_size)
+            use_follow = rng.random(batch_size) < 0.8
+            toks[:, t] = np.where(use_follow, follow, rand)
+        return {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+
+def make_batch_iterator(dataset, batch_size: int, start_step: int = 0) -> Iterator:
+    step = start_step
+    while True:
+        yield dataset.batch(batch_size, step)
+        step += 1
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct only — zero allocation)
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "train_4k":    dict(seq_len=4096,    global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768,   global_batch=32,  kind="prefill"),
+    "decode_32k":  dict(seq_len=32768,   global_batch=128, kind="decode"),
+    "long_500k":   dict(seq_len=524288,  global_batch=1,   kind="decode"),
+}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, dtype=jnp.bfloat16):
+    """Dry-run batch spec for (arch, input-shape).
+
+    train/prefill: {"tokens","labels"(train only),["frontend"]}.
+    decode: {"tokens" (B,1)} — the KV cache spec comes from
+    lm.abstract_decode_cache.
+    """
+    spec = SHAPES[shape_name]
+    B, S = spec["global_batch"], spec["seq_len"]
+    sds = jax.ShapeDtypeStruct
+    if spec["kind"] == "decode":
+        batch = {"tokens": sds((B, 1), jnp.int32)}
+        return batch
+    out = {}
+    if cfg.frontend and not cfg.is_encdec:
+        # vlm: patches take frontend_seq of the total sequence
+        s_text = S - cfg.frontend_seq
+        out["tokens"] = sds((B, s_text), jnp.int32)
+        out["frontend"] = sds((B, cfg.frontend_seq, cfg.frontend_dim), dtype)
+        if spec["kind"] == "train":
+            out["labels"] = sds((B, s_text), jnp.int32)
+        return out
+    out["tokens"] = sds((B, S), jnp.int32)
+    if cfg.is_encdec:
+        out["frontend"] = sds((B, cfg.frontend_seq, cfg.frontend_dim), dtype)
+    if spec["kind"] == "train":
+        out["labels"] = sds((B, S), jnp.int32)
+    return out

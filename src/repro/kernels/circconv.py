@@ -1,0 +1,136 @@
+"""Pallas TPU kernels for C3-SL's HRR codec (bind+superpose / unbind).
+
+TPU adaptation (see DESIGN.md): instead of the GPU-friendly FFT route, the
+circular convolution is computed as a tiled Toeplitz-block contraction that
+runs on the MXU.  For an output tile d in [d0, d0+T) and an input tile
+j in [j0, j0+T), the key slice K[(d - j) mod D] is a T x T Toeplitz block
+built in-VMEM from a (2T-1)-window of the doubled key Kext = [K || K]:
+
+    bind:    S[g, d]      = sum_i sum_j Z[g, i, j] * K_i[(d - j) mod D]
+    unbind:  Zhat[g, i, d] = sum_j S[g, j] * K_i[(j - d) mod D]
+
+Grid: (G/GT, D/T, D/T) with accumulation over the last (j-tile) grid axis.
+Each j-step does R small (GT x T) @ (T x T) MXU contractions.  FLOPs match
+the paper's Table 2 accounting (D^2 MACs per bound vector).
+
+VMEM budget per step (T=128, R=16, D=4096, GT=8, f32):
+    Z tile 8*16*128*4 = 64 KiB, Kext 16*8192*4 = 512 KiB,
+    Toeplitz scratch 128*128*4 = 64 KiB, out 8*128*4 = 4 KiB  -> ~0.7 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_tile(D: int, target: int = 128) -> int:
+    """Largest divisor of D that is <= target (MXU-aligned when D % 128 == 0)."""
+    t = min(D, target)
+    while D % t:
+        t -= 1
+    return t
+
+
+def _window_indices(T: int):
+    ia = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)  # tile-local j (rows)
+    ib = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)  # tile-local d (cols)
+    return ia, ib
+
+
+def _bind_kernel(z_ref, kext_ref, out_ref, *, T: int, R: int, D: int):
+    dt = pl.program_id(1)
+    jt = pl.program_id(2)
+    d0 = dt * T
+    j0 = jt * T
+
+    @pl.when(jt == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    z = z_ref[...].astype(jnp.float32)           # (GT, R, T)
+    ia, ib = _window_indices(T)
+    widx = ib - ia + (T - 1)                      # toep[a, b] <- win[b - a + T - 1]
+    # window start so that Kext[w0 + (b - a + T-1)] == K[(d0+b - j0-a) mod D]
+    w0 = d0 - j0 + D - (T - 1)
+    acc = jnp.zeros(out_ref.shape, jnp.float32)   # (GT, T)
+    for i in range(R):
+        win = jax.lax.dynamic_slice(kext_ref[i], (w0,), (2 * T - 1,))
+        toep = jnp.take(win, widx, axis=0)        # (T_j, T_d)
+        acc += jnp.dot(z[:, i, :], toep, preferred_element_type=jnp.float32)
+    out_ref[...] += acc.astype(out_ref.dtype)
+
+
+def _unbind_kernel(s_ref, kext_ref, out_ref, *, T: int, R: int, D: int):
+    dt = pl.program_id(1)
+    jt = pl.program_id(2)
+    d0 = dt * T
+    j0 = jt * T
+
+    @pl.when(jt == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    s = s_ref[...].astype(jnp.float32)            # (GT, T)
+    ia, ib = _window_indices(T)
+    widx = ia - ib + (T - 1)                      # toep[a, b] <- win[a - b + T - 1]
+    # Kext[w0 + (a - b + T-1)] == K[(j0+a - d0-b) mod D]
+    w0 = j0 - d0 + D - (T - 1)
+    outs = []
+    for i in range(R):
+        win = jax.lax.dynamic_slice(kext_ref[i], (w0,), (2 * T - 1,))
+        toep = jnp.take(win, widx, axis=0)        # (T_j, T_d)
+        outs.append(jnp.dot(s, toep, preferred_element_type=jnp.float32))
+    acc = jnp.stack(outs, axis=1)                 # (GT, R, T)
+    out_ref[...] += acc.astype(out_ref.dtype)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def bind_superpose_kernel(Z: jax.Array, Kext: jax.Array, tile: int | None = None) -> jax.Array:
+    """Z (G, R, D), Kext (R, 2D) -> S (G, D).  Requires divisible tiles."""
+    G, R, D = Z.shape
+    assert Kext.shape == (R, 2 * D), (Kext.shape, (R, 2 * D))
+    T = tile or _pick_tile(D)
+    GT = _pick_tile(G, 8)
+    grid = (G // GT, D // T, D // T)
+    kernel = functools.partial(_bind_kernel, T=T, R=R, D=D)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((GT, R, T), lambda g, dt, jt: (g, 0, jt)),
+            pl.BlockSpec((R, 2 * D), lambda g, dt, jt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((GT, T), lambda g, dt, jt: (g, dt)),
+        out_shape=jax.ShapeDtypeStruct((G, D), Z.dtype),
+        interpret=_interpret(),
+    )(Z, Kext)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def unbind_kernel(S: jax.Array, Kext: jax.Array, tile: int | None = None) -> jax.Array:
+    """S (G, D), Kext (R, 2D) -> Zhat (G, R, D).  Requires divisible tiles."""
+    G, D = S.shape
+    R = Kext.shape[0]
+    assert Kext.shape == (R, 2 * D)
+    T = tile or _pick_tile(D)
+    GT = _pick_tile(G, 8)
+    grid = (G // GT, D // T, D // T)
+    kernel = functools.partial(_unbind_kernel, T=T, R=R, D=D)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((GT, T), lambda g, dt, jt: (g, jt)),
+            pl.BlockSpec((R, 2 * D), lambda g, dt, jt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((GT, R, T), lambda g, dt, jt: (g, 0, dt)),
+        out_shape=jax.ShapeDtypeStruct((G, R, D), S.dtype),
+        interpret=_interpret(),
+    )(S, Kext)

@@ -1,0 +1,58 @@
+"""Jit'd public wrappers over the Pallas HRR kernels.
+
+Adds shape checks, the doubled-key layout, and custom VJPs.  The codec is
+linear in Z, and its adjoints are again HRR ops with the SAME keys:
+
+    d/dZ of bind_superpose  == unbind        (correlate the upstream grad)
+    d/dS of unbind          == bind_superpose (bind+superpose the upstream grad)
+
+which is exactly how C3-SL compresses the backward-path gradients with zero
+extra machinery.  Keys are constants (stop_gradient; no key cotangent).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import circconv
+
+
+def _kext(K: jax.Array) -> jax.Array:
+    K = jax.lax.stop_gradient(K)
+    return jnp.concatenate([K, K], axis=-1)
+
+
+@jax.custom_vjp
+def bind_superpose_pallas(Z: jax.Array, K: jax.Array) -> jax.Array:
+    """Z (G, R, D), K (R, D) -> S (G, D) via the Pallas Toeplitz kernel."""
+    return circconv.bind_superpose_kernel(Z, _kext(K))
+
+
+def _bind_fwd(Z, K):
+    return bind_superpose_pallas(Z, K), K
+
+
+def _bind_bwd(K, dS):
+    dZ = circconv.unbind_kernel(dS, _kext(K))
+    return dZ, None
+
+
+bind_superpose_pallas.defvjp(_bind_fwd, _bind_bwd)
+
+
+@jax.custom_vjp
+def unbind_pallas(S: jax.Array, K: jax.Array) -> jax.Array:
+    """S (G, D), K (R, D) -> Zhat (G, R, D) via the Pallas Toeplitz kernel."""
+    return circconv.unbind_kernel(S, _kext(K))
+
+
+def _unbind_fwd(S, K):
+    return unbind_pallas(S, K), K
+
+
+def _unbind_bwd(K, dZhat):
+    dS = circconv.bind_superpose_kernel(dZhat, _kext(K))
+    return dS, None
+
+
+unbind_pallas.defvjp(_unbind_fwd, _unbind_bwd)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas HRR kernels.
+
+These are the correctness references the kernel tests assert against:
+exact O(D^2) gather-based circular convolution / correlation, plus the
+grouped encode/decode used by C3-SL.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def circ_conv_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(a (*) b)[d] = sum_j a[j] b[(d-j) mod D], last axis, exact."""
+    D = b.shape[-1]
+    d = jnp.arange(D)
+    idx = (d[:, None] - d[None, :]) % D
+    mat = jnp.take(a, idx, axis=-1)  # (..., D, D)
+    return jnp.einsum("...dj,...j->...d", mat, b)
+
+
+def circ_corr_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(a (.) b)[d] = sum_j a[j] b[(d+j) mod D], last axis, exact.
+
+    Rewritten as sum_m a[(m-d) mod D] b[m] so the gather runs over `a`.
+    """
+    D = b.shape[-1]
+    d = jnp.arange(D)
+    idx = (d[None, :] - d[:, None]) % D  # idx[d, m] = (m - d) mod D
+    mat = jnp.take(a, idx, axis=-1)
+    return jnp.einsum("...dj,...j->...d", mat, b)
+
+
+def bind_superpose_ref(Z: jnp.ndarray, K: jnp.ndarray) -> jnp.ndarray:
+    """Z (G, R, D), K (R, D) -> S (G, D): S_g = sum_i K_i (*) Z_gi."""
+    return circ_conv_ref(K, Z).sum(axis=-2)
+
+
+def unbind_ref(S: jnp.ndarray, K: jnp.ndarray) -> jnp.ndarray:
+    """S (G, D), K (R, D) -> Zhat (G, R, D): Zhat_gi = K_i (.) S_g."""
+    return circ_corr_ref(K, S[..., None, :])

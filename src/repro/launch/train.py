@@ -1,0 +1,173 @@
+"""Training driver (runs for real on whatever devices exist; CPU-friendly).
+
+Examples:
+    # reduced-config LM training with the C3-SL boundary codec
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --reduced \
+        --steps 50 --batch 16 --seq 128 --codec c3sl --R 4
+
+    # 2-stage pod pipeline on a host mesh (needs >= 2 devices: set
+    # XLA_FLAGS=--xla_force_host_platform_device_count=2)
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --reduced \
+        --pipeline --microbatches 4 --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.configs.base import get_config, reduced
+from repro.core import codec as codec_lib
+from repro.core import split as split_lib
+from repro.data.pipeline import SyntheticTokenDataset, make_batch_iterator
+from repro.launch import mesh as mesh_lib
+from repro.models import lm as lm_lib
+from repro.optim import adamw, apply_updates, clip_by_global_norm
+
+
+def make_codec(kind: str, R: int, D: int, quant=None, unitary=False):
+    if kind == "none":
+        return None, None
+    codec = codec_lib.C3SLCodec(R=R, D=D, quant_bits=quant, unitary=unitary)
+    return codec, codec.init(jax.random.PRNGKey(7))
+
+
+def run_standard(args, cfg):
+    rng = jax.random.PRNGKey(args.seed)
+    params = lm_lib.init_lm_params(rng, cfg)
+    opt = adamw(args.lr)
+    opt_state = opt.init(params)
+    codec, codec_params = make_codec(args.codec, args.R, args.seq * cfg.d_model,
+                                     args.quant, args.unitary)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        def loss_fn(p):
+            return lm_lib.lm_loss(p, batch, cfg, codec=codec,
+                                  codec_params=codec_params)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, gn = clip_by_global_norm(grads, 1.0)
+        updates, opt_state2 = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state2, loss, gn
+
+    data = SyntheticTokenDataset(cfg.vocab_size, args.seq, seed=args.seed)
+    it = make_batch_iterator(data, args.batch)
+    t0 = time.time()
+    losses = []
+    tokens_per_step = args.batch * args.seq
+    # MFU denominator: this host's measured-equivalent peak (CPU has no
+    # published peak; report model-FLOPs throughput instead)
+    step_flops = 6.0 * cfg.active_param_count() * tokens_per_step
+    for step in range(args.steps):
+        batch = next(it)
+        if cfg.frontend:
+            batch["frontend"] = jnp.zeros(
+                (args.batch, cfg.frontend_seq, cfg.frontend_dim))
+        params, opt_state, loss, gn = step_fn(params, opt_state, batch)
+        losses.append(float(loss))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            tps = tokens_per_step * (step + 1) / dt
+            print(f"step {step:5d} loss {float(loss):.4f} gnorm {float(gn):.3f} "
+                  f"| {tps:,.0f} tok/s, {step_flops*(step+1)/dt/1e9:.1f} "
+                  f"GFLOP/s model-flops ({dt:.1f}s)", flush=True)
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps, {"params": params},
+                        {"arch": cfg.name, "loss": losses[-1]})
+    return losses
+
+
+def run_pipeline(args, cfg):
+    """2-stage pod pipeline with the compressed channel (repro.core.split)."""
+    n_dev = len(jax.devices())
+    assert n_dev >= 2 and n_dev % 2 == 0, \
+        "pipeline mode needs an even device count (set --xla_force_host_platform_device_count)"
+    mesh = mesh_lib.make_host_mesh(data=n_dev // 2, model=1, pod=2)
+
+    rng = jax.random.PRNGKey(args.seed)
+    full = lm_lib.init_lm_params(rng, cfg)
+    codec, codec_params = make_codec(
+        args.codec, args.R, (args.seq * cfg.d_model) // 1, args.quant, args.unitary)
+    if codec is None:
+        codec = codec_lib.IdentityCodec(D=args.seq * cfg.d_model)
+        codec_params = {}
+    # microbatch feature dim: (mb, S, d) flattened per sample
+    mb = args.batch // args.microbatches
+    import dataclasses
+    if isinstance(codec, codec_lib.C3SLCodec):
+        codec = dataclasses.replace(codec, R=min(codec.R, mb))
+
+    params = {
+        "embed": {"embed": full["embed"]},
+        "blocks": lm_lib.split_stack_for_pipeline(full["stack"]),
+        "head": {"final_norm": full["final_norm"], "head": full["head"]},
+        "codec": codec_params,
+    }
+    embed_fn, stage_fn, head_loss_fn = lm_lib.make_pipeline_fns(cfg)
+    loss_fn = split_lib.make_pod_pipeline_loss_fn(
+        lambda p, x: embed_fn(p, x), stage_fn,
+        lambda p, h, y: head_loss_fn(p, h, y), codec, mesh,
+        num_microbatches=args.microbatches)
+
+    opt = adamw(args.lr)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, gn = clip_by_global_norm(grads, 1.0)
+        updates, opt_state2 = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state2, loss, gn
+
+    data = SyntheticTokenDataset(cfg.vocab_size, args.seq, seed=args.seed)
+    it = make_batch_iterator(data, args.batch)
+    losses = []
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        for step in range(args.steps):
+            b = next(it)
+            batch = {"x": b["tokens"], "y": b["labels"]}
+            params, opt_state, loss, gn = step_fn(params, opt_state, batch)
+            losses.append(float(loss))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"[pipeline] step {step:5d} loss {float(loss):.4f} "
+                      f"({time.time()-t0:.1f}s)", flush=True)
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--codec", choices=["none", "c3sl"], default="none")
+    ap.add_argument("--R", type=int, default=4)
+    ap.add_argument("--quant", type=int, default=None)
+    ap.add_argument("--unitary", action="store_true")
+    ap.add_argument("--pipeline", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"(active {cfg.active_param_count()/1e6:.1f}M)")
+    if args.pipeline:
+        losses = run_pipeline(args, cfg)
+    else:
+        losses = run_standard(args, cfg)
+    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

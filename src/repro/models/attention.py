@@ -1,0 +1,308 @@
+"""Attention variants: GQA (+bias, sliding window), cross-attention, MLA.
+
+All functions are pure; params are plain dicts.  Shapes:
+    x (B, S, D); q heads H, kv heads KV, head dim hd.
+Decode functions take a KV cache and one new token (B, 1, D) at position
+`pos` (scalar int32), returning (y, new_cache).  Sliding-window caches are
+ring buffers of length `window`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(rng, d_model: int, num_heads: int, num_kv_heads: int, head_dim: int,
+             qkv_bias: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "w_q": dense_init(ks[0], d_model, num_heads * head_dim, dtype),
+        "w_k": dense_init(ks[1], d_model, num_kv_heads * head_dim, dtype),
+        "w_v": dense_init(ks[2], d_model, num_kv_heads * head_dim, dtype),
+        "w_o": dense_init(ks[3], num_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["b_q"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["b_k"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["b_v"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _qkv(p, x, num_heads, num_kv_heads, head_dim):
+    B, S, _ = x.shape
+    q = x @ p["w_q"] + p.get("b_q", 0.0)
+    k = x @ p["w_k"] + p.get("b_k", 0.0)
+    v = x @ p["w_v"] + p.get("b_v", 0.0)
+    return (q.reshape(B, S, num_heads, head_dim),
+            k.reshape(B, S, num_kv_heads, head_dim),
+            v.reshape(B, S, num_kv_heads, head_dim))
+
+
+def _sdpa(q, k, v, mask):
+    """q (B,Sq,H,hd), k (B,Sk,KV,hd), v (B,Sk,KV,hd_v) — hd_v may differ
+    (MLA).  mask broadcastable (B,1,Sq,Sk)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    hd_v = v.shape[-1]
+    groups = H // KV
+    qg = q.reshape(B, Sq, KV, groups, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    scores = jnp.where(mask[:, :, None, :, :] if mask.ndim == 4 else mask,
+                       scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H * hd_v)
+
+
+def causal_mask(Sq: int, Sk: int, window: int | None = None,
+                q0: int = 0, k0: int = 0):
+    """(1, 1, Sq, Sk) boolean for a (q, k) tile at absolute offsets (q0, k0)."""
+    qpos = q0 + jnp.arange(Sq)[:, None]
+    kpos = k0 + jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+# Above this sequence length, attention runs q-chunked with per-chunk remat
+# so the live score tensor is (B, H, q_chunk, kv_len) instead of (B, H, S, S).
+# (The TPU production path would be a Pallas flash kernel; this is the
+# HLO-level equivalent that bounds memory identically.)
+CHUNK_THRESHOLD = 2048
+Q_CHUNK = 1024
+
+
+def _sdpa_causal(q, k, v, window: int | None = None, q_chunk: int = Q_CHUNK):
+    """Causal SDPA, q-chunked above CHUNK_THRESHOLD.  Static chunk bounds:
+    chunk i attends kv[max(0, i*qc - window + 1) : (i+1)*qc)."""
+    S = q.shape[1]
+    if S <= CHUNK_THRESHOLD:
+        return _sdpa(q, k, v, causal_mask(S, S, window))
+    qc = min(q_chunk, S)
+    while S % qc:
+        qc -= 1
+
+    def one_chunk(q_i, k_i, v_i, mask):
+        return _sdpa(q_i, k_i, v_i, mask)
+
+    one_chunk = jax.checkpoint(one_chunk)
+    outs = []
+    for i in range(S // qc):
+        q0 = i * qc
+        kv_end = q0 + qc
+        kv_start = 0 if window is None else max(0, q0 - window + 1)
+        # align start down to the chunk grid (keeps slice sizes uniform-ish)
+        kv_start -= kv_start % qc
+        mask = causal_mask(qc, kv_end - kv_start, window, q0=q0, k0=kv_start)
+        outs.append(one_chunk(q[:, q0:kv_end], k[:, kv_start:kv_end],
+                              v[:, kv_start:kv_end], mask))
+    return jnp.concatenate(outs, axis=1)
+
+
+def apply_gqa(p, x, positions, *, num_heads, num_kv_heads, head_dim,
+              rotary_dim, rope_theta=10000.0, sliding_window=None):
+    B, S, D = x.shape
+    q, k, v = _qkv(p, x, num_heads, num_kv_heads, head_dim)
+    q = apply_rope(q, positions, rotary_dim, rope_theta)
+    k = apply_rope(k, positions, rotary_dim, rope_theta)
+    return _sdpa_causal(q, k, v, sliding_window) @ p["w_o"]
+
+
+def apply_cross_attention(p, x, memory, *, num_heads, num_kv_heads, head_dim):
+    """x (B,Sq,D) attends to memory (B,Sk,D); no mask, no rope."""
+    B, Sq, _ = x.shape
+    Sk = memory.shape[1]
+    q = (x @ p["w_q"] + p.get("b_q", 0.0)).reshape(B, Sq, num_heads, head_dim)
+    k = (memory @ p["w_k"] + p.get("b_k", 0.0)).reshape(B, Sk, num_kv_heads, head_dim)
+    v = (memory @ p["w_v"] + p.get("b_v", 0.0)).reshape(B, Sk, num_kv_heads, head_dim)
+    mask = jnp.ones((1, 1, Sq, Sk), bool)
+    return _sdpa(q, k, v, mask) @ p["w_o"]
+
+
+def init_gqa_cache(batch: int, length: int, num_kv_heads: int, head_dim: int,
+                   dtype=jnp.float32, quant: bool = False):
+    """KV cache.  quant=True stores int8 values + per-(pos, kv-head) scales
+    (2x less HBM than bf16; scales are folded into scores/probs at use so
+    the dequantized cache is never materialized)."""
+    shape = (batch, length, num_kv_heads, head_dim)
+    if quant:
+        sshape = (batch, length, num_kv_heads, 1)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _quantize_kv(x):
+    """x (B,1,KV,hd) -> (int8 values, (B,1,KV,1) scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _sdpa_quant(q, k_q, k_scale, v_q, v_scale, mask, compute_dtype):
+    """SDPA over an int8 cache: scales fold into scores/probs, so only the
+    int8 tensors stream from HBM."""
+    B, Sq, H, hd = q.shape
+    KV = k_q.shape[2]
+    groups = H // KV
+    qg = q.reshape(B, Sq, KV, groups, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k_q.astype(jnp.float32))
+    scores = scores * k_scale[:, :, :, 0].transpose(0, 2, 1)[:, :, None, None, :]
+    scores = scores * (hd ** -0.5)
+    scores = jnp.where(mask[:, :, None, :, :] if mask.ndim == 4 else mask,
+                       scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = probs * v_scale[:, :, :, 0].transpose(0, 2, 1)[:, :, None, None, :]
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_q.astype(jnp.float32))
+    return out.reshape(B, Sq, H * hd).astype(compute_dtype)
+
+
+def _per_row_update(cache_kv, new_kv, slots):
+    """Write new_kv (B,1,KV,hd) into cache (B,T,KV,hd) at per-row slots (B,)."""
+    return jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
+    )(cache_kv, new_kv, slots)
+
+
+def apply_gqa_decode(p, x, cache, pos, *, num_heads, num_kv_heads, head_dim,
+                     rotary_dim, rope_theta=10000.0, sliding_window=None):
+    """One-token decode. x (B,1,D); cache k/v (B,T,KV,hd) (T=window for SWA).
+
+    pos may be a scalar (lockstep batch) or (B,) int32 (continuous batching:
+    every slot at its own position).  Returns (y (B,1,D), new_cache).
+    """
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    q, k, v = _qkv(p, x, num_heads, num_kv_heads, head_dim)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos_b[:, None]
+    q = apply_rope(q, positions, rotary_dim, rope_theta)
+    k = apply_rope(k, positions, rotary_dim, rope_theta)
+    slots = pos_b % T if sliding_window is not None else pos_b
+    quant = "k_scale" in cache
+    if quant:
+        k_q, k_s = _quantize_kv(k)
+        v_q, v_s = _quantize_kv(v)
+        new_cache = {"k": _per_row_update(cache["k"], k_q, slots),
+                     "v": _per_row_update(cache["v"], v_q, slots),
+                     "k_scale": _per_row_update(cache["k_scale"], k_s, slots),
+                     "v_scale": _per_row_update(cache["v_scale"], v_s, slots)}
+    else:
+        new_cache = {"k": _per_row_update(cache["k"], k, slots),
+                     "v": _per_row_update(cache["v"], v, slots)}
+    idx = jnp.arange(T)[None, :]
+    if sliding_window is not None:
+        # ring buffer: valid entries are the last min(pos+1, T) writes
+        age = (slots[:, None] - idx) % T
+        valid = age < jnp.minimum(pos_b + 1, T)[:, None]
+    else:
+        valid = idx <= pos_b[:, None]
+    mask = valid[:, None, None, :]
+    if quant:
+        y = _sdpa_quant(q, new_cache["k"], new_cache["k_scale"],
+                        new_cache["v"], new_cache["v_scale"], mask,
+                        x.dtype) @ p["w_o"]
+    else:
+        y = _sdpa(q, new_cache["k"], new_cache["v"], mask) @ p["w_o"]
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(rng, d_model: int, num_heads: int, *, kv_lora_rank: int,
+             qk_nope_dim: int, qk_rope_dim: int, v_head_dim: int, dtype=jnp.float32):
+    ks = jax.random.split(rng, 6)
+    H = num_heads
+    return {
+        "w_q": dense_init(ks[0], d_model, H * (qk_nope_dim + qk_rope_dim), dtype),
+        "w_dkv": dense_init(ks[1], d_model, kv_lora_rank, dtype),
+        "kv_norm": jnp.ones((kv_lora_rank,), dtype),
+        "w_uk": dense_init(ks[2], kv_lora_rank, H * qk_nope_dim, dtype),
+        "w_uv": dense_init(ks[3], kv_lora_rank, H * v_head_dim, dtype),
+        "w_kpe": dense_init(ks[4], d_model, qk_rope_dim, dtype),
+        "w_o": dense_init(ks[5], H * v_head_dim, d_model, dtype),
+    }
+
+
+def _mla_qc(p, x, positions, *, num_heads, qk_nope_dim, qk_rope_dim, rope_theta):
+    from repro.models.layers import rms_norm
+    B, S, _ = x.shape
+    H = num_heads
+    q = (x @ p["w_q"]).reshape(B, S, H, qk_nope_dim + qk_rope_dim)
+    q_nope, q_rope = q[..., :qk_nope_dim], q[..., qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, qk_rope_dim, rope_theta)
+    c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"])                  # (B,S,L)
+    k_pe = apply_rope((x @ p["w_kpe"])[:, :, None, :], positions,
+                      qk_rope_dim, rope_theta)[:, :, 0, :]          # (B,S,rope)
+    return q_nope, q_rope, c_kv, k_pe
+
+
+def apply_mla(p, x, positions, *, num_heads, kv_lora_rank, qk_nope_dim,
+              qk_rope_dim, v_head_dim, rope_theta=10000.0, sliding_window=None):
+    B, S, _ = x.shape
+    H = num_heads
+    q_nope, q_rope, c_kv, k_pe = _mla_qc(
+        p, x, positions, num_heads=H, qk_nope_dim=qk_nope_dim,
+        qk_rope_dim=qk_rope_dim, rope_theta=rope_theta)
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, qk_nope_dim)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, H, v_head_dim)
+    # concat the rope component (k_pe shared across heads) so the fused
+    # q_cat . k_cat score equals the MLA score; reuses the chunked SDPA.
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, qk_rope_dim))],
+        axis=-1)
+    return _sdpa_causal(q_cat, k_cat, v, sliding_window) @ p["w_o"]
+
+
+def init_mla_cache(batch: int, length: int, kv_lora_rank: int, qk_rope_dim: int,
+                   dtype=jnp.float32):
+    """MLA's win: the cache stores the COMPRESSED c_kv + shared k_pe."""
+    return {"c_kv": jnp.zeros((batch, length, kv_lora_rank), dtype),
+            "k_pe": jnp.zeros((batch, length, qk_rope_dim), dtype)}
+
+
+def apply_mla_decode(p, x, cache, pos, *, num_heads, kv_lora_rank, qk_nope_dim,
+                     qk_rope_dim, v_head_dim, rope_theta=10000.0):
+    """Absorbed-matrices MLA decode: scores live in the kv_lora space.
+    pos: scalar or (B,) int32 (continuous batching)."""
+    B = x.shape[0]
+    H = num_heads
+    T = cache["c_kv"].shape[1]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    q_nope, q_rope, c_kv_new, k_pe_new = _mla_qc(
+        p, x, pos_b[:, None], num_heads=H,
+        qk_nope_dim=qk_nope_dim, qk_rope_dim=qk_rope_dim, rope_theta=rope_theta)
+    upd = jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(
+        c, n, s, axis=0))
+    c_kv = upd(cache["c_kv"], c_kv_new, pos_b)
+    k_pe = upd(cache["k_pe"], k_pe_new, pos_b)
+    # absorb W_uk into q: q_eff (B,H,L)
+    w_uk = p["w_uk"].reshape(kv_lora_rank, H, qk_nope_dim)
+    q_eff = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], w_uk)
+    scale = (qk_nope_dim + qk_rope_dim) ** -0.5
+    scores = (jnp.einsum("bhl,btl->bht", q_eff, c_kv)
+              + jnp.einsum("bhd,btd->bht", q_rope[:, 0], k_pe)).astype(jnp.float32)
+    scores = scores * scale
+    valid = jnp.arange(T)[None, None, :] <= pos_b[:, None, None]
+    probs = jax.nn.softmax(jnp.where(valid, scores, NEG_INF), axis=-1).astype(x.dtype)
+    o_c = jnp.einsum("bht,btl->bhl", probs, c_kv)                  # (B,H,L)
+    w_uv = p["w_uv"].reshape(kv_lora_rank, H, v_head_dim)
+    out = jnp.einsum("bhl,lhv->bhv", o_c, w_uv).reshape(B, 1, H * v_head_dim)
+    return out @ p["w_o"], {"c_kv": c_kv, "k_pe": k_pe}

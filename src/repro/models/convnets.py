@@ -1,0 +1,179 @@
+"""VGG-16 and ResNet-50 split models — the paper's experimental setup.
+
+Split points (C3-SL Sec. 4.1, confirmed by its Table 1 parameter counts):
+  * VGG-16 on CIFAR-10:  split at the 4th max-pool -> cut feature
+    (512, 2, 2), D = 2048  (paper: R*D params, R=2 -> 4.1e3  ✓)
+  * ResNet-50 on CIFAR-100: split at the output of the 3rd residual stage
+    (ImageNet-style stem) -> cut feature (1024, 2, 2), D = 4096
+    (paper: R=2 -> 8.2e3 ✓)
+
+BatchNorm runs in batch-stats mode (no running averages) — sufficient for
+the reproduction experiments and keeps the params pure.
+Layout NCHW throughout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding, dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def _bn(x, p):
+    mean = x.mean(axis=(0, 2, 3), keepdims=True)
+    var = x.var(axis=(0, 2, 3), keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + 1e-5)
+    return xn * p["scale"][None, :, None, None] + p["bias"][None, :, None, None]
+
+
+def _init_conv(rng, c_in, c_out, k):
+    fan = c_in * k * k
+    return jax.random.normal(rng, (c_out, c_in, k, k)) * (2.0 / fan) ** 0.5
+
+
+def _init_bn(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def max_pool(x, k=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 1, k, k), (1, 1, k, k), "VALID")
+
+
+# ---------------------------------------------------------------------------
+# VGG-16
+# ---------------------------------------------------------------------------
+
+VGG16_LAYOUT = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+                512, 512, 512, "M", 512, 512, 512, "M"]
+VGG_SPLIT_AFTER_POOL = 4  # paper: output of the 4th max-pool
+
+
+def init_vgg16(rng, n_classes: int = 10, in_ch: int = 3):
+    params = {"convs": [], "bns": []}
+    c = in_ch
+    for item in VGG16_LAYOUT:
+        if item == "M":
+            continue
+        rng, k = jax.random.split(rng)
+        params["convs"].append(_init_conv(k, c, item, 3))
+        params["bns"].append(_init_bn(item))
+        c = item
+    rng, k = jax.random.split(rng)
+    params["fc"] = {"w": jax.random.normal(k, (512, n_classes)) * 512 ** -0.5,
+                    "b": jnp.zeros((n_classes,))}
+    return params
+
+
+def _vgg_convs(params, x, start_pool: int, end_pool: int):
+    """Run VGG conv layers between max-pool counts [start_pool, end_pool)."""
+    ci = 0
+    pools = 0
+    for item in VGG16_LAYOUT:
+        if item == "M":
+            if start_pool <= pools < end_pool:
+                x = max_pool(x)
+            pools += 1
+            continue
+        if start_pool <= pools < end_pool:
+            x = jax.nn.relu(_bn(conv2d(x, params["convs"][ci]), params["bns"][ci]))
+        ci += 1
+    return x
+
+
+def vgg16_front(params, x):
+    """x (B,3,32,32) -> cut feature (B, 512, 2, 2)."""
+    return _vgg_convs(params, x, 0, VGG_SPLIT_AFTER_POOL)
+
+
+def vgg16_back(params, z):
+    x = _vgg_convs(params, z, VGG_SPLIT_AFTER_POOL, 5)
+    x = x.mean(axis=(2, 3))  # (B, 512)
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+VGG_CUT_SHAPE = (512, 2, 2)   # D = 2048
+
+
+# ---------------------------------------------------------------------------
+# ResNet-50
+# ---------------------------------------------------------------------------
+
+RESNET50_STAGES = (3, 4, 6, 3)
+RESNET50_WIDTHS = (64, 128, 256, 512)  # bottleneck mid-widths; out = 4x
+
+
+def _init_bottleneck(rng, c_in, width, stride):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "conv1": _init_conv(ks[0], c_in, width, 1), "bn1": _init_bn(width),
+        "conv2": _init_conv(ks[1], width, width, 3), "bn2": _init_bn(width),
+        "conv3": _init_conv(ks[2], width, width * 4, 1), "bn3": _init_bn(width * 4),
+    }
+    if stride != 1 or c_in != width * 4:
+        p["proj"] = _init_conv(ks[3], c_in, width * 4, 1)
+        p["bn_proj"] = _init_bn(width * 4)
+    return p
+
+
+def _apply_bottleneck(p, x, stride):
+    y = jax.nn.relu(_bn(conv2d(x, p["conv1"]), p["bn1"]))
+    y = jax.nn.relu(_bn(conv2d(y, p["conv2"], stride=stride), p["bn2"]))
+    y = _bn(conv2d(y, p["conv3"]), p["bn3"])
+    if "proj" in p:
+        x = _bn(conv2d(x, p["proj"], stride=stride), p["bn_proj"])
+    return jax.nn.relu(x + y)
+
+
+def init_resnet50(rng, n_classes: int = 100, in_ch: int = 3):
+    rng, k = jax.random.split(rng)
+    params = {"stem": _init_conv(k, in_ch, 64, 7), "bn_stem": _init_bn(64),
+              "stages": []}
+    c = 64
+    for si, (n_blocks, width) in enumerate(zip(RESNET50_STAGES, RESNET50_WIDTHS)):
+        blocks = []
+        for bi in range(n_blocks):
+            rng, k = jax.random.split(rng)
+            stride = 2 if (bi == 0 and si > 0) else 1
+            blocks.append(_init_bottleneck(k, c, width, stride))
+            c = width * 4
+        params["stages"].append(blocks)
+    rng, k = jax.random.split(rng)
+    params["fc"] = {"w": jax.random.normal(k, (2048, n_classes)) * 2048 ** -0.5,
+                    "b": jnp.zeros((n_classes,))}
+    return params
+
+
+def _resnet_stage(params, x, si):
+    for bi, bp in enumerate(params["stages"][si]):
+        stride = 2 if (bi == 0 and si > 0) else 1
+        x = _apply_bottleneck(bp, x, stride)
+    return x
+
+
+def resnet50_front(params, x):
+    """x (B,3,32,32) -> cut (B, 1024, 2, 2): stem + stages 1-3."""
+    x = jax.nn.relu(_bn(conv2d(x, params["stem"], stride=2), params["bn_stem"]))
+    x = max_pool(x)                 # 32 -> 16 -> 8
+    for si in range(3):
+        x = _resnet_stage(params, x, si)   # 8 -> 8 -> 4 -> 2
+    return x
+
+
+def resnet50_back(params, z):
+    x = _resnet_stage(params, z, 3)
+    x = x.mean(axis=(2, 3))
+    return x @ params["fc"]["w"] + params["fc"]["b"]
+
+
+RESNET_CUT_SHAPE = (1024, 2, 2)  # D = 4096
+
+
+# conv feature D values the paper's Table 1 analytics use
+VGG_D = 512 * 2 * 2        # 2048
+RESNET_D = 1024 * 2 * 2    # 4096

@@ -1,0 +1,112 @@
+"""Shared neural-net building blocks (pure functions, explicit params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Initializer = jax.nn.initializers.Initializer
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, d_in: int, d_out: int, dtype=jnp.float32):
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * d_in ** -0.5).astype(dtype)
+
+
+def embed_init(rng, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(rng, (vocab, d), jnp.float32) * d ** -0.5).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d_model: int, d_ff: int, gated: bool = True, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {"w_up": dense_init(k1, d_model, d_ff, dtype),
+         "w_down": dense_init(k2, d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(k3, d_model, d_ff, dtype)
+    return p
+
+
+def apply_mlp(p, x: jax.Array) -> jax.Array:
+    up = x @ p["w_up"]
+    if "w_gate" in p:
+        up = jax.nn.silu(x @ p["w_gate"]) * up
+    else:
+        up = jax.nn.gelu(up)
+    return up @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE (full / partial / GLM "2d" = partial-0.5)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(rotary_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, rotary_dim: int,
+               theta: float = 10000.0) -> jax.Array:
+    """x (..., S, H, hd); positions (..., S). Rotates the first rotary_dim dims."""
+    if rotary_dim == 0:
+        return x
+    dt = x.dtype
+    freqs = rope_frequencies(rotary_dim, theta)             # (rot/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    cos = jnp.cos(angles)[..., :, None, :]                  # (..., S, 1, rot/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x_rot, x_pass = x[..., :rotary_dim], x[..., rotary_dim:]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(dt), x_pass], axis=-1) if x_pass.shape[-1] \
+        else out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: jax.Array | None = None) -> jax.Array:
+    """logits (..., V), labels (...) int — mean CE over unmasked positions.
+
+    One-hot-einsum formulation (t5x-style): under a vocab-sharded head this
+    partitions cleanly (partial sums + small all-reduce) instead of the
+    all-gather a take_along_axis gather would force.
+    """
+    V = logits.shape[-1]
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted.astype(jnp.float32)), axis=-1))
+    onehot = jax.nn.one_hot(labels, V, dtype=logits.dtype)
+    picked = jnp.einsum("...v,...v->...", shifted, onehot,
+                        preferred_element_type=jnp.float32)
+    ll = picked - lse
+    if mask is None:
+        return -ll.mean()
+    mask = mask.astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

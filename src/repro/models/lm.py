@@ -1,0 +1,256 @@
+"""Top-level models: CausalLM (dense/moe/hybrid/ssm/vlm) and EncDecLM (audio).
+
+Pure-functional: `init_lm_params` builds the param pytree (usable under
+jax.eval_shape for allocation-free dry-runs), `lm_loss` / `decode_step` are
+the train/serve entry points the launchers jit.
+
+C3-SL integration (single-program mode): when a codec is supplied, the layer
+stack is split at the superblock midpoint; the cut activation (B, S, d) is
+flattened to (B, S*d) per-sample features and round-tripped through the
+codec — batch-wise grouping over B, exactly the paper's Algorithm 1 with
+D = S*d_model.  (The pod-pipeline mode in repro.core.split does the same
+across the pod mesh axis with the payload on the wire.)
+
+Modality frontends (vlm/audio) are stubs per the brief: batches carry
+precomputed patch/frame embeddings; a linear projector maps them to d_model.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import stack as stack_lib
+from repro.models.layers import embed_init, dense_init, softmax_cross_entropy
+from repro.models.stack import _apply_norm, _init_norm
+
+ENC_PATTERN = (("attn", "mlp"),)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_lm_params(rng, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(rng, 8)
+    p: dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "stack": stack_lib.init_stack(ks[1], cfg, dtype),
+        "final_norm": _init_norm(cfg, dtype),
+        "head": dense_init(ks[2], cfg.d_model, cfg.vocab_size, dtype),
+    }
+    if cfg.first_dense_layers:
+        p["first"] = stack_lib.init_superblock(ks[3], cfg, dtype, dense_mlp=True)
+    if cfg.frontend:
+        p["frontend_proj"] = dense_init(ks[4], cfg.frontend_dim, cfg.d_model, dtype)
+    if cfg.is_encdec:
+        import dataclasses
+        enc_cfg = dataclasses.replace(cfg, block_pattern=ENC_PATTERN,
+                                      num_layers=cfg.encoder_layers,
+                                      first_dense_layers=0)
+        p["encoder"] = {"stack": stack_lib.init_stack(ks[5], enc_cfg, dtype),
+                        "norm": _init_norm(cfg, dtype)}
+    return p
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct params — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda r: init_lm_params(r, cfg, dtype),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _encoder_cfg(cfg: ModelConfig):
+    import dataclasses
+    return dataclasses.replace(cfg, block_pattern=ENC_PATTERN,
+                               num_layers=cfg.encoder_layers, first_dense_layers=0)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    """Token (+frontend) embedding.  Returns (h (B,S,d), positions (B,S))."""
+    tokens = batch["tokens"]
+    h = params["embed"][tokens]
+    if cfg.frontend and not cfg.is_encdec:
+        # VLM: [patch embeddings ; text tokens], total length = frontend_seq + S_text
+        fe = batch["frontend"] @ params["frontend_proj"]
+        h = jnp.concatenate([fe.astype(h.dtype), h], axis=1)
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return h, positions
+
+
+def _run_encoder(params, cfg: ModelConfig, frontend_emb, remat=True):
+    enc_cfg = _encoder_cfg(cfg)
+    h = frontend_emb @ params["frontend_proj"]
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h, _ = stack_lib.apply_stack(params["encoder"]["stack"], enc_cfg, h, positions,
+                                 remat=remat)
+    return _apply_norm(cfg, params["encoder"]["norm"], h)
+
+
+def _split_stacked(stacked, n_front: int):
+    front = jax.tree.map(lambda a: a[:n_front], stacked)
+    back = jax.tree.map(lambda a: a[n_front:], stacked)
+    return front, back
+
+
+def lm_forward(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None,
+               sliding_window=None, remat=True, last_only=False):
+    """Returns (logits (B,S,V), aux_loss).  last_only=True slices the final
+    position BEFORE the head matmul (serving prefill: never materializes the
+    (B, S, V) logits)."""
+    sliding_window = sliding_window if sliding_window is not None else cfg.sliding_window
+    memory = None
+    if cfg.is_encdec:
+        memory = _run_encoder(params, cfg, batch["frontend"], remat=remat)
+    h, positions = _embed_inputs(params, cfg, batch)
+    aux = jnp.array(0.0, jnp.float32)
+    if cfg.first_dense_layers:
+        h, a = stack_lib.apply_superblock(params["first"], cfg, h, positions,
+                                          memory=memory, sliding_window=sliding_window)
+        aux = aux + a
+
+    run = functools.partial(stack_lib.apply_stack, cfg=cfg, positions=positions,
+                            memory=memory, sliding_window=sliding_window, remat=remat)
+    if codec is None:
+        h, a = run(params["stack"], h=h)
+        aux = aux + a
+    else:
+        n_cut = cfg.num_superblocks // 2
+        front, back = _split_stacked(params["stack"], n_cut)
+        h, a1 = run(front, h=h)
+        B, S, d = h.shape
+        Zf = h.reshape(B, S * d)
+        payload = codec.encode(codec_params, Zf)
+        h = codec.decode(codec_params, payload).reshape(B, S, d)
+        h, a2 = run(back, h=h)
+        aux = aux + a1 + a2
+
+    if last_only:
+        h = h[:, -1:, :]
+    h = _apply_norm(cfg, params["final_norm"], h)
+    logits = h @ params["head"]
+    return logits, aux
+
+
+def lm_loss(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None,
+            sliding_window=None, remat=True):
+    """Mean next-token CE (+ MoE aux).  labels == -1 are masked (vlm pads
+    frontend positions)."""
+    logits, aux = lm_forward(params, batch, cfg, codec=codec,
+                             codec_params=codec_params,
+                             sliding_window=sliding_window, remat=remat)
+    labels = batch["labels"]
+    if cfg.frontend and not cfg.is_encdec:
+        pad = jnp.full((labels.shape[0], cfg.frontend_seq), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    mask = labels >= 0
+    ce = softmax_cross_entropy(logits, jnp.maximum(labels, 0), mask)
+    return ce + cfg.aux_loss_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving (one-token decode with cache)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(params, cfg: ModelConfig, batch: int, length: int,
+                      dtype=jnp.float32, frontend_emb=None):
+    cache: dict[str, Any] = {
+        "stack": stack_lib.init_stack_cache(cfg, batch, length, dtype)}
+    if cfg.first_dense_layers:
+        cache["first"] = stack_lib.init_superblock_cache(cfg, batch, length, dtype)
+    if cfg.is_encdec:
+        assert frontend_emb is not None
+        cache["memory"] = _run_encoder(params, cfg, frontend_emb, remat=False)
+    return cache
+
+
+def abstract_decode_cache(cfg: ModelConfig, batch: int, length: int,
+                          dtype=jnp.float32):
+    """Cache ShapeDtypeStructs without touching params (dry-run path)."""
+    cache: dict[str, Any] = {
+        "stack": jax.eval_shape(
+            lambda: stack_lib.init_stack_cache(cfg, batch, length, dtype))}
+    if cfg.first_dense_layers:
+        cache["first"] = jax.eval_shape(
+            lambda: stack_lib.init_superblock_cache(cfg, batch, length, dtype))
+    if cfg.is_encdec:
+        cache["memory"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_seq, cfg.d_model), dtype)
+    return cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
+                codec=None, codec_params=None):
+    """tokens (B, 1) int32; pos scalar int32.  Returns (logits (B,1,V), cache').
+
+    With a codec, the cut-layer feature (B, d_model) is compressed batch-wise
+    across the decode batch — the serving-path C3-SL integration.
+    """
+    h = params["embed"][tokens]
+    memory = cache.get("memory")
+    new_cache = dict(cache)
+    if cfg.first_dense_layers:
+        h, new_cache["first"] = stack_lib.apply_superblock_decode(
+            params["first"], cache["first"], cfg, h, pos, memory=memory)
+
+    if codec is None:
+        h, new_cache["stack"] = stack_lib.apply_stack_decode(
+            params["stack"], cache["stack"], cfg, h, pos, memory=memory)
+    else:
+        n_cut = cfg.num_superblocks // 2
+        p_front, p_back = _split_stacked(params["stack"], n_cut)
+        c_front, c_back = _split_stacked(cache["stack"], n_cut)
+        h, nc_front = stack_lib.apply_stack_decode(p_front, c_front, cfg, h, pos,
+                                                   memory=memory)
+        B, _, d = h.shape
+        payload = codec.encode(codec_params, h.reshape(B, d))
+        h = codec.decode(codec_params, payload).reshape(B, 1, d)
+        h, nc_back = stack_lib.apply_stack_decode(p_back, c_back, cfg, h, pos,
+                                                  memory=memory)
+        new_cache["stack"] = jax.tree.map(
+            lambda f, b: jnp.concatenate([f, b], axis=0), nc_front, nc_back)
+
+    h = _apply_norm(cfg, params["final_norm"], h)
+    return h @ params["head"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# pod-pipeline adapter (repro.core.split.make_pod_pipeline_loss_fn callables)
+# ---------------------------------------------------------------------------
+
+def make_pipeline_fns(cfg: ModelConfig):
+    """(embed_fn, stage_fn, head_loss_fn) for the 2-stage pod pipeline.
+
+    `params["blocks"]` must be the stacked superblocks reshaped to a leading
+    stage axis of 2: tree.map(lambda a: a.reshape(2, N//2, *a.shape[1:])).
+    """
+
+    def embed_fn(embed_p, x_mb):
+        h = embed_p["embed"][x_mb]
+        return h
+
+    def stage_fn(blocks_local, h):
+        B, S = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        h, _ = stack_lib.apply_stack(blocks_local, cfg, h, positions, remat=True)
+        return h
+
+    def head_loss_fn(head_p, h, y_mb):
+        h = _apply_norm(cfg, head_p["final_norm"], h)
+        logits = h @ head_p["head"]
+        return softmax_cross_entropy(logits, jnp.maximum(y_mb, 0), y_mb >= 0)
+
+    return embed_fn, stage_fn, head_loss_fn
+
+
+def split_stack_for_pipeline(stacked, n_stages: int = 2):
+    return jax.tree.map(
+        lambda a: a.reshape(n_stages, a.shape[0] // n_stages, *a.shape[1:]), stacked)

@@ -1,0 +1,124 @@
+"""Mamba (S6) selective state-space block.
+
+Train/prefill path: chunked associative scan (jax.lax.associative_scan inside
+a remat'd lax.scan over chunks) so peak memory is O(B * chunk * d_inner *
+d_state) instead of O(B * S * ...).  Decode path: O(1) recurrent state
+{h (B, d_inner, d_state), conv (B, d_conv-1, d_inner)}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_mamba(rng, d_model: int, d_inner: int, *, d_state: int = 16,
+               d_conv: int = 4, dt_rank: int | None = None, dtype=jnp.float32):
+    dt_rank = dt_rank or max(d_model // 16, 1)
+    ks = jax.random.split(rng, 6)
+    return {
+        "w_in": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner)) * d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_x": dense_init(ks[2], d_inner, dt_rank + 2 * d_state, dtype),
+        "w_dt": dense_init(ks[3], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.zeros((d_inner,), dtype),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                                          (d_inner, d_state))).astype(dtype),
+        "D": jnp.ones((d_inner,), dtype),
+        "w_out": dense_init(ks[4], d_inner, d_model, dtype),
+    }
+
+
+def _ssm_inputs(p, x_conv, *, d_state: int):
+    """x_conv (B, S, di) -> dt, Bmat, Cmat, A."""
+    dt_rank = p["w_dt"].shape[0]
+    proj = x_conv @ p["w_x"]
+    dt_low = proj[..., :dt_rank]
+    Bmat = proj[..., dt_rank:dt_rank + d_state]
+    Cmat = proj[..., dt_rank + d_state:]
+    dt = jax.nn.softplus(dt_low @ p["w_dt"] + p["dt_bias"])    # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (di,ds)
+    return dt, Bmat, Cmat, A
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B,S,di), w (K,di)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def apply_mamba(p, x: jax.Array, *, d_state: int = 16, chunk: int = 256) -> jax.Array:
+    """x (B, S, d_model) -> (B, S, d_model), causal."""
+    B, S, _ = x.shape
+    di = p["w_in"].shape[-1] // 2
+    xz = x @ p["w_in"]
+    x_in, z = xz[..., :di], xz[..., di:]
+    x_conv = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    dt, Bmat, Cmat, A = _ssm_inputs(p, x_conv, d_state=d_state)
+
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    n_chunks = S // chunk
+
+    def chunk_body(h0, inputs):
+        # discretize INSIDE the (remat'd) chunk so the f32 (B,chunk,di,ds)
+        # tensors never exist for the full sequence at once
+        dt_c, B_c, C_c, x_c = inputs                                          # (B,chunk,.)
+        dA_c = jnp.exp(dt_c[..., None].astype(jnp.float32) * A)              # (B,chunk,di,ds)
+        dBx_c = (dt_c * x_c)[..., None].astype(jnp.float32) \
+            * B_c[:, :, None, :].astype(jnp.float32)
+
+        def combine(a, b):
+            (a1, b1), (a2, b2) = a, b
+            return a1 * a2, b1 * a2 + b2
+
+        cumA, s = jax.lax.associative_scan(combine, (dA_c, dBx_c), axis=1)
+        h_all = s + cumA * h0[:, None]                                        # (B,chunk,di,ds)
+        y_c = jnp.einsum("bcds,bcs->bcd", h_all, C_c.astype(jnp.float32))
+        # stack the per-chunk outputs at model precision: the f32 ys would
+        # otherwise dominate prefill memory (jamba: 7 mamba layers/superblock)
+        return h_all[:, -1], y_c.astype(dt_c.dtype)
+
+    def reshape_c(t):
+        return t.reshape(B, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    h0 = jnp.zeros((B, di, d_state), jnp.float32)
+    _, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0,
+                         (reshape_c(dt), reshape_c(Bmat), reshape_c(Cmat),
+                          reshape_c(x_conv)))
+    y = ys.swapaxes(0, 1).reshape(B, S, di).astype(x.dtype)
+    y = y + p["D"] * x_conv
+    return (y * jax.nn.silu(z)) @ p["w_out"]
+
+
+def init_mamba_state(batch: int, d_inner: int, *, d_state: int = 16,
+                     d_conv: int = 4, dtype=jnp.float32):
+    return {"h": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+            "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype)}
+
+
+def apply_mamba_decode(p, x, state, *, d_state: int = 16):
+    """One-token step. x (B, 1, d_model) -> (y (B,1,d_model), new_state)."""
+    B = x.shape[0]
+    di = p["w_in"].shape[-1] // 2
+    K = p["conv_w"].shape[0]
+    xz = x[:, 0] @ p["w_in"]
+    x_in, z = xz[..., :di], xz[..., di:]
+    window = jnp.concatenate([state["conv"], x_in[:, None, :]], axis=1)       # (B,K,di)
+    x_conv = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"])
+    dt, Bmat, Cmat, A = _ssm_inputs(p, x_conv[:, None, :], d_state=d_state)
+    dt, Bmat, Cmat = dt[:, 0], Bmat[:, 0], Cmat[:, 0]
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A)                       # (B,di,ds)
+    dBx = (dt * x_conv)[..., None].astype(jnp.float32) * Bmat[:, None, :].astype(jnp.float32)
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("bds,bs->bd", h, Cmat.astype(jnp.float32)).astype(x.dtype)
+    y = y + p["D"] * x_conv
+    out = (y * jax.nn.silu(z)) @ p["w_out"]
+    return out[:, None, :], {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,82 @@
+"""Mixture-of-Experts layer: top-k router with capacity, scatter dispatch.
+
+Production layout: expert params carry a leading E axis that the sharding
+rules place on the "model" mesh axis (expert parallelism); the dispatch
+scatter/gather then lowers to all-to-all under GSPMD.
+
+Dispatch is the Switch/GShard capacity scheme: tokens beyond
+capacity = ceil(top_k * N / E * capacity_factor) are dropped (their residual
+passes through).  FLOPs are therefore proportional to *active* experts,
+which keeps the roofline's MODEL_FLOPS/HLO_FLOPs ratio honest.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_mlp, dense_init, init_mlp
+
+
+def init_moe(rng, d_model: int, d_ff: int, num_experts: int, *,
+             num_shared_experts: int = 0, dtype=jnp.float32):
+    ks = jax.random.split(rng, 5)
+    E = num_experts
+    scale_in = d_model ** -0.5
+    scale_ff = d_ff ** -0.5
+    p = {
+        "router": dense_init(ks[0], d_model, E, dtype),
+        "w_gate": (jax.random.normal(ks[1], (E, d_model, d_ff)) * scale_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d_model, d_ff)) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, d_ff, d_model)) * scale_ff).astype(dtype),
+    }
+    if num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d_model, d_ff * num_shared_experts, dtype=dtype)
+    return p
+
+
+def apply_moe(p, x: jax.Array, *, top_k: int, capacity_factor: float = 1.25):
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E = p["router"].shape[-1]
+    N = B * S
+    xf = x.reshape(N, d)
+
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)      # (N, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- capacity dispatch -------------------------------------------------
+    cap = max(int(top_k * N * capacity_factor / E), 1)
+    e_flat = expert_idx.reshape(-1)                          # (N*k,)
+    oh = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)          # (N*k, E)
+    pos = (jnp.cumsum(oh, axis=0) - 1)                       # running count per expert
+    pos_in_e = jnp.take_along_axis(pos, e_flat[:, None], axis=1)[:, 0]
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, e_flat * cap + pos_in_e, E * cap)  # overflow slot
+
+    src = jnp.repeat(xf, top_k, axis=0)                      # (N*k, d) token copies
+    dispatched = jnp.zeros((E * cap + 1, d), xf.dtype).at[dest].add(src)
+    dispatched = dispatched[:-1].reshape(E, cap, d)
+
+    # ---- expert FFN (batched over E; E axis is expert-parallel) ------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", dispatched, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", dispatched, p["w_up"])
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"])       # (E, cap, d)
+
+    # ---- combine ------------------------------------------------------------
+    out_flat = jnp.concatenate([out_e.reshape(E * cap, d),
+                                jnp.zeros((1, d), xf.dtype)], axis=0)
+    gathered = out_flat[dest]                                # (N*k, d)
+    w = (gate_vals.reshape(-1) * keep).astype(xf.dtype)
+    y = (gathered * w[:, None]).reshape(N, top_k, d).sum(axis=1)
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], xf)
+
+    # ---- Switch-style load-balance auxiliary loss ---------------------------
+    frac_tokens = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    frac_probs = probs.mean(axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    return y.reshape(B, S, d), aux

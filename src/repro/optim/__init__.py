@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adam, adamw, sgd_momentum, apply_updates,
+                                    clip_by_global_norm, global_norm,
+                                    warmup_cosine)

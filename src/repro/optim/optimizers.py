@@ -1,0 +1,105 @@
+"""Pure-pytree optimizers (no optax in this environment).
+
+API mirrors optax: opt = adamw(lr); state = opt.init(params);
+updates, state = opt.update(grads, state, params); params = apply_updates(...).
+
+Optimizer states have the same tree structure (and per-leaf shapes) as the
+params, so the sharding rules that place params also place m/v — with the
+ZeRO-1 extension over the data axis applied by repro.sharding.rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), gn
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        lr_t = lr(count) if callable(lr) else lr
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr_t * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if weight_decay:
+            updates = jax.tree.map(upd, m, v, params)
+        else:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), m, v)
+        return updates, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay=0.0)
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay)
+
+
+def sgd_momentum(lr, momentum=0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        lr_t = lr(count) if callable(lr) else lr
+        mu = jax.tree.map(lambda mu, g: momentum * mu + g.astype(jnp.float32),
+                          state["mu"], grads)
+        updates = jax.tree.map(lambda mu: -lr_t * mu, mu)
+        return updates, {"mu": mu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    def schedule(count):
+        count = count.astype(jnp.float32)
+        warm = count / max(warmup_steps, 1)
+        frac = jnp.clip((count - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return peak_lr * jnp.where(count < warmup_steps, warm, cos)
+    return schedule

@@ -1,0 +1,144 @@
+"""Continuous-batching serving engine (vLLM-lite, pure JAX).
+
+Fixed pool of `num_slots` decode slots sharing one stacked KV cache; every
+slot advances at its OWN position (decode_step takes a (B,) position
+vector).  When a sequence finishes (EOS or max_new_tokens), its slot is
+recycled for the next queued request mid-flight — no draining the batch.
+
+Prompt ingestion is token-by-token through the decode path ("prefill as
+decode"), which keeps one compiled program for everything; a chunked
+prefill program is the obvious follow-up optimization and is sketched in
+EXPERIMENTS.md.  The C3-SL codec applies to each step's cut-layer features
+across the active slots, exactly as in repro.launch.serve.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm as lm_lib
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list            # token ids
+    max_new_tokens: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request | None = None
+    pos: int = 0             # next cache position to write
+    in_prompt: int = 0       # tokens of the prompt already ingested
+
+
+class BatchedEngine:
+    def __init__(self, params, cfg: ModelConfig, *, num_slots: int = 8,
+                 max_len: int = 256, eos_id: int | None = None,
+                 codec=None, codec_params=None, greedy: bool = True,
+                 seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.rng = jax.random.PRNGKey(seed)
+        self.cache = lm_lib.init_decode_cache(params, cfg, num_slots, max_len)
+        self.slots = [_Slot() for _ in range(num_slots)]
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self._tokens_decoded = 0
+
+        def step_fn(params, cache, tokens, pos, key):
+            logits, cache = lm_lib.decode_step(params, cache, tokens, pos, cfg,
+                                               codec=codec,
+                                               codec_params=codec_params)
+            nxt_greedy = jnp.argmax(logits[:, -1], axis=-1)
+            nxt_sample = jax.random.categorical(key, logits[:, -1], axis=-1)
+            return (nxt_greedy if greedy else nxt_sample).astype(jnp.int32), cache
+
+        self._step = jax.jit(step_fn)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _reset_slot_cache(self, idx: int):
+        """Zero one slot's cache row so a recycled slot starts clean."""
+        def zero_row(leaf):
+            if leaf.ndim >= 2 and leaf.shape[1] == self.num_slots:
+                return leaf.at[:, idx].set(0)   # stacked (N, B, ...)
+            if leaf.ndim >= 1 and leaf.shape[0] == self.num_slots:
+                return leaf.at[idx].set(0)      # unstacked (B, ...)
+            return leaf
+        self.cache = jax.tree.map(zero_row, self.cache)
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot.req is None and self.queue:
+                slot.req = self.queue.popleft()
+                slot.pos = 0
+                slot.in_prompt = 0
+                self._reset_slot_cache(i)
+
+    @property
+    def active(self) -> int:
+        return sum(s.req is not None for s in self.slots)
+
+    def step(self):
+        """One engine step: every active slot ingests/decodes one token."""
+        self._admit()
+        if self.active == 0:
+            return False
+        tokens = np.zeros((self.num_slots, 1), np.int32)
+        pos = np.zeros((self.num_slots,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                continue
+            if s.in_prompt < len(s.req.prompt):
+                tokens[i, 0] = s.req.prompt[s.in_prompt]
+            else:
+                tokens[i, 0] = s.req.out[-1]
+            pos[i] = s.pos
+        self.rng, key = jax.random.split(self.rng)
+        nxt, self.cache = self._step(self.params, self.cache,
+                                     jnp.asarray(tokens), jnp.asarray(pos), key)
+        nxt = np.asarray(nxt)
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                continue
+            s.pos += 1
+            fed_prompt = s.in_prompt < len(s.req.prompt)
+            if fed_prompt:
+                s.in_prompt += 1
+            # the prediction counts once the WHOLE prompt is in: the last
+            # prompt token's logits give the first generated token
+            if not fed_prompt or s.in_prompt == len(s.req.prompt):
+                tok = int(nxt[i])
+                s.req.out.append(tok)
+                self._tokens_decoded += 1
+                if (self.eos_id is not None and tok == self.eos_id) \
+                        or len(s.req.out) >= s.req.max_new_tokens \
+                        or s.pos >= self.max_len:
+                    s.req.done = True
+            if s.req.done:
+                self.finished.append(s.req)
+                s.req = None
+        return True
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

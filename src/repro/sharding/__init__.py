@@ -1,0 +1,2 @@
+from repro.sharding.rules import (batch_spec, cache_shardings, param_shardings,
+                                  opt_state_shardings, spec_for_param)

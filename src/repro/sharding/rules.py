@@ -1,0 +1,211 @@
+"""Divisibility-safe partition rules for every param/cache/batch tensor.
+
+Name-based rules produce a PartitionSpec for the *trailing* dims of each
+leaf; leading stack axes (superblocks, pipeline stages) are padded with
+None.  Every axis assignment is guarded: if the dim is not divisible by the
+mesh axis size, it falls back to replication — so every (arch x shape x
+mesh) combination lowers instead of erroring (the rule engine's contract
+with the dry-run).
+
+Modes:
+  train  — params: tensor-parallel over "model"; optimizer state
+           additionally ZeRO-1-sharded over "data" on the largest
+           still-replicated dim.
+  decode — params fully sharded (model rules + "data" on another dim,
+           FSDP-style); caches: batch over "data", long axes over "model".
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _dims(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _guard(spec: P, shape, mesh) -> P:
+    """Replicate any spec entry whose dim is not divisible by its axes."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, entries):
+        if ax is None:
+            out.append(None)
+        elif dim % _dims(mesh, ax) == 0 and dim >= _dims(mesh, ax):
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# rule: (path regex, trailing spec) — first match wins.  The spec applies to
+# the LAST len(spec) dims of the leaf.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # --- embeddings / head -------------------------------------------------
+    (r"/embed$",               ("model", None)),
+    (r"/head$",                (None, "model")),
+    (r"frontend_proj$",        (None, "model")),
+    # --- MoE (expert parallelism over the E axis) ---------------------------
+    (r"/router$",              (None, None)),
+    (r"moe/w_(gate|up|down)$", ("model", None, None)),
+    (r"moe/shared/w_(gate|up)$", (None, "model")),
+    (r"moe/shared/w_down$",    ("model", None)),
+    # --- MLA ----------------------------------------------------------------
+    (r"mla/w_q$",              (None, "model")),
+    (r"mla/w_dkv$",            (None, None)),
+    (r"mla/w_uk$",             (None, "model")),
+    (r"mla/w_uv$",             (None, "model")),
+    (r"mla/w_kpe$",            (None, None)),
+    (r"mla/w_o$",              ("model", None)),
+    # --- RWKV ----------------------------------------------------------------
+    (r"rwkv_tm/w_(r|k|v|g)$",  (None, "model")),
+    (r"rwkv_tm/w_o$",          ("model", None)),
+    (r"rwkv_tm/w_dec_a$",      (None, None)),
+    (r"rwkv_tm/w_dec_b$",      (None, "model")),
+    (r"rwkv_tm/(w0|ln_scale)$", ("model",)),
+    (r"rwkv_tm/u$",            ("model", None)),
+    (r"rwkv_cm/w_k$",          (None, "model")),
+    (r"rwkv_cm/w_v$",          ("model", None)),
+    (r"rwkv_cm/w_r$",          (None, "model")),
+    # --- Mamba ----------------------------------------------------------------
+    (r"mamba/w_in$",           (None, "model")),
+    (r"mamba/conv_w$",         (None, "model")),
+    (r"mamba/conv_b$",         ("model",)),
+    (r"mamba/w_x$",            ("model", None)),
+    (r"mamba/w_dt$",           (None, "model")),
+    (r"mamba/dt_bias$",        ("model",)),
+    (r"mamba/A_log$",          ("model", None)),
+    (r"mamba/D$",              ("model",)),
+    (r"mamba/w_out$",          ("model", None)),
+    # --- attention (GQA + cross) ----------------------------------------------
+    (r"/w_q$",                 (None, "model")),
+    (r"/w_k$",                 (None, "model")),
+    (r"/w_v$",                 (None, "model")),
+    (r"/w_o$",                 ("model", None)),
+    (r"/b_(q|k|v)$",           ("model",)),
+    # --- MLPs -------------------------------------------------------------------
+    (r"/w_(gate|up)$",         (None, "model")),
+    (r"/w_down$",              ("model", None)),
+    # --- norms, biases, scalars, codec keys, convnets: replicate ---------------
+    (r".*",                    ()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/" + "/".join(parts)
+
+
+def spec_for_param(path_str: str, shape, mesh) -> P:
+    for pat, trailing in _PARAM_RULES:
+        if re.search(pat, path_str):
+            pad = (None,) * (len(shape) - len(trailing))
+            return _guard(P(*(pad + tuple(trailing))), shape, mesh)
+    return P()
+
+
+def _extend_over(spec: P, shape, mesh, axis: str, min_size: int = 1) -> P:
+    """Shard the largest still-replicated dim over `axis` (ZeRO/FSDP)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    ax_size = _dims(mesh, axis)
+    best, best_dim = -1, -1
+    for i, (dim, e) in enumerate(zip(shape, entries)):
+        if e is None and dim % ax_size == 0 and dim >= max(ax_size, min_size) \
+                and dim > best_dim:
+            best, best_dim = i, dim
+    if best >= 0:
+        entries[best] = axis
+    return P(*entries)
+
+
+def param_shardings(params, mesh, mode: str = "train"):
+    """NamedShardings for a param pytree."""
+    data_axis = "data"
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        spec = spec_for_param(ps, leaf.shape, mesh)
+        # fully shard big tensors over data too (FSDP/ZeRO-3-style: XLA
+        # all-gathers per layer inside the scan).  Without this, a 123B
+        # model's bf16 params alone (246GB/16 model shards) overflow HBM.
+        spec = _extend_over(spec, leaf.shape, mesh, data_axis, min_size=1024)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_shardings(opt_state, mesh):
+    """m/v mirror the param specs + ZeRO-1 over data; scalars replicated."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = spec_for_param(ps, leaf.shape, mesh)
+        spec = _extend_over(spec, leaf.shape, mesh, "data", min_size=1024)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, opt_state)
+
+
+def batch_spec(mesh, multi_pod_data: bool = True) -> P:
+    """Batch-dim sharding: over (pod, data) when the mesh has a pod axis."""
+    axes = tuple(mesh.axis_names)
+    if "pod" in axes and multi_pod_data:
+        return P(("pod", "data"))
+    return P("data")
+
+
+def batch_shardings(batch, mesh, multi_pod_data: bool = True):
+    bspec = batch_spec(mesh, multi_pod_data)
+
+    def one(leaf):
+        spec = _guard(P(*(tuple(bspec) + (None,) * (len(leaf.shape) - 1))),
+                      leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+# --- decode caches -----------------------------------------------------------
+
+_CACHE_RULES: list[tuple[str, tuple]] = [
+    # attn KV cache (N, B, T, KV, hd): batch over data, time over model
+    (r"/(k|v)$",       ("data", "model", None, None)),
+    (r"/(k|v)_scale$", ("data", "model", None, None)),
+    # MLA compressed cache (N, B, T, L)
+    (r"/c_kv$",        ("data", "model", None)),
+    (r"/k_pe$",        ("data", "model", None)),
+    # mamba state (N, B, di, ds) / conv (N, B, K-1, di)
+    (r"/h$",           ("data", "model", None)),
+    (r"/conv$",        ("data", None, "model")),
+    # rwkv (N, B, H, hd, hd) / (N, B, d)
+    (r"/wkv$",         ("data", "model", None, None)),
+    (r"/x_prev$",      ("data", "model")),
+    # encoder memory (B, S, d)
+    (r"/memory$",      ("data", None, "model")),
+    (r".*",            ()),
+]
+
+
+def cache_shardings(cache, mesh):
+    def one(path, leaf):
+        ps = _path_str(path)
+        for pat, trailing in _CACHE_RULES:
+            if re.search(pat, ps):
+                pad = (None,) * (len(leaf.shape) - len(trailing))
+                spec = _guard(P(*(pad + tuple(trailing))), leaf.shape, mesh)
+                return NamedSharding(mesh, spec)
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,136 @@
+"""Codec round-trip, accounting, and split-step integration tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codec as codec_lib
+from repro.core import split as split_lib
+from repro.core.bottlenet import BottleNetPPCodec
+
+
+def test_identity_codec_roundtrip():
+    c = codec_lib.IdentityCodec(D=64)
+    Z = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+    p = c.init(jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(c.decode(p, c.encode(p, Z))), np.asarray(Z))
+    assert c.wire_bytes(8) == 8 * 64 * 4
+
+
+@pytest.mark.parametrize("R", [2, 4, 8])
+@pytest.mark.parametrize("backend", ["fft", "pallas"])
+def test_c3sl_codec_shapes_and_bytes(R, backend):
+    B, D = 16, 256
+    c = codec_lib.C3SLCodec(R=R, D=D, backend=backend)
+    p = c.init(jax.random.PRNGKey(0))
+    Z = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+    S = c.encode(p, Z)
+    assert S.shape == (B // R, D)
+    Zhat = c.decode(p, S)
+    assert Zhat.shape == (B, D)
+    assert c.wire_bytes(B) == (B // R) * D * 4
+    assert c.param_count() == R * D
+    assert c.flops(B) == 2 * B * D * D
+
+
+def test_c3sl_backends_agree():
+    B, D, R = 8, 256, 4
+    Z = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+    outs = {}
+    for backend in ("fft", "direct", "pallas"):
+        c = codec_lib.C3SLCodec(R=R, D=D, backend=backend)
+        p = c.init(jax.random.PRNGKey(0))
+        outs[backend] = np.asarray(c.decode(p, c.encode(p, Z)))
+    np.testing.assert_allclose(outs["fft"], outs["direct"], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(outs["fft"], outs["pallas"], rtol=1e-3, atol=1e-3)
+
+
+def test_c3sl_int8_wire():
+    c = codec_lib.C3SLCodec(R=4, D=256, quant_bits=8)
+    p = c.init(jax.random.PRNGKey(0))
+    Z = jax.random.normal(jax.random.PRNGKey(1), (8, 256))
+    Zhat = c.decode(p, c.encode(p, Z))
+    assert Zhat.shape == Z.shape
+    assert c.wire_bytes(8) == 2 * 256 * 1 + 4 * 2  # int8 payload + f32 scales
+    # STE gradient flows
+    g = jax.grad(lambda z: (c.decode(p, c.encode(p, z)) ** 2).sum())(Z)
+    assert np.isfinite(np.asarray(g)).all() and np.abs(np.asarray(g)).sum() > 0
+
+
+def test_dense_bottleneck_codec():
+    c = codec_lib.DenseBottleneckCodec(R=4, D=128)
+    p = c.init(jax.random.PRNGKey(0))
+    Z = jax.random.normal(jax.random.PRNGKey(1), (8, 128))
+    S = c.encode(p, Z)
+    assert S.shape == (8, 32)
+    assert c.decode(p, S).shape == (8, 128)
+    assert c.param_count() == (128 + 1) * 32 + (32 + 1) * 128
+
+
+@pytest.mark.parametrize("R", [2, 4, 8, 16])
+def test_bottlenetpp_codec_roundtrip_and_formulas(R):
+    B, C, H, W = 4, 64, 8, 8
+    c = BottleNetPPCodec(R=R, C=C, H=H, W=W)
+    p = c.init(jax.random.PRNGKey(0))
+    Z = jax.random.normal(jax.random.PRNGKey(1), (B, C, H, W))
+    S = c.encode(p, Z)
+    assert S.shape == (B, 4 * C // R, H // 2, W // 2)
+    Zhat = c.decode(p, S)
+    assert Zhat.shape == Z.shape
+    # Table 2 formulas
+    k = 2
+    want_params = (C * k * k + 1) * (4 * C // R) + ((4 * C // R) * k * k + 1) * C
+    assert c.param_count() == want_params
+
+
+def test_split_loss_trains_through_codec():
+    """End-to-end: tiny front/back MLP + C3-SL codec; loss decreases."""
+    D_in, D_cut, n_cls = 16, 64, 4
+    rng = jax.random.PRNGKey(0)
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    params = {
+        "front": {"w": jax.random.normal(k1, (D_in, D_cut)) * D_in ** -0.5},
+        "back": {"w": jax.random.normal(k2, (D_cut, n_cls)) * D_cut ** -0.5},
+        "codec": codec_lib.C3SLCodec(R=4, D=D_cut).init(k3),
+    }
+    codec = codec_lib.C3SLCodec(R=4, D=D_cut)
+
+    def front(p, x):
+        return jax.nn.relu(x @ p["w"])
+
+    def back(p, z):
+        return z @ p["w"]
+
+    def ce(logits, y):
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]), y])
+
+    loss_fn = split_lib.make_split_loss_fn(front, back, codec, ce)
+
+    x = jax.random.normal(k4, (32, D_in))
+    y = jax.random.randint(jax.random.PRNGKey(5), (32,), 0, n_cls)
+    batch = {"x": x, "y": y}
+
+    @jax.jit
+    def step(p):
+        l, g = jax.value_and_grad(loss_fn)(p, batch)
+        p = jax.tree.map(lambda a, b: a - 0.1 * b, p, g)
+        return p, l
+
+    losses = []
+    for _ in range(40):
+        params, l = step(params)
+        losses.append(float(l))
+    assert losses[-1] < losses[0] * 0.8, losses[::10]
+
+
+def test_codec_gradient_is_compressed_shape():
+    """The backward channel tensor (dS) has the compressed shape — paper's
+    bidirectional saving."""
+    B, D, R = 8, 64, 4
+    c = codec_lib.C3SLCodec(R=R, D=D)
+    p = c.init(jax.random.PRNGKey(0))
+    Z = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+
+    S, vjp = jax.vjp(lambda s: c.decode(p, s), c.encode(p, Z))
+    (dS,) = vjp(jnp.ones((B, D)))
+    assert dS.shape == (B // R, D)  # gradient crosses the wire compressed

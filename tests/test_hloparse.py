@@ -1,0 +1,62 @@
+"""Unit tests for the trip-count-aware HLO analyzer (roofline source)."""
+import textwrap
+
+from repro.launch import hloparse
+
+SAMPLE = textwrap.dedent("""\
+    HloModule test
+
+    %add (x: f32[], y: f32[]) -> f32[] {
+      %x = f32[] parameter(0)
+      %y = f32[] parameter(1)
+      ROOT %s = f32[] add(%x, %y)
+    }
+
+    %body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %a = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %w = f32[16,16]{1,0} constant(0)
+      %d = f32[8,16]{1,0} dot(%a, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16]{1,0} all-reduce(%d), to_apply=%add
+      %one = s32[] constant(1)
+      %i2 = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,16]) tuple(%i2, %ar)
+    }
+
+    %cond (p: (s32[], f32[8,16])) -> pred[] {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(10)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    ENTRY %main (arg: f32[8,16]) -> f32[8,16] {
+      %arg = f32[8,16]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[8,16]) tuple(%zero, %arg)
+      %w = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body
+      ROOT %out = f32[8,16]{1,0} get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_trip_count_and_flops():
+    t = hloparse.analyze(SAMPLE)
+    # dot: 2 * 8*16 out * 16 contract = 4096 flops, x10 trips
+    assert t["dot_flops"] == 2 * 8 * 16 * 16 * 10
+    # all-reduce: 8*16*4 bytes x10
+    assert t["coll_bytes"] == 8 * 16 * 4 * 10
+    assert t["coll_by_op"]["all-reduce"] == 8 * 16 * 4 * 10
+
+
+def test_collective_bytes_counts_tuple_shapes():
+    txt = "%x = (f32[4,4]{1,0}, f32[2]{0}) all-gather(%a, %b), dims={0}\n"
+    from repro.launch.dryrun import collective_bytes
+    out = collective_bytes(txt)
+    assert out["all-gather"] == (16 + 2) * 4
+
+
+def test_header_param_order_handles_tuples():
+    hdr = "%c (a: (s32[], f32[2,2]), b: f32[4]) -> pred[] {"
+    assert hloparse._header_param_order(hdr) == ["a", "b"]

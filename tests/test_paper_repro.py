@@ -1,0 +1,89 @@
+"""Paper reproduction tests: Table 1/2 analytics exact, split conv models
+train, and the accuracy-trend claim at reduced scale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks import bench_table1
+from repro.configs.paper import RESNET50_CIFAR100, VGG16_CIFAR10
+from repro.core import codec as codec_lib
+from repro.core.split import apply_codec
+from repro.data.pipeline import SyntheticImageDataset
+from repro.models import convnets
+
+
+def test_table1_c3sl_columns_match_paper_exactly():
+    rows = bench_table1.check_rows()
+    c3 = [r for r in rows if r["method"] == "c3sl"]
+    assert len(c3) == 8
+    assert all(r["params_match"] and r["flops_match"] for r in c3)
+
+
+def test_table1_bottlenet_columns_match_except_known_R2():
+    rows = [r for r in bench_table1.check_rows() if r["method"] == "bottlenet++"]
+    for r in rows:
+        if r["R"] == 2:
+            # the paper's own R=2 rows contradict its Table 2 formula; we
+            # implement the formula (see EXPERIMENTS.md §Repro)
+            assert not r["params_match"]
+        else:
+            assert r["params_match"] and r["flops_match"], r
+
+
+def test_vgg16_split_shapes():
+    p = convnets.init_vgg16(jax.random.PRNGKey(0))
+    x = jnp.zeros((2, 3, 32, 32))
+    z = convnets.vgg16_front(p, x)
+    assert z.shape == (2, *convnets.VGG_CUT_SHAPE)  # D = 2048 (paper)
+    assert int(np.prod(convnets.VGG_CUT_SHAPE)) == 2048
+    logits = convnets.vgg16_back(p, z)
+    assert logits.shape == (2, 10)
+
+
+def test_resnet50_split_shapes():
+    p = convnets.init_resnet50(jax.random.PRNGKey(0))
+    x = jnp.zeros((2, 3, 32, 32))
+    z = convnets.resnet50_front(p, x)
+    assert z.shape == (2, *convnets.RESNET_CUT_SHAPE)  # D = 4096 (paper)
+    assert int(np.prod(convnets.RESNET_CUT_SHAPE)) == 4096
+    logits = convnets.resnet50_back(p, z)
+    assert logits.shape == (2, 100)
+
+
+def test_resnet50_param_count_plausible():
+    p = convnets.init_resnet50(jax.random.PRNGKey(0))
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(p))
+    assert 23e6 < n < 27e6  # ~25.6M for ResNet-50
+
+
+@pytest.mark.slow
+def test_accuracy_trend_c3sl_close_to_vanilla():
+    """Short version of benchmarks/bench_accuracy.py: C3-SL R=4 within a few
+    points of vanilla on the synthetic task."""
+    from benchmarks import bench_accuracy
+    van = bench_accuracy.run_one(None, {}, steps=120)
+    c = codec_lib.C3SLCodec(R=4, D=bench_accuracy.D)
+    c3 = bench_accuracy.run_one(c, c.init(jax.random.PRNGKey(0)), steps=120)
+    assert van > 0.6, van  # task is learnable
+    assert c3 > van - 0.15, (van, c3)  # negligible-drop trend
+
+
+def test_vgg_split_trains_one_step_through_codec():
+    rng = jax.random.PRNGKey(0)
+    p = {"net": convnets.init_vgg16(rng), "codec":
+         codec_lib.C3SLCodec(R=4, D=2048).init(rng)}
+    codec = codec_lib.C3SLCodec(R=4, D=2048)
+    ds = SyntheticImageDataset(n_classes=10)
+    batch = ds.batch(8, 0)
+
+    def loss_fn(p):
+        z = convnets.vgg16_front(p["net"], batch["x"])
+        zhat = apply_codec(codec, p["codec"], z)
+        logits = convnets.vgg16_back(p["net"], zhat)
+        return -jax.nn.log_softmax(logits)[jnp.arange(8), batch["y"]].mean()
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(p)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads["net"]))
+    assert gn > 0

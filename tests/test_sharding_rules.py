@@ -1,0 +1,79 @@
+"""Sharding-rule engine tests: divisibility guards, rule hits, ZeRO extension."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import rules
+
+
+class FakeMesh:
+    """Minimal stand-in exposing .shape / .axis_names (no devices needed)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def test_attention_weight_rules():
+    assert rules.spec_for_param("/stack/l0_0_attn/w_q", (4096, 4096), MESH) \
+        == P(None, "model")
+    assert rules.spec_for_param("/stack/l0_0_attn/w_o", (4096, 4096), MESH) \
+        == P("model", None)
+    # stacked leading superblock dim gets padded with None
+    assert rules.spec_for_param("/stack/l0_0_attn/w_q", (30, 4096, 4096), MESH) \
+        == P(None, None, "model")
+
+
+def test_moe_expert_parallel():
+    assert rules.spec_for_param("/stack/l0_1_moe/w_gate", (16, 4096, 6400), MESH) \
+        == P("model", None, None)
+    assert rules.spec_for_param("/stack/l0_1_moe/router", (4096, 16), MESH) \
+        == P(None, None)  # replicated (router output feeds top_k)
+
+
+def test_divisibility_guard_replicates():
+    # 10 heads not divisible by 16 -> replicate that dim
+    assert rules.spec_for_param("/x/w_q", (4096, 10), MESH) == P(None, None)
+    # kv_heads*hd = 2*128 = 256 divisible -> sharded
+    assert rules.spec_for_param("/x/w_k", (4096, 256), MESH) == P(None, "model")
+
+
+def test_rwkv_name_disambiguation():
+    # rwkv channel-mix w_v is an OUTPUT projection (ff, d): row-sharded
+    assert rules.spec_for_param("/stack/l0_1_rwkv_cm/w_v", (7168, 2048), MESH) \
+        == P("model", None)
+    # attention w_v is column-sharded
+    assert rules.spec_for_param("/stack/l0_0_attn/w_v", (2048, 2048), MESH) \
+        == P(None, "model")
+
+
+def test_zero_extension_picks_largest_free_dim():
+    spec = rules._extend_over(P(None, "model"), (4096, 4096), MESH, "data")
+    assert spec == P("data", "model")
+    # already fully sharded -> unchanged
+    spec = rules._extend_over(P("data", "model"), (4096, 4096), MESH, "data")
+    assert spec == P("data", "model")
+    # nothing divisible -> unchanged
+    spec = rules._extend_over(P(), (5, 3), MESH, "data")
+    assert spec == P(None, None)
+
+
+def test_norms_replicated():
+    assert rules.spec_for_param("/stack/l0_0_attn/norm/scale", (4096,), MESH) \
+        == P(None)
+    assert rules.spec_for_param("/final_norm/scale", (4096,), MESH) == P(None)
+
+
+def test_cache_rules():
+    import jax.numpy as jnp
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cache = {"stack": {"l0_0_attn": {"k": jnp.zeros((2, 4, 8, 2, 16)),
+                                     "v": jnp.zeros((2, 4, 8, 2, 16))}}}
+    sh = rules.cache_shardings(cache, mesh)
+    spec = sh["stack"]["l0_0_attn"]["k"].spec
+    # (N, B, T, KV, hd): B->data, T->model (guarded: size-1 axes always ok)
+    assert spec == P(None, "data", "model", None, None)

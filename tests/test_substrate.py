@@ -1,0 +1,183 @@
+"""Optimizer, checkpoint, data-pipeline, and config-registry tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs.archs import ALL_ARCHS
+from repro.configs.base import get_config, list_configs
+from repro.data.pipeline import (SHAPES, SyntheticImageDataset,
+                                 SyntheticTokenDataset, input_specs)
+from repro.optim import (adam, adamw, apply_updates, clip_by_global_norm,
+                         sgd_momentum, warmup_cosine)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def test_adam_converges_on_quadratic():
+    opt = adam(0.1)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adam_matches_reference_formula():
+    """One Adam step against the textbook update."""
+    lr, b1, b2, eps = 1e-2, 0.9, 0.999, 1e-8
+    opt = adam(lr, b1, b2, eps)
+    w = jnp.array([1.0])
+    g = jnp.array([0.5])
+    state = opt.init({"w": w})
+    updates, state = opt.update({"w": g}, state, {"w": w})
+    m = (1 - b1) * g
+    v = (1 - b2) * g ** 2
+    want = -lr * (m / (1 - b1)) / (jnp.sqrt(v / (1 - b2)) + eps)
+    np.testing.assert_allclose(np.asarray(updates["w"]), np.asarray(want),
+                               rtol=1e-4)
+
+
+def test_adamw_decays_weights():
+    opt = adamw(1e-2, weight_decay=0.1)
+    params = {"w": jnp.array([10.0])}
+    state = opt.init(params)
+    updates, _ = opt.update({"w": jnp.array([0.0])}, state, params)
+    assert float(updates["w"][0]) < 0  # pure decay pulls toward zero
+
+
+def test_sgd_momentum_and_clip():
+    opt = sgd_momentum(0.1, momentum=0.9)
+    params = {"w": jnp.array([1.0])}
+    state = opt.init(params)
+    g = {"w": jnp.array([100.0])}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["w"])) - 1.0) < 1e-5
+    assert float(gn) == pytest.approx(100.0)
+    updates, state = opt.update(clipped, state, params)
+    assert float(updates["w"][0]) == pytest.approx(-0.1, rel=1e-5)
+
+
+def test_warmup_cosine_schedule():
+    sched = warmup_cosine(1.0, warmup_steps=10, total_steps=100)
+    assert float(sched(jnp.array(0))) == pytest.approx(0.0)
+    assert float(sched(jnp.array(10))) == pytest.approx(1.0, abs=0.01)
+    assert float(sched(jnp.array(100))) == pytest.approx(0.1, abs=0.02)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+            "d": [jnp.zeros((2,)), jnp.full((1,), 7.0)]}
+    save_checkpoint(str(tmp_path), 5, tree, {"note": "test"})
+    assert latest_step(str(tmp_path)) == 5
+    got = restore_checkpoint(str(tmp_path), 5, jax.eval_shape(lambda: tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"a": jnp.ones((2,))})
+    bad = jax.eval_shape(lambda: {"a": jnp.ones((3,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), 1, bad)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_token_dataset_deterministic_and_learnable():
+    ds = SyntheticTokenDataset(vocab_size=64, seq_len=32, seed=3)
+    b1 = ds.batch(8, step=0)
+    b2 = ds.batch(8, step=0)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    # labels are next-tokens
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["labels"][:, :-1]))
+    # successor structure present: P(label == successor[token]) >> 1/V
+    succ = ds.successor[np.asarray(b1["tokens"]).reshape(-1)]
+    frac = (succ == np.asarray(b1["labels"]).reshape(-1)).mean()
+    assert frac > 0.5
+
+
+def test_image_dataset_class_conditional():
+    ds = SyntheticImageDataset(n_classes=4, seed=0)
+    b = ds.batch(64, 0)
+    assert b["x"].shape == (64, 3, 32, 32)
+    # same-class images correlate more than cross-class
+    x = np.asarray(b["x"]).reshape(64, -1)
+    y = np.asarray(b["y"])
+    same = cross = 0.0
+    n_same = n_cross = 0
+    for i in range(0, 32):
+        for j in range(i + 1, 32):
+            c = np.dot(x[i], x[j]) / (np.linalg.norm(x[i]) * np.linalg.norm(x[j]))
+            if y[i] == y[j]:
+                same += c; n_same += 1
+            else:
+                cross += c; n_cross += 1
+    if n_same and n_cross:
+        assert same / n_same > cross / n_cross
+
+
+# ---------------------------------------------------------------------------
+# configs / input specs
+# ---------------------------------------------------------------------------
+
+def test_all_archs_registered():
+    names = list_configs()
+    for a in ALL_ARCHS:
+        assert a in names
+
+
+def test_input_specs_cover_all_combos():
+    for a in ALL_ARCHS:
+        cfg = get_config(a)
+        for s in SHAPES:
+            spec = input_specs(cfg, s)
+            assert "tokens" in spec
+            B = SHAPES[s]["global_batch"]
+            assert spec["tokens"].shape[0] == B
+            if SHAPES[s]["kind"] == "train":
+                assert "labels" in spec
+            if cfg.frontend and SHAPES[s]["kind"] != "decode":
+                assert "frontend" in spec
+
+
+def test_exact_assigned_dimensions():
+    """The full configs carry the exact assignment numbers."""
+    want = {
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 10944, 102400),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    }
+    for name, (L, d, H, KV, ff, V) in want.items():
+        cfg = get_config(name)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, H, KV, ff, V), name
+    assert get_config("deepseek-v2-lite-16b").num_experts == 64
+    assert get_config("deepseek-v2-lite-16b").experts_per_token == 6
+    assert get_config("deepseek-v2-lite-16b").kv_lora_rank == 512
+    assert get_config("phi3.5-moe-42b-a6.6b").num_experts == 16
+    assert get_config("jamba-1.5-large-398b").num_experts == 16
+    assert get_config("chatglm3-6b").partial_rotary == 0.5
