@@ -17,8 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import codec as codec_lib
-from repro.core.bottlenet import BottleNetPPCodec
+from repro.codecs import build
 from repro.core.split import apply_codec
 from repro.data.pipeline import SyntheticImageDataset
 from repro.models.convnets import _bn, _init_bn, _init_conv, conv2d, max_pool
@@ -97,18 +96,18 @@ def main(steps=300):
     results["vanilla"] = run_one(None, {}, steps=steps)
     print(f"vanilla,{results['vanilla']*100:.1f}", flush=True)
     for R in (2, 4, 8, 16):
-        c = codec_lib.C3SLCodec(R=R, D=D)
+        c = build(f"c3sl:R={R}", D=D)
         results[f"c3sl_R{R}"] = run_one(c, c.init(rng), steps=steps)
         print(f"c3sl_R{R},{results[f'c3sl_R{R}']*100:.1f}", flush=True)
     # beyond-paper: unitary keys (exact-rotation binding) at the hardest R
-    cu = codec_lib.C3SLCodec(R=16, D=D, unitary=True)
+    cu = build("c3sl:R=16,unitary=true", D=D)
     results["c3sl_R16_unitary"] = run_one(cu, cu.init(rng), steps=steps)
     print(f"c3sl_R16_unitary,{results['c3sl_R16_unitary']*100:.1f}", flush=True)
     # beyond-paper: int8 wire at R=4 (4R x total compression)
-    cq = codec_lib.C3SLCodec(R=4, D=D, quant_bits=8)
+    cq = build("c3sl:R=4|int8", D=D)
     results["c3sl_R4_int8"] = run_one(cq, cq.init(rng), steps=steps)
     print(f"c3sl_R4_int8,{results['c3sl_R4_int8']*100:.1f}", flush=True)
-    bn = BottleNetPPCodec(R=4, C=CUT[0], H=CUT[1], W=CUT[2])
+    bn = build(f"bnpp:R=4,C={CUT[0]},H={CUT[1]},W={CUT[2]}")
     results["bnpp_R4"] = run_one(bn, bn.init(rng), steps=steps)
     print(f"bnpp_R4,{results['bnpp_R4']*100:.1f}", flush=True)
     print(f"# total {time.time()-t0:.0f}s")

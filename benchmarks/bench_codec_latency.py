@@ -10,8 +10,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import codec as codec_lib
-from repro.core.bottlenet import BottleNetPPCodec
+from repro.codecs import build
 
 
 def timeit(fn, *args, iters=10):
@@ -32,13 +31,13 @@ def main():
     for backend, D, iters in (("fft", 4096, 10), ("direct", 1024, 3),
                               ("pallas", 1024, 3)):
         Z = jax.random.normal(jax.random.PRNGKey(0), (B, D))
-        c = codec_lib.C3SLCodec(R=R, D=D, backend=backend)
+        c = build(f"c3sl:R={R},D={D},backend={backend}")
         p = c.init(jax.random.PRNGKey(1))
         f = jax.jit(lambda z: c.decode(p, c.encode(p, z)))
         us = timeit(f, Z, iters=iters)
         print(f"c3sl_{backend},{us:.0f},B={B} D={D} R={R}", flush=True)
     Z = jax.random.normal(jax.random.PRNGKey(0), (B, 4096))
-    bn = BottleNetPPCodec(R=R, C=1024, H=2, W=2)
+    bn = build(f"bnpp:R={R},C=1024,H=2,W=2")
     pbn = bn.init(jax.random.PRNGKey(2))
     Z4 = Z.reshape(B, 1024, 2, 2)
     f = jax.jit(lambda z: bn.decode(pbn, bn.encode(pbn, z)))

@@ -4,9 +4,8 @@ The paper's headline: R x fewer bytes both directions.  Also covers the
 beyond-paper int8 wire format (4R x total)."""
 from __future__ import annotations
 
+from repro.codecs import build
 from repro.configs.paper import RESNET50_CIFAR100, VGG16_CIFAR10
-from repro.core import codec as codec_lib
-from repro.core.bottlenet import BottleNetPPCodec
 from repro.core.metrics import comm_report
 
 
@@ -16,12 +15,13 @@ def main():
     for cfg in (VGG16_CIFAR10, RESNET50_CIFAR100):
         B, D = cfg.batch_size, cfg.D
         C, H, W = cfg.cut_shape
-        rows = [("vanilla", codec_lib.IdentityCodec(D=D))]
+        rows = [("vanilla", "identity")]
         for R in (2, 4, 8, 16):
-            rows.append((f"c3sl", codec_lib.C3SLCodec(R=R, D=D)))
-            rows.append((f"c3sl-int8", codec_lib.C3SLCodec(R=R, D=D, quant_bits=8)))
-            rows.append((f"bottlenet++", BottleNetPPCodec(R=R, C=C, H=H, W=W)))
-        for name, codec in rows:
+            rows.append(("c3sl", f"c3sl:R={R}"))
+            rows.append(("c3sl-int8", f"c3sl:R={R}|int8"))
+            rows.append(("bottlenet++", f"bnpp:R={R}"))
+        for name, spec in rows:
+            codec = build(spec, D=D, C=C, H=H, W=W)
             r = comm_report(codec, B, D, method=name)
             print(f"{cfg.name},{name},{getattr(codec,'R',1)},{r.total},"
                   f"{r.compression:.2f}")

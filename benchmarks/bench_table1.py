@@ -10,8 +10,7 @@ from __future__ import annotations
 
 from repro.configs.paper import (PAPER_RS, RESNET50_CIFAR100, TABLE1,
                                  TABLE1_BOTTLENET, VGG16_CIFAR10)
-from repro.core.bottlenet import BottleNetPPCodec
-from repro.core.codec import C3SLCodec
+from repro.codecs import BottleNetPPCodec, C3SLCodec
 
 
 def check_rows():

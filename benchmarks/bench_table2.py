@@ -7,8 +7,7 @@ BottleNet++:  params = (Ck^2+1)(4C/R) + ((4C/R)k^2+1)C
 from __future__ import annotations
 
 from repro.configs.paper import PAPER_RS, RESNET50_CIFAR100, VGG16_CIFAR10
-from repro.core.bottlenet import BottleNetPPCodec
-from repro.core.codec import C3SLCodec
+from repro.codecs import BottleNetPPCodec, C3SLCodec
 
 
 def rows():

@@ -14,8 +14,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
+from repro.codecs import build
 from repro.configs.base import get_config, reduced
-from repro.core.codec import C3SLCodec
 from repro.core import split as split_lib
 from repro.launch import mesh as mesh_lib
 from repro.models import lm as lm_lib
@@ -32,7 +32,7 @@ def main():
     mesh = mesh_lib.make_host_mesh(data=2, model=2, pod=2)
     B, S, M, R = 16, 32, 4, 4
     mb = B // M
-    codec = C3SLCodec(R=min(R, mb), D=S * cfg.d_model)
+    codec = build(f"c3sl:R={min(R, mb)}", D=S * cfg.d_model)
 
     rng = jax.random.PRNGKey(0)
     full = lm_lib.init_lm_params(rng, cfg)

@@ -14,8 +14,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
+from repro.codecs import build
 from repro.configs.base import get_config, reduced
-from repro.core.codec import C3SLCodec
 from repro.core.metrics import comm_report
 from repro.data.pipeline import SyntheticTokenDataset
 from repro.models import lm as lm_lib
@@ -29,7 +29,7 @@ def main():
                   d_ff=256, vocab_size=256, num_heads=4, num_kv_heads=2,
                   head_dim=32)
     B, S, R = 16, 64, 4
-    codec = C3SLCodec(R=R, D=S * cfg.d_model)
+    codec = build(f"c3sl:R={R}", D=S * cfg.d_model)
 
     rng = jax.random.PRNGKey(0)
     params = lm_lib.init_lm_params(rng, cfg)

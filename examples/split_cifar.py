@@ -16,8 +16,7 @@ import argparse
 import jax
 
 from benchmarks.bench_accuracy import CUT, D, run_one
-from repro.core.bottlenet import BottleNetPPCodec
-from repro.core.codec import C3SLCodec, IdentityCodec
+from repro.codecs import build
 
 
 def main():
@@ -31,12 +30,12 @@ def main():
     print(f"{'vanilla':>12s} {van*100:6.1f} {0:12d} {64*D*4*2:16d}")
 
     for R in (2, 4, 8, 16):
-        c = C3SLCodec(R=R, D=D)
+        c = build(f"c3sl:R={R}", D=D)
         acc = run_one(c, c.init(rng), steps=args.steps)
         print(f"{f'c3sl R={R}':>12s} {acc*100:6.1f} {c.param_count():12d} "
               f"{2*c.wire_bytes(64):16d}")
 
-    bn = BottleNetPPCodec(R=4, C=CUT[0], H=CUT[1], W=CUT[2])
+    bn = build(f"bnpp:R=4,C={CUT[0]},H={CUT[1]},W={CUT[2]}")
     acc = run_one(bn, bn.init(rng), steps=args.steps)
     print(f"{'bnpp R=4':>12s} {acc*100:6.1f} {bn.param_count():12d} "
           f"{2*bn.wire_bytes(64):16d}")

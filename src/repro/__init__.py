@@ -2,7 +2,8 @@
 learning) as a production-grade multi-pod JAX framework.
 
 Public entry points:
-    repro.core.codec       — C3SLCodec / BottleNetPPCodec / IdentityCodec
+    repro.codecs           — Codec protocol, spec registry (build("c3sl:R=8|int8")),
+                             C3SL/BottleNet++/Identity codecs + wire stages
     repro.core.hrr         — HRR bind/unbind primitives (fft/direct/pallas)
     repro.core.split       — logical + pod-pipeline split-learning steps
     repro.models.lm        — CausalLM/EncDec init/loss/decode

@@ -1,0 +1,71 @@
+"""repro.codecs — the unified boundary-codec API for split learning.
+
+Every codec is a drop-in module at the cut layer implementing the
+``Codec`` protocol (see ``repro.codecs.base``):
+
+    params  = codec.init(rng)                 # pytree ({} for stateless)
+    payload = codec.encode(params, Z)         # what crosses the wire
+    Zhat    = codec.decode(params, payload)   # reconstruction
+
+    codec.param_count()                       # codec parameters
+    codec.flops(B)                            # codec FLOPs per batch
+    codec.wire_bytes(B)                       # bytes/direction/step
+    codec.payload_shape(B)                    # wire tensor shape
+    codec.feature_layout                      # "flat" (B, D) | "nchw"
+    codec.spec()                              # canonical spec string
+
+Spec grammar
+============
+
+Codecs are buildable from strings through the registry::
+
+    SPEC  := STAGE ("|" STAGE)*
+    STAGE := NAME [":" KEY "=" VALUE ("," KEY "=" VALUE)*]
+
+The first stage names a registered *transform* codec; every later stage
+names a registered *wire format* applied to the transform's payload
+(straight-through, fake-quant style).  Values parse as int, float, bool
+("true"/"false"), or string.  ``build(spec, **defaults)`` fills fields the
+spec omits from keyword defaults (runtime dims such as ``D``); explicit
+spec args always win.
+
+Registered transforms:
+    identity                  — vanilla SL.              args: D
+    c3sl     (alias: hrr)     — the paper's HRR codec.   args: R, D,
+                                backend=fft|direct|pallas, unitary, key_seed
+    dense    (alias: dense-bottleneck)
+                              — linear autoencoder.      args: R, D
+    bnpp     (alias: bottlenetpp)
+                              — BottleNet++ conv codec.  args: R, C, H, W, k
+
+Registered wire stages:
+    int8  — per-row absmax int8 STE quant.
+    topk  — magnitude top-k, mask-encoded indices.  args: k | ratio
+    noop  — f32 passthrough.
+
+Examples::
+
+    build("c3sl:R=8,backend=fft|int8", D=4096)   # paper codec + int8 wire
+    build("c3sl:R=4,D=256").spec()               # -> "c3sl:R=4,D=256"
+    build("bnpp:R=4,C=64,H=8,W=8")               # BottleNet++ baseline
+    build("c3sl:R=4|topk:ratio=0.1", D=4096)     # HRR + sparsified wire
+
+``repro.core.codec`` and ``repro.core.bottlenet`` remain as thin
+re-export shims for pre-registry imports.
+"""
+from repro.codecs.base import (Codec, CodecSpec, WireStage, apply_quant_bits,
+                               available, build, clamp_R, parse_spec, register)
+from repro.codecs.bottleneck import BottleNetPPCodec, DenseBottleneckCodec
+from repro.codecs.c3sl import (C3SLCodec, sequence_group_decode,
+                               sequence_group_encode)
+from repro.codecs.compose import Chain
+from repro.codecs.identity import IdentityCodec
+from repro.codecs.wire import Int8STEQuant, NoOpWire, TopKSparsify
+
+__all__ = [
+    "Codec", "CodecSpec", "WireStage", "apply_quant_bits", "available",
+    "build", "clamp_R", "parse_spec", "register",
+    "IdentityCodec", "C3SLCodec", "DenseBottleneckCodec", "BottleNetPPCodec",
+    "Chain", "Int8STEQuant", "TopKSparsify", "NoOpWire",
+    "sequence_group_encode", "sequence_group_decode",
+]

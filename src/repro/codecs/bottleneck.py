@@ -1,0 +1,159 @@
+"""Trainable bottleneck codecs (the paper's dimension-wise baselines).
+
+* ``BottleNetPPCodec`` — BottleNet++ (Shao & Zhang 2020), paper-faithful
+  conv autoencoder on (B, C, H, W) cut-layer feature maps
+  (``feature_layout = "nchw"``).
+* ``DenseBottleneckCodec`` — the same idea for flattened (B, D) features,
+  used for iso-interface comparisons on transformer cut layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.codecs.base import SpecMixin, register
+
+
+@register("dense", "dense-bottleneck")
+@dataclasses.dataclass(frozen=True)
+class DenseBottleneckCodec(SpecMixin):
+    """BottleNet++-style trainable autoencoder on flattened features.
+
+    encoder: Linear(D -> D/R) + sigmoid;  decoder: Linear(D/R -> D) + ReLU.
+    """
+    R: int
+    D: int
+
+    feature_layout = "flat"
+
+    def __post_init__(self):
+        if self.D % self.R:
+            raise ValueError("D must be divisible by R")
+
+    @property
+    def d_code(self) -> int:
+        return self.D // self.R
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        s_in = self.D ** -0.5
+        s_code = self.d_code ** -0.5
+        return {
+            "w_enc": jax.random.normal(k1, (self.D, self.d_code)) * s_in,
+            "b_enc": jnp.zeros((self.d_code,)),
+            "w_dec": jax.random.normal(k2, (self.d_code, self.D)) * s_code,
+            "b_dec": jnp.zeros((self.D,)),
+        }
+
+    def encode(self, params, Z):
+        return jax.nn.sigmoid(Z @ params["w_enc"] + params["b_enc"])
+
+    def decode(self, params, payload):
+        return jax.nn.relu(payload @ params["w_dec"] + params["b_dec"])
+
+    def param_count(self) -> int:
+        return (self.D + 1) * self.d_code + (self.d_code + 1) * self.D
+
+    def flops(self, B: int) -> int:
+        return 2 * B * 2 * self.D * self.d_code  # enc + dec matmuls (MAC*2)
+
+    def payload_shape(self, B: int) -> tuple[int, ...]:
+        return (B, self.d_code)
+
+    def wire_bytes(self, B: int) -> int:
+        return B * self.d_code * 4
+
+
+def _batchnorm(x: jax.Array, scale, bias, axis=(0, 2, 3), eps=1e-5):
+    mean = x.mean(axis=axis, keepdims=True)
+    var = x.var(axis=axis, keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xn * scale[None, :, None, None] + bias[None, :, None, None]
+
+
+@register("bnpp", "bottlenetpp")
+@dataclasses.dataclass(frozen=True)
+class BottleNetPPCodec(SpecMixin):
+    """Paper-faithful conv codec on (B, C, H, W) cut-layer feature maps.
+
+    encoder: Conv(k=2, stride=2, C -> C' = 4C/R) + BatchNorm + sigmoid
+    decoder: ConvTranspose(k=2, stride=2, C' -> C) + BatchNorm + ReLU
+    (channel-condition layers removed, as in C3-SL Sec. 4.1).
+
+    Total compression R = (C*H*W) / (C'*(H/2)*(W/2)) = 4C/C'  =>  C' = 4C/R.
+    param_count() and flops(B) implement C3-SL Table 2's formulas verbatim.
+    """
+    R: int
+    C: int
+    H: int
+    W: int
+    k: int = 2  # kernel size and stride, per C3-SL Sec. 4.1
+
+    feature_layout = "nchw"
+
+    def __post_init__(self):
+        if (4 * self.C) % self.R:
+            raise ValueError("4C must be divisible by R")
+
+    @property
+    def c_code(self) -> int:
+        return 4 * self.C // self.R
+
+    @property
+    def D(self) -> int:
+        return self.C * self.H * self.W
+
+    def init(self, rng):
+        k1, k2 = jax.random.split(rng)
+        Cp, k = self.c_code, self.k
+        fan_in_e = self.C * k * k
+        fan_in_d = Cp * k * k
+        return {
+            "w_enc": jax.random.normal(k1, (Cp, self.C, k, k)) * fan_in_e ** -0.5,
+            "b_enc": jnp.zeros((Cp,)),
+            "bn_enc_scale": jnp.ones((Cp,)),
+            "bn_enc_bias": jnp.zeros((Cp,)),
+            "w_dec": jax.random.normal(k2, (Cp, self.C, k, k)) * fan_in_d ** -0.5,
+            "b_dec": jnp.zeros((self.C,)),
+            "bn_dec_scale": jnp.ones((self.C,)),
+            "bn_dec_bias": jnp.zeros((self.C,)),
+        }
+
+    def encode(self, params, Z):
+        """Z (B, C, H, W) -> payload (B, C', H/2, W/2)."""
+        y = jax.lax.conv_general_dilated(
+            Z, params["w_enc"], window_strides=(self.k, self.k), padding="VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        y = y + params["b_enc"][None, :, None, None]
+        y = _batchnorm(y, params["bn_enc_scale"], params["bn_enc_bias"])
+        return jax.nn.sigmoid(y)
+
+    def decode(self, params, payload):
+        """payload (B, C', H/2, W/2) -> (B, C, H, W)."""
+        y = jax.lax.conv_transpose(
+            payload, params["w_dec"], strides=(self.k, self.k), padding="VALID",
+            dimension_numbers=("NCHW", "IOHW", "NCHW"))
+        y = y + params["b_dec"][None, :, None, None]
+        y = _batchnorm(y, params["bn_dec_scale"], params["bn_dec_bias"])
+        return jax.nn.relu(y)
+
+    # ---- paper Table 2 accounting (BN params excluded, as in the paper) ----
+
+    def param_count(self) -> int:
+        C, k, R = self.C, self.k, self.R
+        return (C * k * k + 1) * (4 * C // R) + ((4 * C // R) * k * k + 1) * C
+
+    def flops(self, B: int) -> int:
+        C, k, R, H, W = self.C, self.k, self.R, self.H, self.W
+        Hp, Wp = H // self.k, W // self.k
+        enc = B * (2 * C * k * k + 1) * (4 * C // R) * Hp * Wp
+        dec = B * ((8 * C // R) * k * k + 1) * C * H * W
+        return enc + dec
+
+    def payload_shape(self, B: int) -> tuple[int, ...]:
+        return (B, self.c_code, self.H // self.k, self.W // self.k)
+
+    def wire_bytes(self, B: int) -> int:
+        return B * self.c_code * (self.H // self.k) * (self.W // self.k) * 4

@@ -1,0 +1,93 @@
+"""C3-SL: the paper's batch-wise HRR codec (bind + superpose / unbind).
+
+Pure transform stage — the beyond-paper int8 wire format that used to be a
+``quant_bits`` option here now lives in ``repro.codecs.wire`` and composes
+via specs, e.g. ``build("c3sl:R=8|int8", D=4096)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.codecs.base import SpecMixin, register
+from repro.core import hrr
+
+
+@register("c3sl", "hrr")
+@dataclasses.dataclass(frozen=True)
+class C3SLCodec(SpecMixin):
+    """Fixed random keys, bind+superpose R features into one D-vector.
+
+    Z (B, D) is grouped into B/R groups; each group becomes one D-vector.
+    Keys are constants (stop_gradient inside the HRR ops) — param_count is
+    the paper's R*D and flops(B) the paper's 2*B*D^2.  The HRR execution
+    backend (fft | direct | pallas) is part of the spec.
+    """
+    R: int
+    D: int
+    backend: str = "fft"
+    unitary: bool = False          # beyond-paper: exact-rotation keys
+    key_seed: int = 0
+
+    feature_layout = "flat"
+
+    def __post_init__(self):
+        if self.R < 1:
+            raise ValueError(f"R must be >= 1, got {self.R}")
+        if self.backend not in ("fft", "direct", "pallas"):
+            raise ValueError(f"unknown HRR backend {self.backend!r} "
+                             "(expected fft | direct | pallas)")
+
+    def init(self, rng=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(self.key_seed)
+        return {"keys": hrr.generate_keys(rng, self.R, self.D,
+                                          unitary=self.unitary)}
+
+    def _group(self, Z):
+        B, D = Z.shape
+        if D != self.D:
+            raise ValueError(f"feature dim {D} != codec D={self.D}")
+        if B % self.R:
+            raise ValueError(f"batch {B} not divisible by R={self.R}")
+        return Z.reshape(B // self.R, self.R, D)
+
+    def encode(self, params, Z):
+        return hrr.bind_superpose(self._group(Z), params["keys"],
+                                  backend=self.backend)
+
+    def decode(self, params, payload):
+        Zhat = hrr.unbind(payload, params["keys"], backend=self.backend)
+        G, R, D = Zhat.shape
+        return Zhat.reshape(G * R, D)
+
+    def param_count(self) -> int:
+        return self.R * self.D  # paper Table 2
+
+    def flops(self, B: int) -> int:
+        return 2 * B * self.D ** 2  # paper Table 2 (direct form; FFT is B*D*log D)
+
+    def payload_shape(self, B: int) -> tuple[int, ...]:
+        return (B // self.R, self.D)
+
+    def wire_bytes(self, B: int) -> int:
+        return (B // self.R) * self.D * 4
+
+
+def sequence_group_encode(codec, params, Z_bsd: jax.Array) -> jax.Array:
+    """Beyond-paper: group along sequence blocks when batch==1 (long_500k).
+
+    Z (B, S, D) with B*S divisible by R -> payload (B*S/R, D).
+    """
+    B, S, D = Z_bsd.shape
+    R = getattr(codec, "R", 1)
+    if (B * S) % R:
+        raise ValueError(
+            f"batch {B * S} (B={B} x S={S} sequence groups) not divisible "
+            f"by R={R}")
+    return codec.encode(params, Z_bsd.reshape(B * S, D))
+
+
+def sequence_group_decode(codec, params, payload: jax.Array,
+                          B: int, S: int) -> jax.Array:
+    return codec.decode(params, payload).reshape(B, S, -1)

@@ -1,197 +1,51 @@
-"""Boundary codecs for split learning.
+"""Thin re-export shim — the codec layer lives in ``repro.codecs`` now.
 
-All codecs share one interface over flattened cut-layer features Z (B, D):
+Old imports keep working:
 
-    params  = codec.init(rng)                      # pytree ("" for stateless)
-    payload = codec.encode(params, Z)              # what crosses the wire
-    Zhat    = codec.decode(params, payload)        # (B, D) again
+    from repro.core.codec import C3SLCodec, IdentityCodec, ...
 
-plus analytic accounting used by the paper-repro benchmarks:
+``C3SLCodec`` here is a compatibility factory: the historical
+``quant_bits=8`` option is expressed in the new API as a composed wire
+stage (``repro.codecs.build("c3sl:R=...|int8")``), so passing it returns a
+``Chain`` with identical encode/decode behavior and accounting.  New code
+should use ``repro.codecs`` directly.
 
-    codec.param_count()          trainable+fixed codec parameters
-    codec.flops(B)               codec FLOPs per training batch (paper Table 2)
-    codec.wire_bytes(B)          bytes on the wire per direction per step
-
-Implemented codecs:
-  * IdentityCodec       — vanilla SL (no compression).
-  * C3SLCodec           — the paper: HRR bind+superpose / unbind, fixed keys.
-                          Options: backend (fft | direct | pallas),
-                          unitary keys (beyond-paper), int8 wire (beyond-paper).
-  * DenseBottleneckCodec — BottleNet++-style trainable autoencoder for
-                          flattened features (linear enc + sigmoid / dec + relu).
-  (BottleNetPPCodec, the paper-faithful conv version for (B,C,H,W) feature
-   maps, lives in repro/core/bottlenet.py.)
+Imports are lazy (module ``__getattr__``) because ``repro.core.__init__``
+loads this shim while ``repro.codecs`` may itself be mid-import (its c3sl
+module pulls in ``repro.core.hrr``).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import hrr
-
-
-# --------------------------------------------------------------------------
-# straight-through int8 fake-quant (beyond-paper wire format)
-# --------------------------------------------------------------------------
-
-@jax.custom_vjp
-def _ste_quant_int8(x: jax.Array) -> jax.Array:
-    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    q = jnp.round(x / scale).astype(jnp.int8)
-    return q.astype(x.dtype) * scale
+_EXPORTS = {
+    "IdentityCodec": ("repro.codecs.identity", "IdentityCodec"),
+    "DenseBottleneckCodec": ("repro.codecs.bottleneck", "DenseBottleneckCodec"),
+    "Chain": ("repro.codecs.compose", "Chain"),
+    "Int8STEQuant": ("repro.codecs.wire", "Int8STEQuant"),
+    "_ste_quant_int8": ("repro.codecs.wire", "ste_quant_int8"),
+    "sequence_group_encode": ("repro.codecs.c3sl", "sequence_group_encode"),
+    "sequence_group_decode": ("repro.codecs.c3sl", "sequence_group_decode"),
+}
 
 
-def _steq_fwd(x):
-    return _ste_quant_int8(x), None
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+        mod, attr = _EXPORTS[name]
+        return getattr(importlib.import_module(mod), attr)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def _steq_bwd(_, g):
-    return (g,)
+def C3SLCodec(*, R: int, D: int, backend: str = "fft", unitary: bool = False,
+              quant_bits: int | None = None, key_seed: int = 0):
+    """Build the paper codec; ``quant_bits=8`` composes the int8 wire stage."""
+    from repro.codecs.c3sl import C3SLCodec as _C3SLCodec
+    from repro.codecs.compose import Chain
+    from repro.codecs.wire import Int8STEQuant
 
-
-_ste_quant_int8.defvjp(_steq_fwd, _steq_bwd)
-
-
-@dataclasses.dataclass(frozen=True)
-class IdentityCodec:
-    """Vanilla SL — the uncompressed baseline."""
-    D: int
-    wire_dtype: Any = jnp.float32
-
-    R = 1
-
-    def init(self, rng):
-        return {}
-
-    def encode(self, params, Z):
-        return Z
-
-    def decode(self, params, payload):
-        return payload
-
-    def param_count(self) -> int:
-        return 0
-
-    def flops(self, B: int) -> int:
-        return 0
-
-    def wire_bytes(self, B: int) -> int:
-        return B * self.D * jnp.dtype(self.wire_dtype).itemsize
-
-
-@dataclasses.dataclass(frozen=True)
-class C3SLCodec:
-    """The paper's codec: fixed random keys, bind+superpose R features into one.
-
-    Z (B, D) is grouped into B/R groups; each group becomes one D-vector.
-    Keys are constants (stop_gradient inside the HRR ops) — param_count is
-    the paper's R*D and flops(B) the paper's 2*B*D^2.
-    """
-    R: int
-    D: int
-    backend: str = "fft"
-    unitary: bool = False          # beyond-paper: exact-rotation keys
-    quant_bits: int | None = None  # beyond-paper: int8 wire format
-    key_seed: int = 0
-
-    def __post_init__(self):
-        if self.quant_bits not in (None, 8):
-            raise ValueError("only int8 wire quantization supported")
-
-    def init(self, rng=None):
-        rng = rng if rng is not None else jax.random.PRNGKey(self.key_seed)
-        return {"keys": hrr.generate_keys(rng, self.R, self.D, unitary=self.unitary)}
-
-    def _group(self, Z):
-        B, D = Z.shape
-        if D != self.D:
-            raise ValueError(f"feature dim {D} != codec D={self.D}")
-        if B % self.R:
-            raise ValueError(f"batch {B} not divisible by R={self.R}")
-        return Z.reshape(B // self.R, self.R, D)
-
-    def encode(self, params, Z):
-        S = hrr.bind_superpose(self._group(Z), params["keys"], backend=self.backend)
-        if self.quant_bits == 8:
-            S = _ste_quant_int8(S)
-        return S
-
-    def decode(self, params, payload):
-        Zhat = hrr.unbind(payload, params["keys"], backend=self.backend)
-        G, R, D = Zhat.shape
-        return Zhat.reshape(G * R, D)
-
-    def param_count(self) -> int:
-        return self.R * self.D  # paper Table 2
-
-    def flops(self, B: int) -> int:
-        return 2 * B * self.D ** 2  # paper Table 2 (direct form; FFT path is B*D*log D)
-
-    def wire_bytes(self, B: int) -> int:
-        per_val = 1 if self.quant_bits == 8 else 4
-        scales = 4 * (B // self.R) if self.quant_bits == 8 else 0
-        return (B // self.R) * self.D * per_val + scales
-
-
-@dataclasses.dataclass(frozen=True)
-class DenseBottleneckCodec:
-    """BottleNet++-style trainable autoencoder on flattened features.
-
-    encoder: Linear(D -> D/R) + sigmoid;  decoder: Linear(D/R -> D) + ReLU.
-    Used for iso-interface comparisons on transformer cut layers where the
-    conv codec's (C, H, W) layout does not exist.
-    """
-    R: int
-    D: int
-
-    def __post_init__(self):
-        if self.D % self.R:
-            raise ValueError("D must be divisible by R")
-
-    @property
-    def d_code(self) -> int:
-        return self.D // self.R
-
-    def init(self, rng):
-        k1, k2 = jax.random.split(rng)
-        s_in = self.D ** -0.5
-        s_code = self.d_code ** -0.5
-        return {
-            "w_enc": jax.random.normal(k1, (self.D, self.d_code)) * s_in,
-            "b_enc": jnp.zeros((self.d_code,)),
-            "w_dec": jax.random.normal(k2, (self.d_code, self.D)) * s_code,
-            "b_dec": jnp.zeros((self.D,)),
-        }
-
-    def encode(self, params, Z):
-        return jax.nn.sigmoid(Z @ params["w_enc"] + params["b_enc"])
-
-    def decode(self, params, payload):
-        return jax.nn.relu(payload @ params["w_dec"] + params["b_dec"])
-
-    def param_count(self) -> int:
-        return (self.D + 1) * self.d_code + (self.d_code + 1) * self.D
-
-    def flops(self, B: int) -> int:
-        return 2 * B * 2 * self.D * self.d_code  # enc + dec matmuls (MAC*2)
-
-    def wire_bytes(self, B: int) -> int:
-        return B * self.d_code * 4
-
-
-def sequence_group_encode(codec: C3SLCodec, params, Z_bsd: jax.Array) -> jax.Array:
-    """Beyond-paper: group along sequence blocks when batch==1 (long_500k).
-
-    Z (B, S, D) with B*S divisible by R -> payload (B*S/R, D).
-    """
-    B, S, D = Z_bsd.shape
-    return codec.encode(params, Z_bsd.reshape(B * S, D))
-
-
-def sequence_group_decode(codec: C3SLCodec, params, payload: jax.Array,
-                          B: int, S: int) -> jax.Array:
-    return codec.decode(params, payload).reshape(B, S, -1)
+    codec = _C3SLCodec(R=R, D=D, backend=backend, unitary=unitary,
+                       key_seed=key_seed)
+    if quant_bits is None:
+        return codec
+    if quant_bits != 8:
+        raise ValueError("only int8 wire quantization supported")
+    return Chain(codec, (Int8STEQuant(),))

@@ -28,16 +28,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.bottlenet import BottleNetPPCodec
-
-
 def apply_codec(codec, params, Z):
     """Round-trip Z through a codec, preserving Z's shape.
 
-    Conv codecs (BottleNet++) consume (B, C, H, W) natively; everything else
-    works on flattened (B, D).
+    Dispatch is protocol-level via ``codec.feature_layout``: "nchw" codecs
+    (BottleNet++) consume (B, C, H, W) natively; "flat" codecs work on
+    flattened (B, D).
     """
-    if isinstance(codec, BottleNetPPCodec):
+    if getattr(codec, "feature_layout", "flat") == "nchw":
         payload = codec.encode(params, Z)
         return codec.decode(params, payload)
     shape = Z.shape

@@ -25,8 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import codecs
 from repro.configs.base import ModelConfig, get_config
-from repro.core import codec as codec_lib
 from repro.data.pipeline import SHAPES, input_specs
 from repro.launch import mesh as mesh_lib
 from repro.models import lm as lm_lib
@@ -48,20 +48,22 @@ def shape_adjusted_config(arch: str, shape_name: str) -> ModelConfig | None:
     return cfg
 
 
-def make_codec(cfg: ModelConfig, shape_name: str, kind: str, R: int,
+def make_codec(cfg: ModelConfig, shape_name: str, codec_spec: str, R: int,
                quant_bits=None, unitary=False):
-    if kind == "none":
+    """Build the cut-layer codec from a registry spec string ("none" = off)."""
+    if codec_spec in (None, "", "none"):
         return None, None
-    spec = SHAPES[shape_name]
-    B = spec["global_batch"]
-    if spec["kind"] == "decode":
+    shape = SHAPES[shape_name]
+    B = shape["global_batch"]
+    if shape["kind"] == "decode":
         D = cfg.d_model
     else:
         # cut-layer feature per sample = (S_total, d_model) flattened
-        D = spec["seq_len"] * cfg.d_model
-    R = min(R, B) if B >= 2 else 1
-    c = codec_lib.C3SLCodec(R=R, D=D, backend="fft", quant_bits=quant_bits,
-                            unitary=unitary)
+        D = shape["seq_len"] * cfg.d_model
+    codec_spec = codecs.apply_quant_bits(codec_spec, quant_bits)
+    c = codecs.clamp_R(
+        codecs.build(codec_spec, R=R, D=D, backend="fft", unitary=unitary),
+        B if B >= 2 else 1)
     return c, jax.eval_shape(lambda: c.init(jax.random.PRNGKey(0)))
 
 
@@ -349,11 +351,13 @@ def pipeline_dryrun(arch: str, *, R: int = 4, quant_bits=None, unitary=False,
     D_flat = S * cfg.d_model
 
     if codec_kind == "none":
-        codec = codec_lib.IdentityCodec(D=D_flat)
+        codec = codecs.build("identity", D=D_flat)
         codec_params = {}
     else:
-        codec = codec_lib.C3SLCodec(R=min(R, mb), D=D_flat, backend="fft",
-                                    quant_bits=quant_bits, unitary=unitary)
+        spec = codecs.apply_quant_bits(codec_kind, quant_bits)
+        codec = codecs.clamp_R(
+            codecs.build(spec, R=R, D=D_flat, backend="fft", unitary=unitary),
+            mb)
         codec_params = jax.eval_shape(lambda: codec.init(jax.random.PRNGKey(0)))
 
     # f32 params: XLA:CPU's AllReducePromotion pass crashes on the bf16
@@ -430,7 +434,8 @@ def main():
     ap.add_argument("--arch")
     ap.add_argument("--shape", choices=list(SHAPES))
     ap.add_argument("--mesh", choices=["single", "multi"], default="single")
-    ap.add_argument("--codec", choices=["none", "c3sl"], default="none")
+    ap.add_argument("--codec", default="none",
+                    help="registry spec, e.g. 'c3sl:R=4|int8' (see repro.codecs)")
     ap.add_argument("--R", type=int, default=4)
     ap.add_argument("--quant", type=int, default=None)
     ap.add_argument("--unitary", action="store_true")

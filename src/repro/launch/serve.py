@@ -5,7 +5,7 @@ integration (cut-layer features compressed batch-wise across the decode
 batch).
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
-        --batch 8 --steps 32 --codec c3sl --R 4
+        --batch 8 --steps 32 --codec "c3sl:R=4"
 """
 from __future__ import annotations
 
@@ -15,8 +15,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import codecs
 from repro.configs.base import get_config, reduced
-from repro.core import codec as codec_lib
 from repro.models import lm as lm_lib
 
 
@@ -27,8 +27,10 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=256)
-    ap.add_argument("--codec", choices=["none", "c3sl"], default="none")
-    ap.add_argument("--R", type=int, default=4)
+    ap.add_argument("--codec", default="none",
+                    help="registry spec, e.g. 'c3sl:R=4|int8' (see repro.codecs)")
+    ap.add_argument("--R", type=int, default=4,
+                    help="default R for specs that omit it")
     ap.add_argument("--quant-kv", action="store_true",
                     help="int8 KV cache (2x less cache HBM)")
     ap.add_argument("--seed", type=int, default=0)
@@ -45,8 +47,9 @@ def main():
     params = lm_lib.init_lm_params(rng, cfg)
 
     codec = codec_params = None
-    if args.codec == "c3sl":
-        codec = codec_lib.C3SLCodec(R=min(args.R, args.batch), D=cfg.d_model)
+    if args.codec != "none":
+        codec = codecs.clamp_R(
+            codecs.build(args.codec, D=cfg.d_model, R=args.R), args.batch)
         codec_params = codec.init(jax.random.PRNGKey(7))
 
     fe = None
@@ -75,7 +78,8 @@ def main():
     dt = time.time() - t0
     seq = jnp.concatenate(outs, axis=1)
     print(f"arch={cfg.name} batch={args.batch} steps={args.steps} "
-          f"codec={args.codec} R={getattr(codec, 'R', 1)}")
+          f"codec={codec.spec() if codec is not None else 'none'} "
+          f"R={getattr(codec, 'R', 1)}")
     print(f"decoded {args.steps} tokens/seq in {dt:.2f}s "
           f"({args.batch*args.steps/dt:.1f} tok/s total)")
     print("sample token ids:", seq[0, :16].tolist())

@@ -1,9 +1,14 @@
 """Training driver (runs for real on whatever devices exist; CPU-friendly).
 
 Examples:
-    # reduced-config LM training with the C3-SL boundary codec
+    # reduced-config LM training with the C3-SL boundary codec (registry
+    # spec string; see repro.codecs for the grammar)
     PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --reduced \
-        --steps 50 --batch 16 --seq 128 --codec c3sl --R 4
+        --steps 50 --batch 16 --seq 128 --codec "c3sl:R=4"
+
+    # int8 wire format composed behind the HRR transform
+    PYTHONPATH=src python -m repro.launch.train --reduced --steps 2 \
+        --codec "c3sl:R=4|int8"
 
     # 2-stage pod pipeline on a host mesh (needs >= 2 devices: set
     # XLA_FLAGS=--xla_force_host_platform_device_count=2)
@@ -18,9 +23,9 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import codecs
 from repro.checkpoint import save_checkpoint
 from repro.configs.base import get_config, reduced
-from repro.core import codec as codec_lib
 from repro.core import split as split_lib
 from repro.data.pipeline import SyntheticTokenDataset, make_batch_iterator
 from repro.launch import mesh as mesh_lib
@@ -28,10 +33,20 @@ from repro.models import lm as lm_lib
 from repro.optim import adamw, apply_updates, clip_by_global_norm
 
 
-def make_codec(kind: str, R: int, D: int, quant=None, unitary=False):
-    if kind == "none":
+def make_codec(spec: str, D: int, *, R: int = 4, quant=None, unitary=False,
+               max_R: int | None = None):
+    """Build (codec, params) from a registry spec string.
+
+    ``spec == "none"`` means no codec at all.  The legacy --R/--quant/
+    --unitary flags act as defaults for spec-omitted fields (explicit spec
+    args win; --quant 8 appends the int8 wire stage).
+    """
+    if spec in (None, "", "none"):
         return None, None
-    codec = codec_lib.C3SLCodec(R=R, D=D, quant_bits=quant, unitary=unitary)
+    spec = codecs.apply_quant_bits(spec, quant)
+    codec = codecs.build(spec, D=D, R=R, unitary=unitary)
+    if max_R is not None:
+        codec = codecs.clamp_R(codec, max_R)
     return codec, codec.init(jax.random.PRNGKey(7))
 
 
@@ -40,8 +55,9 @@ def run_standard(args, cfg):
     params = lm_lib.init_lm_params(rng, cfg)
     opt = adamw(args.lr)
     opt_state = opt.init(params)
-    codec, codec_params = make_codec(args.codec, args.R, args.seq * cfg.d_model,
-                                     args.quant, args.unitary)
+    codec, codec_params = make_codec(args.codec, args.seq * cfg.d_model,
+                                     R=args.R, quant=args.quant,
+                                     unitary=args.unitary)
 
     @jax.jit
     def step_fn(params, opt_state, batch):
@@ -89,16 +105,14 @@ def run_pipeline(args, cfg):
 
     rng = jax.random.PRNGKey(args.seed)
     full = lm_lib.init_lm_params(rng, cfg)
-    codec, codec_params = make_codec(
-        args.codec, args.R, (args.seq * cfg.d_model) // 1, args.quant, args.unitary)
-    if codec is None:
-        codec = codec_lib.IdentityCodec(D=args.seq * cfg.d_model)
-        codec_params = {}
-    # microbatch feature dim: (mb, S, d) flattened per sample
+    # R is clamped to the microbatch size BEFORE init so the key shapes match
     mb = args.batch // args.microbatches
-    import dataclasses
-    if isinstance(codec, codec_lib.C3SLCodec):
-        codec = dataclasses.replace(codec, R=min(codec.R, mb))
+    codec, codec_params = make_codec(
+        args.codec, args.seq * cfg.d_model, R=args.R, quant=args.quant,
+        unitary=args.unitary, max_R=mb)
+    if codec is None:
+        codec = codecs.build("identity", D=args.seq * cfg.d_model)
+        codec_params = {}
 
     params = {
         "embed": {"embed": full["embed"]},
@@ -140,16 +154,19 @@ def run_pipeline(args, cfg):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default="deepseek-7b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--codec", choices=["none", "c3sl"], default="none")
-    ap.add_argument("--R", type=int, default=4)
-    ap.add_argument("--quant", type=int, default=None)
+    ap.add_argument("--codec", default="none",
+                    help="registry spec, e.g. 'c3sl:R=4|int8' (see repro.codecs)")
+    ap.add_argument("--R", type=int, default=4,
+                    help="default R for specs that omit it")
+    ap.add_argument("--quant", type=int, default=None,
+                    help="8 appends the int8 wire stage to the spec")
     ap.add_argument("--unitary", action="store_true")
     ap.add_argument("--pipeline", action="store_true")
     ap.add_argument("--microbatches", type=int, default=4)

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import codecs as codecs_lib
 from repro.configs.base import ModelConfig
 from repro.models import lm as lm_lib
 
@@ -46,6 +47,19 @@ class BatchedEngine:
                  max_len: int = 256, eos_id: int | None = None,
                  codec=None, codec_params=None, greedy: bool = True,
                  seed: int = 0):
+        # `codec` may be a ready codec object or a registry spec string
+        # (e.g. "c3sl:R=4|int8"); specs are built against the decode cut
+        # layer (D = d_model) and clamped to the slot count.  "none" means
+        # codec off, matching the launch CLIs.
+        if isinstance(codec, str):
+            if codec == "none":
+                codec = codec_params = None
+            else:
+                codec = codecs_lib.clamp_R(
+                    codecs_lib.build(codec, D=cfg.d_model), num_slots)
+                if codec_params is None:
+                    codec_params = codec.init(jax.random.PRNGKey(seed))
+        self.codec = codec
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots

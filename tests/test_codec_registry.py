@@ -1,0 +1,206 @@
+"""repro.codecs registry tests: spec round-trip, error paths, Chain
+accounting, wire stages, and protocol-level dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import codecs
+from repro.codecs import Chain, build
+
+
+# --------------------------------------------------------------------------
+# spec strings
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    "identity:D=64",
+    "c3sl:R=4,D=256",
+    "c3sl:R=8,D=256,backend=direct",
+    "c3sl:R=4,D=256,unitary=true",
+    "c3sl:R=4,D=256,backend=pallas,key_seed=3",
+    "dense:R=4,D=128",
+    "bnpp:R=4,C=64,H=8,W=8",
+    "c3sl:R=4,D=256|int8",
+    "c3sl:R=4,D=512|topk:ratio=0.1",
+    "c3sl:R=2,D=128|topk:k=16|int8",
+    "identity:D=32|noop",
+])
+def test_spec_string_roundtrip(spec):
+    assert build(spec).spec() == spec
+
+
+def test_build_defaults_fill_runtime_dims():
+    c = build("c3sl:R=8,backend=fft|int8", D=4096)
+    assert c.R == 8 and c.D == 4096
+    # explicit spec args win over defaults
+    c = build("c3sl:R=8,D=64", D=4096, R=2)
+    assert c.R == 8 and c.D == 64
+    # defaults a stage doesn't declare are ignored
+    build("identity", D=64, R=4, unitary=False)
+
+
+def test_every_registered_transform_buildable_from_spec():
+    for name in codecs.available()["transform"]:
+        c = build(name, D=64, R=2, C=16, H=4, W=4)
+        assert c.spec().startswith(c.spec_name)
+        assert c.feature_layout in ("flat", "nchw")
+
+
+def test_unknown_name_and_bad_args_raise():
+    with pytest.raises(ValueError, match="unknown transform"):
+        build("nope:R=4")
+    with pytest.raises(ValueError, match="bogus"):
+        build("c3sl:R=4,D=64,bogus=1")
+    with pytest.raises(ValueError, match="missing required"):
+        build("c3sl:R=4")
+    with pytest.raises(ValueError, match="unknown wire stage"):
+        build("c3sl:R=4,D=64|whatever")
+    with pytest.raises(ValueError, match="unknown transform"):
+        build("int8")  # wire stage can't lead a spec
+    with pytest.raises(ValueError, match="malformed"):
+        build("c3sl:R4,D=64")
+    with pytest.raises(ValueError):
+        build("dense:R=3,D=64")  # D % R != 0 -> dataclass validation
+    with pytest.raises(ValueError):
+        build("c3sl:R=4,D=64,backend=cuda")
+
+
+def test_codecspec_is_serializable_both_ways():
+    spec = codecs.CodecSpec.parse("c3sl:R=4,unitary=true,backend=direct")
+    assert spec.name == "c3sl"
+    assert spec.args == {"R": 4, "unitary": True, "backend": "direct"}
+    assert codecs.CodecSpec.parse(str(spec)) == spec
+
+
+# --------------------------------------------------------------------------
+# Chain accounting
+# --------------------------------------------------------------------------
+
+def test_chain_int8_matches_old_inlined_quant_numbers():
+    B, R, D = 8, 4, 256
+    c = build(f"c3sl:R={R},D={D}|int8")
+    assert isinstance(c, Chain)
+    # the numbers the inlined quant_bits=8 codec used to report
+    assert c.wire_bytes(B) == (B // R) * D * 1 + 4 * (B // R)
+    assert c.flops(B) == 2 * B * D * D
+    assert c.param_count() == R * D
+    assert c.payload_shape(B) == (B // R, D)
+    # and the legacy shim constructor agrees exactly
+    from repro.core.codec import C3SLCodec as legacy
+    l = legacy(R=R, D=D, quant_bits=8)
+    assert (l.wire_bytes(B), l.flops(B), l.param_count()) == \
+        (c.wire_bytes(B), c.flops(B), c.param_count())
+
+
+def test_chain_roundtrip_shapes_and_ste_gradient():
+    c = build("c3sl:R=4,D=256|int8")
+    p = c.init(jax.random.PRNGKey(0))
+    Z = jax.random.normal(jax.random.PRNGKey(1), (8, 256))
+    S = c.encode(p, Z)
+    assert S.shape == (2, 256)
+    assert c.decode(p, S).shape == Z.shape
+    g = jax.grad(lambda z: (c.decode(p, c.encode(p, z)) ** 2).sum())(Z)
+    assert np.isfinite(np.asarray(g)).all()
+    assert np.abs(np.asarray(g)).sum() > 0
+
+
+def test_chain_delegates_protocol_surface():
+    c = build("c3sl:R=2,D=64|int8")
+    assert c.R == 2 and c.D == 64
+    assert c.feature_layout == "flat"
+    # noop wire keeps the f32 byte accounting of the bare transform
+    bare = build("c3sl:R=2,D=64")
+    assert build("c3sl:R=2,D=64|noop").wire_bytes(8) == bare.wire_bytes(8)
+
+
+def test_topk_wire_mask_encoded_accounting():
+    c = build("c3sl:R=2,D=512|topk:k=32")
+    G = 8 // 2
+    # per payload row: D-bit mask + k f32 values
+    assert c.wire_bytes(8) == G * (512 // 8 + 4 * 32)
+    p = c.init(jax.random.PRNGKey(0))
+    Z = jax.random.normal(jax.random.PRNGKey(1), (8, 512))
+    S = c.encode(p, Z)
+    nz = (np.asarray(S) != 0).sum(axis=-1)
+    assert nz.max() <= 32  # exact-k even under magnitude ties
+    g = jax.grad(lambda z: (c.encode(p, z) ** 2).sum())(Z)
+    assert np.abs(np.asarray(g)).sum() > 0  # straight-through
+
+
+def test_topk_ratio_and_validation():
+    t = codecs.TopKSparsify(ratio=0.25)
+    assert t.wire_bytes((4, 64)) == 4 * (8 + 4 * 16)
+    with pytest.raises(ValueError):
+        codecs.TopKSparsify(ratio=0.0)
+    with pytest.raises(ValueError):
+        codecs.TopKSparsify(k=-1)
+
+
+def test_topk_exact_k_under_ties():
+    # tied magnitudes must not inflate the payload past k values/row
+    x = jnp.array([[3.0, 3.0, 3.0, 1.0]])
+    out = np.asarray(codecs.TopKSparsify(k=2).apply(x))
+    assert (out != 0).sum() == 2
+
+
+def test_apply_quant_bits_helper():
+    assert codecs.apply_quant_bits("c3sl:R=4", None) == "c3sl:R=4"
+    assert codecs.apply_quant_bits("c3sl:R=4", 8) == "c3sl:R=4|int8"
+    # idempotent when the spec already names the stage
+    assert codecs.apply_quant_bits("c3sl:R=4|int8", 8) == "c3sl:R=4|int8"
+    with pytest.raises(ValueError, match="only int8"):
+        codecs.apply_quant_bits("c3sl:R=4", 4)
+
+
+# --------------------------------------------------------------------------
+# protocol dispatch + helpers
+# --------------------------------------------------------------------------
+
+def test_apply_codec_dispatches_on_feature_layout_not_isinstance():
+    from repro.core.split import apply_codec
+    rng = jax.random.PRNGKey(0)
+    conv = build("bnpp:R=4,C=16,H=4,W=4")
+    assert conv.feature_layout == "nchw"
+    Z = jax.random.normal(rng, (4, 16, 4, 4))
+    assert apply_codec(conv, conv.init(rng), Z).shape == Z.shape
+    flat = build("c3sl:R=2,D=64")
+    Zf = jax.random.normal(rng, (4, 2, 32))  # flattened per-sample to (4, 64)
+    assert apply_codec(flat, flat.init(rng), Zf).shape == Zf.shape
+
+
+def test_clamp_R_rebuilds_through_chain():
+    c = codecs.clamp_R(build("c3sl:R=8,D=64|int8"), 2)
+    assert c.R == 2 and c.spec() == "c3sl:R=2,D=64|int8"
+    # no-ops: already small enough, or no R field
+    assert codecs.clamp_R(build("c3sl:R=2,D=64"), 4).R == 2
+    assert codecs.clamp_R(build("identity:D=64"), 1).spec() == "identity:D=64"
+
+
+def test_sequence_group_encode_validates_divisibility():
+    c = build("c3sl:R=4,D=32")
+    p = c.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="not divisible by R=4"):
+        codecs.sequence_group_encode(c, p, jnp.zeros((1, 63, 32)))
+    payload = codecs.sequence_group_encode(
+        c, p, jax.random.normal(jax.random.PRNGKey(1), (1, 64, 32)))
+    assert payload.shape == (16, 32)
+
+
+def test_engine_accepts_spec_strings():
+    from repro.configs.base import get_config, reduced
+    from repro.models import lm as lm_lib
+    from repro.serving.engine import BatchedEngine, Request
+    cfg = reduced(get_config("deepseek-7b"), num_layers=2, d_model=64,
+                  d_ff=128, vocab_size=64, num_heads=2, num_kv_heads=1,
+                  head_dim=32)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    eng = BatchedEngine(params, cfg, num_slots=2, max_len=16,
+                        codec="c3sl:R=2|int8")
+    assert eng.codec.spec() == "c3sl:R=2,D=64|int8"
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=2))
+    done = eng.run(max_steps=32)
+    assert len(done) == 1 and len(done[0].out) >= 1
+    # "none" means codec off, matching the launch CLIs
+    assert BatchedEngine(params, cfg, num_slots=2, max_len=16,
+                         codec="none").codec is None

@@ -12,7 +12,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import hrr
 
