@@ -56,14 +56,17 @@ def back(p, z):
 
 def run_one(codec, codec_params_init, steps=300, batch=64, lr=1e-3, seed=0):
     rng = jax.random.PRNGKey(seed)
-    params = {"net": init_small_convnet(rng), "codec": codec_params_init}
+    # codec params are fixed (random keys, stop_gradient — the paper's whole
+    # memory claim), so they stay OUT of the optimized tree
+    codec_params = codec_params_init
+    params = {"net": init_small_convnet(rng)}
     opt = adam(lr)
     opt_state = opt.init(params)
     data = SyntheticImageDataset(n_classes=10, seed=seed)
 
     def loss_fn(p, batch_):
         z = front(p["net"], batch_["x"])
-        zhat = apply_codec(codec, p["codec"], z) if codec is not None else z
+        zhat = apply_codec(codec, codec_params, z) if codec is not None else z
         logits = back(p["net"], zhat)
         logp = jax.nn.log_softmax(logits)
         return -logp[jnp.arange(batch_["y"].shape[0]), batch_["y"]].mean()
@@ -81,7 +84,7 @@ def run_one(codec, codec_params_init, steps=300, batch=64, lr=1e-3, seed=0):
     @jax.jit
     def acc_fn(params, batch_):
         z = front(params["net"], batch_["x"])
-        zhat = apply_codec(codec, params["codec"], z) if codec is not None else z
+        zhat = apply_codec(codec, codec_params, z) if codec is not None else z
         logits = back(params["net"], zhat)
         return (jnp.argmax(logits, -1) == batch_["y"]).mean()
 

@@ -1,0 +1,143 @@
+"""Serving throughput benchmark: chunked prefill + device-resident stepping
+vs the prefill-as-decode baseline.
+
+Measures end-to-end tokens/s of the continuous-batching engine on a
+prompt-heavy and a decode-heavy request mix, at several codec specs, in
+both engine modes, and writes ``BENCH_serving.json`` so later perf PRs
+have a recorded trajectory to beat.  See benchmarks/README.md for the
+protocol and the JSON schema.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import numpy as np
+
+MIXES = {
+    # name: (prompt_len, max_new_tokens) — prompt-heavy is where chunked
+    # prefill pays off (O(L/C) dispatches instead of O(L)); decode-heavy
+    # isolates the device-resident stepping + batched EOS fetches.
+    "prompt_heavy": (64, 8),
+    "decode_heavy": (8, 48),
+}
+SMOKE_MIXES = {"prompt_heavy": (16, 2), "decode_heavy": (4, 6)}
+
+CODECS = ["none", "c3sl:R=4", "c3sl:R=4|int8"]
+SMOKE_CODECS = ["none", "c3sl:R=2"]
+
+
+def _build(smoke: bool):
+    from repro.configs.base import get_config, reduced
+    from repro.models import lm as lm_lib
+    cfg = reduced(get_config("deepseek-7b"), num_layers=2, d_model=128,
+                  d_ff=256, vocab_size=256, num_heads=4, num_kv_heads=2,
+                  head_dim=32)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _run_once(cfg, params, *, mode, codec, prompt_len, max_new, requests,
+              num_slots, max_len, chunk_size, sync_every, seed=0):
+    from repro.serving.engine import BatchedEngine, Request
+    eng = BatchedEngine(params, cfg, num_slots=num_slots, max_len=max_len,
+                        codec=codec, greedy=True, seed=seed,
+                        prefill_mode=mode, chunk_size=chunk_size,
+                        sync_every=sync_every)
+    rng = np.random.RandomState(seed + 1)
+
+    def batch(n, uid0):
+        return [Request(uid=uid0 + i,
+                        prompt=list(map(int, rng.randint(1, cfg.vocab_size,
+                                                         prompt_len))),
+                        max_new_tokens=max_new) for i in range(n)]
+
+    # warmup: compile every program (prefill, fused step, reset) off the clock
+    for r in batch(min(2, requests), 10_000):
+        eng.submit(r)
+    eng.run()
+    eng.finished.clear()
+
+    reqs = batch(requests, 0)
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.time()
+    done = eng.run()
+    wall = time.time() - t0
+    assert len(done) == requests, (len(done), requests)
+    generated = sum(len(r.out) for r in done)
+    total = generated + requests * prompt_len
+    return {"wall_s": round(wall, 4),
+            "prompt_tokens": requests * prompt_len,
+            "generated_tokens": generated,
+            "tokens_per_s": round(total / wall, 1)}
+
+
+def main(smoke: bool = False, out: str = "BENCH_serving.json",
+         chunk_size: int = 16):
+    cfg, params = _build(smoke)
+    mixes = SMOKE_MIXES if smoke else MIXES
+    codecs = SMOKE_CODECS if smoke else CODECS
+    requests = 2 if smoke else 8
+    num_slots = 2 if smoke else 4
+    max_len = 32 if smoke else 128
+    sync_every = 4 if smoke else 8
+
+    results = []
+    for mix, (prompt_len, max_new) in mixes.items():
+        for spec in codecs:
+            per_mode = {}
+            for mode in ("decode", "chunked"):
+                r = _run_once(cfg, params, mode=mode, codec=spec,
+                              prompt_len=prompt_len, max_new=max_new,
+                              requests=requests, num_slots=num_slots,
+                              max_len=max_len, chunk_size=chunk_size,
+                              sync_every=sync_every)
+                per_mode[mode] = r
+                results.append({"mix": mix, "codec": spec, "mode": mode,
+                                "chunk_size": chunk_size if mode == "chunked" else 1,
+                                "sync_every": sync_every if mode == "chunked" else 1,
+                                "requests": requests, "num_slots": num_slots,
+                                **r})
+            speedup = (per_mode["chunked"]["tokens_per_s"]
+                       / per_mode["decode"]["tokens_per_s"])
+            results[-1]["speedup_vs_decode"] = round(speedup, 2)
+            print(f"{mix:13s} codec={spec:16s} "
+                  f"decode={per_mode['decode']['tokens_per_s']:8.1f} tok/s  "
+                  f"chunked={per_mode['chunked']['tokens_per_s']:8.1f} tok/s  "
+                  f"({speedup:.2f}x)", flush=True)
+
+    payload = {
+        "protocol": {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "host": platform.platform(),
+            "device": jax.devices()[0].platform,
+            "jax": jax.__version__,
+            "smoke": smoke,
+        },
+        "arch": {"name": cfg.name, "num_layers": cfg.num_layers,
+                 "d_model": cfg.d_model, "d_ff": cfg.d_ff,
+                 "vocab_size": cfg.vocab_size},
+        "mixes": {k: {"prompt_len": v[0], "max_new_tokens": v[1]}
+                  for k, v in mixes.items()},
+        "results": results,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (seconds, not minutes)")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--chunk-size", type=int, default=16)
+    args = ap.parse_args()
+    main(smoke=args.smoke, out=args.out, chunk_size=args.chunk_size)

@@ -17,13 +17,16 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_codec_latency, bench_comm,
-                            bench_roofline, bench_table1, bench_table2)
+                            bench_roofline, bench_serving, bench_table1,
+                            bench_table2)
 
     sections = [
         ("table2_formulas", bench_table2.main),
         ("table1_columns", bench_table1.main),
         ("comm_bytes", bench_comm.main),
         ("codec_latency", bench_codec_latency.main),
+        # --fast runs the smoke variant (seconds); both write BENCH_serving.json
+        ("serving_throughput", lambda: bench_serving.main(smoke=args.fast)),
     ]
     for name, fn in sections:
         print(f"\n==== {name} ====", flush=True)

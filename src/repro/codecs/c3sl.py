@@ -41,8 +41,14 @@ class C3SLCodec(SpecMixin):
 
     def init(self, rng=None):
         rng = rng if rng is not None else jax.random.PRNGKey(self.key_seed)
-        return {"keys": hrr.generate_keys(rng, self.R, self.D,
-                                          unitary=self.unitary)}
+        keys = hrr.generate_keys(rng, self.R, self.D, unitary=self.unitary)
+        params = {"keys": keys}
+        if self.backend == "fft":
+            # cache F(K) so every encode/decode (and the custom-VJP backward,
+            # which is again an HRR op with the same keys) transforms only
+            # the activations — the keys are fixed, their spectrum is too
+            params["keys_fft"] = hrr.key_spectrum(keys)
+        return params
 
     def _group(self, Z):
         B, D = Z.shape
@@ -54,10 +60,12 @@ class C3SLCodec(SpecMixin):
 
     def encode(self, params, Z):
         return hrr.bind_superpose(self._group(Z), params["keys"],
-                                  backend=self.backend)
+                                  backend=self.backend,
+                                  K_fft=params.get("keys_fft"))
 
     def decode(self, params, payload):
-        Zhat = hrr.unbind(payload, params["keys"], backend=self.backend)
+        Zhat = hrr.unbind(payload, params["keys"], backend=self.backend,
+                          K_fft=params.get("keys_fft"))
         G, R, D = Zhat.shape
         return Zhat.reshape(G * R, D)
 

@@ -104,7 +104,15 @@ def circ_corr_direct(a: jax.Array, b: jax.Array) -> jax.Array:
 # Grouped encode / decode (the paper's Algorithm 1 inner loop, vectorized)
 # --------------------------------------------------------------------------
 
-def _bind_impl(Z, K, backend):
+def key_spectrum(K: jax.Array) -> jax.Array:
+    """rfft(K) along the last axis — precompute once at codec init and pass
+    as ``K_fft`` so the fft backend never re-transforms the fixed keys
+    (forward OR custom-VJP backward; the keys' spectrum is half each op's
+    FFT work otherwise)."""
+    return jnp.fft.rfft(_fft_safe(K), axis=-1)
+
+
+def _bind_impl(Z, K, KF, backend):
     if backend == "fft":
         # superpose in the Fourier domain: S = irfft(sum_i F(K_i) . F(Z_i)).
         # One irfft of (..., D) instead of R of them — fewer FFTs than the
@@ -112,7 +120,7 @@ def _bind_impl(Z, K, backend):
         # contiguous tensor (XLA:CPU's FFT thunk requires row-major input).
         D = Z.shape[-1]
         dt = Z.dtype
-        fk = jnp.fft.rfft(_fft_safe(K), axis=-1)
+        fk = KF if KF is not None else key_spectrum(K)
         fz = jnp.fft.rfft(_fft_safe(Z), axis=-1)
         return jnp.fft.irfft((fk * fz).sum(axis=-2), n=D, axis=-1).astype(dt)
     if backend == "direct":
@@ -120,11 +128,11 @@ def _bind_impl(Z, K, backend):
     raise ValueError(f"unknown backend {backend!r}")
 
 
-def _unbind_impl(S, K, backend):
+def _unbind_impl(S, K, KF, backend):
     if backend == "fft":
         D = S.shape[-1]
         dt = S.dtype
-        fk = jnp.fft.rfft(_fft_safe(K), axis=-1)
+        fk = KF if KF is not None else key_spectrum(K)
         fs = jnp.fft.rfft(_fft_safe(S), axis=-1)
         prod = jnp.conj(fk) * fs[..., None, :]
         return jnp.fft.irfft(prod, n=D, axis=-1).astype(dt)
@@ -140,60 +148,74 @@ def _unbind_impl(S, K, backend):
 # FFT thunk rejects non-row-major operands that autodiff-generated FFTs can
 # otherwise receive).
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _bind_vjp(Z, K, backend):
-    return _bind_impl(Z, K, backend)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _bind_vjp(Z, K, KF, backend):
+    return _bind_impl(Z, K, KF, backend)
 
 
-def _bind_fwd(Z, K, backend):
-    return _bind_impl(Z, K, backend), K
+def _bind_fwd(Z, K, KF, backend):
+    return _bind_impl(Z, K, KF, backend), (K, KF)
 
 
-def _bind_bwd(backend, K, dS):
-    return _unbind_impl(dS, K, backend), None
+def _bind_bwd(backend, res, dS):
+    K, KF = res
+    return _unbind_impl(dS, K, KF, backend), None, None
 
 
 _bind_vjp.defvjp(_bind_fwd, _bind_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _unbind_vjp(S, K, backend):
-    return _unbind_impl(S, K, backend)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _unbind_vjp(S, K, KF, backend):
+    return _unbind_impl(S, K, KF, backend)
 
 
-def _unbind_fwd(S, K, backend):
-    return _unbind_impl(S, K, backend), K
+def _unbind_fwd(S, K, KF, backend):
+    return _unbind_impl(S, K, KF, backend), (K, KF)
 
 
-def _unbind_bwd(backend, K, dZhat):
-    return _bind_impl(dZhat, K, backend), None
+def _unbind_bwd(backend, res, dZhat):
+    K, KF = res
+    return _bind_impl(dZhat, K, KF, backend), None, None
 
 
 _unbind_vjp.defvjp(_unbind_fwd, _unbind_bwd)
 
 
-def bind_superpose(Z: jax.Array, K: jax.Array, backend: str = "fft") -> jax.Array:
+def bind_superpose(Z: jax.Array, K: jax.Array, backend: str = "fft",
+                   K_fft: jax.Array | None = None) -> jax.Array:
     """Encode a group: Z (..., R, D) + keys K (R, D) -> S (..., D).
 
     S = sum_i K_i (*) Z_i.  Keys take no gradient (paper Sec. 3.1).
+    ``K_fft`` (from :func:`key_spectrum`) skips the keys' rfft in the fft
+    backend — forward and backward both transform only activations.
     """
     K = jax.lax.stop_gradient(K)
     if backend == "pallas":
         from repro.kernels import ops as kops
         return kops.bind_superpose_pallas(Z, K)
-    return _bind_vjp(Z, K, backend)
+    if K_fft is not None and backend == "fft":
+        K_fft = jax.lax.stop_gradient(K_fft)
+    else:
+        K_fft = None
+    return _bind_vjp(Z, K, K_fft, backend)
 
 
-def unbind(S: jax.Array, K: jax.Array, backend: str = "fft") -> jax.Array:
+def unbind(S: jax.Array, K: jax.Array, backend: str = "fft",
+           K_fft: jax.Array | None = None) -> jax.Array:
     """Decode a group: S (..., D) + keys K (R, D) -> Zhat (..., R, D).
 
-    Zhat_i = K_i (.) S.
+    Zhat_i = K_i (.) S.  ``K_fft`` as in :func:`bind_superpose`.
     """
     K = jax.lax.stop_gradient(K)
     if backend == "pallas":
         from repro.kernels import ops as kops
         return kops.unbind_pallas(S, K)
-    return _unbind_vjp(S, K, backend)
+    if K_fft is not None and backend == "fft":
+        K_fft = jax.lax.stop_gradient(K_fft)
+    else:
+        K_fft = None
+    return _unbind_vjp(S, K, K_fft, backend)
 
 
 def retrieval_snr(Z: jax.Array, Zhat: jax.Array) -> jax.Array:

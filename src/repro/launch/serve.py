@@ -1,4 +1,5 @@
-"""Batched serving driver: prefill-free cache init + token-by-token decode.
+"""Batched serving driver: lockstep decode loop, or the full
+continuous-batching engine with chunked prefill (--engine).
 
 Runs for real on CPU with reduced configs; demonstrates the C3-SL serving
 integration (cut-layer features compressed batch-wise across the decode
@@ -6,6 +7,10 @@ batch).
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
         --batch 8 --steps 32 --codec "c3sl:R=4"
+
+    PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \
+        --engine --requests 16 --prompt-len 64 --max-new 16 \
+        --chunk-size 16 --codec "c3sl:R=4|int8"
 """
 from __future__ import annotations
 
@@ -18,6 +23,39 @@ import jax.numpy as jnp
 from repro import codecs
 from repro.configs.base import get_config, reduced
 from repro.models import lm as lm_lib
+
+
+def _run_engine(cfg, params, args):
+    """Continuous batching: chunked prefill + device-resident stepping."""
+    from repro.serving.engine import BatchedEngine, Request
+    codec = None
+    if args.codec != "none":
+        # same spec defaults as the lockstep path: --R fills specs omitting R
+        codec = codecs.clamp_R(
+            codecs.build(args.codec, D=cfg.d_model, R=args.R), args.batch)
+    eng = BatchedEngine(params, cfg, num_slots=args.batch,
+                        max_len=args.cache_len, codec=codec,
+                        codec_params=(codec.init(jax.random.PRNGKey(7))
+                                      if codec is not None else None),
+                        greedy=args.greedy, seed=args.seed,
+                        prefill_mode=args.prefill_mode,
+                        chunk_size=args.chunk_size, sync_every=args.sync_every)
+    rng = jax.random.PRNGKey(args.seed + 1)
+    prompts = jax.random.randint(rng, (args.requests, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    for u, p in enumerate(prompts.tolist()):
+        eng.submit(Request(uid=u, prompt=p, max_new_tokens=args.max_new))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    gen = sum(len(r.out) for r in done)
+    total = gen + args.requests * args.prompt_len
+    print(f"arch={cfg.name} engine mode={args.prefill_mode} "
+          f"slots={args.batch} chunk={eng.chunk_size} sync={eng.sync_every} "
+          f"codec={eng.codec.spec() if eng.codec is not None else 'none'}")
+    print(f"{len(done)} requests ({args.requests * args.prompt_len} prompt + "
+          f"{gen} generated tokens) in {dt:.2f}s ({total / dt:.1f} tok/s)")
+    print("sample output:", done[0].out[:16])
 
 
 def main():
@@ -35,6 +73,18 @@ def main():
                     help="int8 KV cache (2x less cache HBM)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--greedy", action="store_true")
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine (chunked prefill + "
+                         "device-resident slot state) instead of the "
+                         "lockstep decode loop")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--sync-every", type=int, default=8)
+    ap.add_argument("--prefill-mode", choices=["chunked", "decode"],
+                    default="chunked",
+                    help="'decode' = legacy prefill-as-decode baseline")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -45,6 +95,10 @@ def main():
         cfg = dataclasses.replace(cfg, kv_cache_quant=True)
     rng = jax.random.PRNGKey(args.seed)
     params = lm_lib.init_lm_params(rng, cfg)
+
+    if args.engine:
+        _run_engine(cfg, params, args)
+        return
 
     codec = codec_params = None
     if args.codec != "none":

@@ -221,6 +221,72 @@ def apply_gqa_decode(p, x, cache, pos, *, num_heads, num_kv_heads, head_dim,
     return y, new_cache
 
 
+def apply_gqa_prefill(p, x, cache, pos, valid, *, num_heads, num_kv_heads,
+                      head_dim, rotary_dim, rope_theta=10000.0,
+                      sliding_window=None):
+    """Chunked prefill: ingest C tokens per row in ONE dispatch.
+
+    x (B,C,D); cache k/v (B,T,KV,hd) (T=window for SWA); pos (B,) per-row
+    start positions; valid (B,C) marks real tokens (False = ragged-tail
+    padding or rows not prefilling: no cache write, no attention
+    contribution).  Returns (y (B,C,D), new_cache).
+
+    Attention runs over [pre-chunk cache ; chunk keys] — never the
+    post-write cache — so ring buffers stay correct: a chunk write that
+    reuses a ring slot cannot shadow the old occupant some earlier query
+    should still see.  For SWA the chunk size must be <= T (each ring slot
+    written at most once per chunk).
+    """
+    B, C, D = x.shape
+    T = cache["k"].shape[1]
+    if sliding_window is not None and C > T:
+        raise ValueError(f"chunk size {C} exceeds ring-buffer length {T}")
+    q, k, v = _qkv(p, x, num_heads, num_kv_heads, head_dim)
+    pos = jnp.asarray(pos, jnp.int32)
+    qpos = pos[:, None] + jnp.arange(C, dtype=jnp.int32)         # (B,C) absolute
+    q = apply_rope(q, qpos, rotary_dim, rope_theta)
+    k = apply_rope(k, qpos, rotary_dim, rope_theta)
+
+    # pre-chunk cache validity: slot s last held absolute position
+    # last_s = (pos-1) - ((pos-1-s) mod T)  (< 0 => never written).  For a
+    # linear cache (T >= max_len) this reduces to last_s = s iff s < pos.
+    s_idx = jnp.arange(T, dtype=jnp.int32)
+    last = (pos[:, None] - 1) - ((pos[:, None] - 1 - s_idx) % T)  # (B,T)
+    m_cache = jnp.broadcast_to((last >= 0)[:, None, :], (B, C, T))
+    m_chunk = (qpos[:, :, None] >= qpos[:, None, :]) & valid[:, None, :]
+    if sliding_window is not None:
+        m_cache = m_cache & (last[:, None, :] > qpos[:, :, None] - sliding_window)
+        m_chunk = m_chunk & (qpos[:, None, :] > qpos[:, :, None] - sliding_window)
+    mask = jnp.concatenate([m_cache, m_chunk], axis=-1)[:, None]  # (B,1,C,T+C)
+
+    quant = "k_scale" in cache
+    if quant:
+        # dequantized *view* for the prefill matmuls (transient, prefill-only;
+        # the decode hot loop keeps streaming int8 via _sdpa_quant)
+        ck = (cache["k"].astype(jnp.float32) * cache["k_scale"]).astype(x.dtype)
+        cv = (cache["v"].astype(jnp.float32) * cache["v_scale"]).astype(x.dtype)
+    else:
+        ck, cv = cache["k"], cache["v"]
+    y = _sdpa(q, jnp.concatenate([ck, k], axis=1),
+              jnp.concatenate([cv, v], axis=1), mask) @ p["w_o"]
+
+    # write the chunk; padded tokens scatter to index T == out of bounds -> drop
+    slot = qpos % T if sliding_window is not None else qpos
+    slot = jnp.where(valid, slot, T)
+    b_idx = jnp.arange(B)[:, None]
+    if quant:
+        k_q, k_s = _quantize_kv(k)
+        v_q, v_s = _quantize_kv(v)
+        new_cache = {"k": cache["k"].at[b_idx, slot].set(k_q, mode="drop"),
+                     "v": cache["v"].at[b_idx, slot].set(v_q, mode="drop"),
+                     "k_scale": cache["k_scale"].at[b_idx, slot].set(k_s, mode="drop"),
+                     "v_scale": cache["v_scale"].at[b_idx, slot].set(v_s, mode="drop")}
+    else:
+        new_cache = {"k": cache["k"].at[b_idx, slot].set(k, mode="drop"),
+                     "v": cache["v"].at[b_idx, slot].set(v, mode="drop")}
+    return y, new_cache
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2 multi-head latent attention)
 # ---------------------------------------------------------------------------
@@ -306,3 +372,43 @@ def apply_mla_decode(p, x, cache, pos, *, num_heads, kv_lora_rank, qk_nope_dim,
     w_uv = p["w_uv"].reshape(kv_lora_rank, H, v_head_dim)
     out = jnp.einsum("bhl,lhv->bhv", o_c, w_uv).reshape(B, 1, H * v_head_dim)
     return out @ p["w_o"], {"c_kv": c_kv, "k_pe": k_pe}
+
+
+def apply_mla_prefill(p, x, cache, pos, valid, *, num_heads, kv_lora_rank,
+                      qk_nope_dim, qk_rope_dim, v_head_dim, rope_theta=10000.0):
+    """Chunked absorbed-matrices MLA prefill: C tokens per row, one dispatch.
+
+    x (B,C,D); cache c_kv (B,T,L) / k_pe (B,T,rope); pos (B,) start
+    positions; valid (B,C) as in apply_gqa_prefill.  Scores live in the
+    kv_lora space over [pre-chunk cache ; chunk latents].
+    """
+    B, C, _ = x.shape
+    H = num_heads
+    T = cache["c_kv"].shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    qpos = pos[:, None] + jnp.arange(C, dtype=jnp.int32)          # (B,C)
+    q_nope, q_rope, c_kv_new, k_pe_new = _mla_qc(
+        p, x, qpos, num_heads=H, qk_nope_dim=qk_nope_dim,
+        qk_rope_dim=qk_rope_dim, rope_theta=rope_theta)
+    c_all = jnp.concatenate([cache["c_kv"], c_kv_new], axis=1)    # (B,T+C,L)
+    pe_all = jnp.concatenate([cache["k_pe"], k_pe_new], axis=1)
+    w_uk = p["w_uk"].reshape(kv_lora_rank, H, qk_nope_dim)
+    q_eff = jnp.einsum("bchd,lhd->bchl", q_nope, w_uk)
+    scale = (qk_nope_dim + qk_rope_dim) ** -0.5
+    scores = (jnp.einsum("bchl,btl->bhct", q_eff, c_all)
+              + jnp.einsum("bchd,btd->bhct", q_rope, pe_all)).astype(jnp.float32)
+    scores = scores * scale
+    t_idx = jnp.arange(T, dtype=jnp.int32)
+    m_cache = jnp.broadcast_to((t_idx[None, :] < pos[:, None])[:, None, :],
+                               (B, C, T))
+    m_chunk = (qpos[:, :, None] >= qpos[:, None, :]) & valid[:, None, :]
+    mask = jnp.concatenate([m_cache, m_chunk], axis=-1)[:, None]  # (B,1,C,T+C)
+    probs = jax.nn.softmax(jnp.where(mask, scores, NEG_INF), axis=-1).astype(x.dtype)
+    o_c = jnp.einsum("bhct,btl->bchl", probs, c_all)
+    w_uv = p["w_uv"].reshape(kv_lora_rank, H, v_head_dim)
+    out = jnp.einsum("bchl,lhv->bchv", o_c, w_uv).reshape(B, C, H * v_head_dim)
+    idx = jnp.where(valid, qpos, T)                               # T -> dropped
+    b_idx = jnp.arange(B)[:, None]
+    new_cache = {"c_kv": cache["c_kv"].at[b_idx, idx].set(c_kv_new, mode="drop"),
+                 "k_pe": cache["k_pe"].at[b_idx, idx].set(k_pe_new, mode="drop")}
+    return out @ p["w_o"], new_cache

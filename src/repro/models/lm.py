@@ -223,6 +223,68 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
 
 
 # ---------------------------------------------------------------------------
+# serving (chunked prefill: C prompt tokens per dispatch)
+# ---------------------------------------------------------------------------
+
+def prefill_chunk(params, cache, tokens, pos, cfg: ModelConfig, *,
+                  codec=None, codec_params=None, valid=None):
+    """Ingest C prompt tokens per row in ONE dispatch (vs C decode dispatches).
+
+    tokens (B,C) int32; pos (B,) int32 per-row start positions; valid (B,C)
+    bool marks real tokens — False entries (ragged chunk tails, or rows that
+    are not prefilling at all) write nothing to the KV cache and advance no
+    recurrent state.  Returns (logits (B,V) at each row's LAST VALID
+    position, new_cache); rows with no valid token get garbage logits the
+    caller must ignore.
+
+    With a codec, the cut-layer features (B,C,d) are compressed batch-wise
+    PER POSITION: transposing into the ``sequence_group_encode`` layout
+    (C,B,d) makes each group of R consecutive rows R slots at the same
+    position — the same group shape the decode path forms from its (B,d)
+    features (B divisible by R).  Chunked prefill then reproduces
+    prefill-as-decode outputs token-for-token when the group CONTENTS also
+    match, i.e. every slot ingests in lockstep (full batch, equal prompt
+    lengths).  With empty slots or ragged prompts the two paths feed
+    different padding features into the HRR superposition, so outputs
+    agree only up to codec cross-talk — same as any occupancy change does
+    under batch-wise compression.
+    """
+    B, C = tokens.shape
+    if valid is None:
+        valid = jnp.ones((B, C), bool)
+    h = params["embed"][tokens]
+    memory = cache.get("memory")
+    new_cache = dict(cache)
+    if cfg.first_dense_layers:
+        h, new_cache["first"] = stack_lib.apply_superblock_prefill(
+            params["first"], cache["first"], cfg, h, pos, valid, memory=memory)
+
+    if codec is None:
+        h, new_cache["stack"] = stack_lib.apply_stack_prefill(
+            params["stack"], cache["stack"], cfg, h, pos, valid, memory=memory)
+    else:
+        from repro.codecs.c3sl import (sequence_group_decode,
+                                       sequence_group_encode)
+        n_cut = cfg.num_superblocks // 2
+        p_front, p_back = _split_stacked(params["stack"], n_cut)
+        c_front, c_back = _split_stacked(cache["stack"], n_cut)
+        h, nc_front = stack_lib.apply_stack_prefill(p_front, c_front, cfg, h,
+                                                    pos, valid, memory=memory)
+        payload = sequence_group_encode(codec, codec_params, h.swapaxes(0, 1))
+        h = sequence_group_decode(codec, codec_params, payload,
+                                  C, B).swapaxes(0, 1)
+        h, nc_back = stack_lib.apply_stack_prefill(p_back, c_back, cfg, h,
+                                                   pos, valid, memory=memory)
+        new_cache["stack"] = jax.tree.map(
+            lambda f, b: jnp.concatenate([f, b], axis=0), nc_front, nc_back)
+
+    last = jnp.maximum(valid.sum(-1).astype(jnp.int32) - 1, 0)
+    h_last = h[jnp.arange(B), last]                              # (B,d)
+    h_last = _apply_norm(cfg, params["final_norm"], h_last)
+    return h_last @ params["head"], new_cache
+
+
+# ---------------------------------------------------------------------------
 # pod-pipeline adapter (repro.core.split.make_pod_pipeline_loss_fn callables)
 # ---------------------------------------------------------------------------
 

@@ -313,3 +313,106 @@ def apply_stack_decode(stacked, cache, cfg: ModelConfig, h, pos, *, memory=None)
 
     h, new_cache = jax.lax.scan(body, h, (stacked, cache))
     return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (C tokens per row, per-row start positions, ragged tails)
+# ---------------------------------------------------------------------------
+
+def _prefill_stateful(kind: str, p, cache, cfg: ModelConfig, x, valid):
+    """Recurrent sublayers advance sequentially INSIDE the program: a
+    lax.scan over the chunk's C positions reusing the O(1) decode step,
+    committing state only where ``valid`` (padded positions leave state and
+    token-shift buffers untouched).  One dispatch regardless of C."""
+
+    def step(state, inp):
+        x_j, v_j = inp                                   # (B,d), (B,)
+        if kind == "mamba":
+            y, ns = mamba_lib.apply_mamba_decode(p, x_j[:, None], state,
+                                                 d_state=cfg.d_state)
+        elif kind == "rwkv_tm":
+            st = {"wkv": state["wkv"], "x_prev_tm": state["x_prev"]}
+            y, st = rwkv_lib.apply_rwkv_timemix_decode(p, x_j[:, None], st,
+                                                       num_heads=cfg.num_heads)
+            ns = {"wkv": st["wkv"], "x_prev": st["x_prev_tm"]}
+        else:  # rwkv_cm
+            st = {"x_prev_cm": state["x_prev"]}
+            y, st = rwkv_lib.apply_rwkv_channelmix_decode(p, x_j[:, None], st)
+            ns = {"x_prev": st["x_prev_cm"]}
+        ns = jax.tree.map(
+            lambda n, o: jnp.where(v_j.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+            ns, state)
+        return ns, y[:, 0]
+
+    new_cache, ys = jax.lax.scan(step, cache, (x.swapaxes(0, 1), valid.T))
+    return ys.swapaxes(0, 1), new_cache
+
+
+def apply_sublayer_prefill(kind: str, p, cache, cfg: ModelConfig, h, pos,
+                           valid, *, memory=None):
+    """Chunked-prefill sublayer step.  h (B,C,d); pos (B,) start positions;
+    valid (B,C) marks real tokens.  Returns (residual update, new_cache).
+    Padded positions never touch caches or recurrent state; their outputs
+    are garbage the caller must mask/ignore."""
+    x = _apply_norm(cfg, p["norm"], h)
+    if kind == "attn":
+        y, new_cache = attn_lib.apply_gqa_prefill(
+            p, x, cache, pos, valid, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim_,
+            rotary_dim=cfg.rotary_dim, rope_theta=cfg.rope_theta,
+            sliding_window=cfg.sliding_window)
+    elif kind == "mla":
+        y, new_cache = attn_lib.apply_mla_prefill(
+            p, x, cache, pos, valid, num_heads=cfg.num_heads,
+            kv_lora_rank=cfg.kv_lora_rank, qk_nope_dim=cfg.qk_nope_dim,
+            qk_rope_dim=cfg.qk_rope_dim, v_head_dim=cfg.v_head_dim,
+            rope_theta=cfg.rope_theta)
+    elif kind == "cross":
+        y = attn_lib.apply_cross_attention(p, x, memory, num_heads=cfg.num_heads,
+                                           num_kv_heads=cfg.num_kv_heads,
+                                           head_dim=cfg.head_dim_)
+        new_cache = cache
+    elif kind == "mlp":
+        y, new_cache = apply_mlp(p, x), cache
+    elif kind == "moe":
+        if "router" in p:
+            # full capacity, exactly like decode: serving never drops tokens,
+            # which also keeps every position independent of its chunk-mates
+            y, _ = moe_lib.apply_moe(p, x, top_k=cfg.experts_per_token,
+                                     capacity_factor=float(cfg.num_experts))
+        else:
+            y = apply_mlp(p, x)
+        new_cache = cache
+    elif kind in ("mamba", "rwkv_tm", "rwkv_cm"):
+        y, new_cache = _prefill_stateful(kind, p, cache, cfg, x, valid)
+    else:
+        raise ValueError(kind)
+    return y, new_cache
+
+
+def apply_superblock_prefill(p_sb, cache_sb, cfg: ModelConfig, h, pos, valid, *,
+                             pattern=None, memory=None):
+    pattern = pattern or cfg.block_pattern
+    new_cache = {}
+    for li, layer in enumerate(pattern):
+        for si, kind in enumerate(layer):
+            key = f"l{li}_{si}_{kind}"
+            y, new_cache[key] = apply_sublayer_prefill(
+                kind, p_sb[key], cache_sb[key], cfg, h, pos, valid, memory=memory)
+            h = h + y
+    return h, new_cache
+
+
+def apply_stack_prefill(stacked, cache, cfg: ModelConfig, h, pos, valid, *,
+                        memory=None):
+    """Chunked prefill through the whole stack; cache leaves have leading
+    superblock dim.  Returns (h (B,C,d), new_cache)."""
+
+    def body(h, xs):
+        p_sb, cache_sb = xs
+        h, new_cache_sb = apply_superblock_prefill(p_sb, cache_sb, cfg, h, pos,
+                                                   valid, memory=memory)
+        return h, new_cache_sb
+
+    h, new_cache = jax.lax.scan(body, h, (stacked, cache))
+    return h, new_cache

@@ -21,8 +21,18 @@ class Optimizer(NamedTuple):
     update: Callable
 
 
+def _f32(x):
+    """Lossless f32 view for optimizer math.  Complex leaves only occur as
+    FROZEN constants (the C3-SL codec's cached key spectrum rides in the
+    params tree); their gradients are exactly zero, so the real part is the
+    whole story — and apply_updates leaves complex params untouched."""
+    if jnp.iscomplexobj(x):
+        x = jnp.real(x)
+    return x.astype(jnp.float32)
+
+
 def global_norm(tree) -> jax.Array:
-    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(jnp.abs(x).astype(jnp.float32)))
                         for x in jax.tree.leaves(tree)))
 
 
@@ -42,9 +52,9 @@ def _adam_core(lr, b1, b2, eps, weight_decay):
     def update(grads, state, params=None):
         count = state["count"] + 1
         lr_t = lr(count) if callable(lr) else lr
-        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * _f32(g),
                          state["m"], grads)
-        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(_f32(g)),
                          state["v"], grads)
         c1 = 1 - b1 ** count.astype(jnp.float32)
         c2 = 1 - b2 ** count.astype(jnp.float32)
@@ -52,7 +62,7 @@ def _adam_core(lr, b1, b2, eps, weight_decay):
         def upd(m, v, p):
             u = -lr_t * (m / c1) / (jnp.sqrt(v / c2) + eps)
             if weight_decay and p is not None:
-                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+                u = u - lr_t * weight_decay * _f32(p)
             return u
 
         if weight_decay:
@@ -80,7 +90,7 @@ def sgd_momentum(lr, momentum=0.9) -> Optimizer:
     def update(grads, state, params=None):
         count = state["count"] + 1
         lr_t = lr(count) if callable(lr) else lr
-        mu = jax.tree.map(lambda mu, g: momentum * mu + g.astype(jnp.float32),
+        mu = jax.tree.map(lambda mu, g: momentum * mu + _f32(g),
                           state["mu"], grads)
         updates = jax.tree.map(lambda mu: -lr_t * mu, mu)
         return updates, {"mu": mu, "count": count}
@@ -89,8 +99,11 @@ def sgd_momentum(lr, momentum=0.9) -> Optimizer:
 
 
 def apply_updates(params, updates):
-    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
-                        params, updates)
+    def one(p, u):
+        if jnp.iscomplexobj(p):
+            return p   # frozen constants (cached key spectra) take no updates
+        return (p.astype(jnp.float32) + u).astype(p.dtype)
+    return jax.tree.map(one, params, updates)
 
 
 def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,

@@ -1,21 +1,40 @@
 """Continuous-batching serving engine (vLLM-lite, pure JAX).
 
 Fixed pool of `num_slots` decode slots sharing one stacked KV cache; every
-slot advances at its OWN position (decode_step takes a (B,) position
-vector).  When a sequence finishes (EOS or max_new_tokens), its slot is
-recycled for the next queued request mid-flight — no draining the batch.
+slot advances at its OWN position.  When a sequence finishes (EOS or
+max_new_tokens), its slot is recycled for the next queued request
+mid-flight — no draining the batch.
 
-Prompt ingestion is token-by-token through the decode path ("prefill as
-decode"), which keeps one compiled program for everything; a chunked
-prefill program is the obvious follow-up optimization and is sketched in
-EXPERIMENTS.md.  The C3-SL codec applies to each step's cut-layer features
-across the active slots, exactly as in repro.launch.serve.
+Two prefill modes:
+
+* ``"chunked"`` (default) — the fast path.  Prompts are ingested C tokens
+  per dispatch through ``lm.prefill_chunk`` (ragged tails padded under a
+  length mask), so a length-L prompt costs ceil(L/C) dispatches instead of
+  L.  Slot state (positions, last token, done flags, output buffer) lives
+  ON DEVICE and is advanced inside the jitted step with `jnp.where`
+  masking; the Python loop syncs with the device only every ``sync_every``
+  decode steps (EOS flags fetched in batches) and on admit/retire
+  boundaries.  Cache and state buffers are donated to the jitted programs,
+  so XLA updates them in place instead of copying the KV cache every step.
+
+* ``"decode"`` — the original prefill-as-decode path (one token, one
+  dispatch, one host sync per engine step), kept as the measurable
+  baseline for benchmarks/bench_serving.py and for equivalence tests.
+
+The C3-SL codec applies to each step's cut-layer features across the
+active slots; on the chunked path the features are grouped PER POSITION
+(`sequence_group_encode` layout), the same group shape as the decode
+path's batch-wise groups.  Outputs match the decode path token-for-token
+when slot occupancy matches too (full batch, equal-length prompts,
+lockstep admission); empty slots or ragged prompts contribute different
+padding features to the superposition on the two paths, so there outputs
+agree only up to codec cross-talk — the price batch-wise compression
+always puts on occupancy changes.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -38,15 +57,16 @@ class Request:
 @dataclasses.dataclass
 class _Slot:
     req: Request | None = None
-    pos: int = 0             # next cache position to write
-    in_prompt: int = 0       # tokens of the prompt already ingested
+    pos: int = 0             # next cache position to write (legacy mode)
+    in_prompt: int = 0       # tokens of the prompt already ingested (legacy)
 
 
 class BatchedEngine:
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int = 8,
                  max_len: int = 256, eos_id: int | None = None,
                  codec=None, codec_params=None, greedy: bool = True,
-                 seed: int = 0):
+                 seed: int = 0, prefill_mode: str = "chunked",
+                 chunk_size: int = 16, sync_every: int = 8):
         # `codec` may be a ready codec object or a registry spec string
         # (e.g. "c3sl:R=4|int8"); specs are built against the decode cut
         # layer (D = d_model) and clamped to the slot count.  "none" means
@@ -59,43 +79,239 @@ class BatchedEngine:
                     codecs_lib.build(codec, D=cfg.d_model), num_slots)
                 if codec_params is None:
                     codec_params = codec.init(jax.random.PRNGKey(seed))
+        if prefill_mode not in ("chunked", "decode"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r} "
+                             "(expected 'chunked' | 'decode')")
         self.codec = codec
+        self.codec_params = codec_params
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.greedy = greedy
+        self.prefill_mode = prefill_mode
+        # each ring slot must be written at most once per chunk (SWA caches
+        # are rings of length sliding_window)
+        if cfg.sliding_window:
+            chunk_size = min(chunk_size, cfg.sliding_window)
+        self.chunk_size = max(1, min(chunk_size, max_len))
+        self.sync_every = max(1, sync_every)
         self.rng = jax.random.PRNGKey(seed)
         self.cache = lm_lib.init_decode_cache(params, cfg, num_slots, max_len)
         self.slots = [_Slot() for _ in range(num_slots)]
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
         self._tokens_decoded = 0
+        self.state = self._init_state()
+        self._build_programs()
 
-        def step_fn(params, cache, tokens, pos, key):
+    # ------------------------------------------------------------------
+    # compiled programs
+    # ------------------------------------------------------------------
+
+    def _init_state(self):
+        """Device-resident slot state: advanced inside the jitted step, read
+        back only at admit/retire boundaries."""
+        B = self.num_slots
+        z = lambda dt: jnp.zeros((B,), dt)  # noqa: E731
+        return {
+            "pos": z(jnp.int32),         # next cache position to write
+            "last_tok": z(jnp.int32),    # decode input for the next step
+            "active": z(bool),           # prompt fully ingested, generating
+            "done": z(bool),             # finished, awaiting retire
+            "out_len": z(jnp.int32),     # generated tokens so far
+            "max_new": jnp.ones((B,), jnp.int32),
+            "out_buf": jnp.zeros((B, self.max_len + 1), jnp.int32),
+        }
+
+    def _build_programs(self):
+        cfg, codec, codec_params = self.cfg, self.codec, self.codec_params
+        greedy, eos_id, max_len = self.greedy, self.eos_id, self.max_len
+
+        def pick(logits, key):
+            if greedy:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+        def finish_check(state, nxt, out_len, pos):
+            fin = (out_len >= state["max_new"]) | (pos >= max_len)
+            if eos_id is not None:
+                fin |= nxt == eos_id
+            return fin
+
+        def step_fn(params, cache, state, key):
+            """One fused decode step: model forward + ALL slot bookkeeping."""
+            live = state["active"] & ~state["done"]
+            logits, cache = lm_lib.decode_step(
+                params, cache, state["last_tok"][:, None], state["pos"], cfg,
+                codec=codec, codec_params=codec_params)
+            nxt = jnp.where(live, pick(logits[:, -1], key), state["last_tok"])
+            B, cap = state["out_buf"].shape
+            col = jnp.where(live, jnp.minimum(state["out_len"], cap - 1), cap)
+            out_buf = state["out_buf"].at[jnp.arange(B), col].set(nxt, mode="drop")
+            out_len = state["out_len"] + live.astype(jnp.int32)
+            pos = state["pos"] + live.astype(jnp.int32)
+            done = state["done"] | (live & finish_check(state, nxt, out_len, pos))
+            return cache, {**state, "pos": pos, "last_tok": nxt, "done": done,
+                           "out_len": out_len, "out_buf": out_buf}
+
+        def prefill_fn(params, cache, state, tokens, valid, completes, key):
+            """Ingest one prompt chunk for the rows `valid` marks; rows whose
+            prompt ends in this chunk (`completes`) commit their first
+            generated token from the last prompt position's logits."""
+            logits, cache = lm_lib.prefill_chunk(
+                params, cache, tokens, state["pos"], cfg,
+                codec=codec, codec_params=codec_params, valid=valid)
+            nxt = jnp.where(completes, pick(logits, key), state["last_tok"])
+            B, cap = state["out_buf"].shape
+            col = jnp.where(completes, jnp.minimum(state["out_len"], cap - 1), cap)
+            out_buf = state["out_buf"].at[jnp.arange(B), col].set(nxt, mode="drop")
+            out_len = state["out_len"] + completes.astype(jnp.int32)
+            pos = state["pos"] + valid.sum(-1).astype(jnp.int32)
+            done = state["done"] | (completes
+                                    & finish_check(state, nxt, out_len, pos))
+            return cache, {**state, "pos": pos, "last_tok": nxt, "done": done,
+                           "active": state["active"] | completes,
+                           "out_len": out_len, "out_buf": out_buf}
+
+        def reset_fn(cache, mask):
+            """Layout-aware zeroing of the rows `mask` marks.  The cache
+            layout is known by KEY: "stack" leaves carry (num_superblocks,
+            B, ...), "first" leaves (B, ...), "memory" (encoder output) is
+            never per-slot state — no shape guessing against dims that
+            happen to equal num_slots (heads, cache length, ...)."""
+            def zero(subtree, axis):
+                def z(leaf):
+                    m = mask.reshape((1,) * axis + (-1,)
+                                     + (1,) * (leaf.ndim - axis - 1))
+                    return jnp.where(m, 0, leaf)
+                return jax.tree.map(z, subtree)
+            new = dict(cache)
+            new["stack"] = zero(cache["stack"], 1)
+            if "first" in cache:
+                new["first"] = zero(cache["first"], 0)
+            return new
+
+        def legacy_step_fn(params, cache, tokens, pos, key):
             logits, cache = lm_lib.decode_step(params, cache, tokens, pos, cfg,
                                                codec=codec,
                                                codec_params=codec_params)
-            nxt_greedy = jnp.argmax(logits[:, -1], axis=-1)
-            nxt_sample = jax.random.categorical(key, logits[:, -1], axis=-1)
-            return (nxt_greedy if greedy else nxt_sample).astype(jnp.int32), cache
+            return pick(logits[:, -1], key), cache
 
-        self._step = jax.jit(step_fn)
+        self._step = jax.jit(step_fn, donate_argnums=(1, 2))
+        self._prefill = jax.jit(prefill_fn, donate_argnums=(1, 2))
+        self._reset = jax.jit(reset_fn, donate_argnums=(0,))
+        self._step_legacy = jax.jit(legacy_step_fn)
 
     # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+
     def submit(self, req: Request):
+        if not req.prompt:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if len(req.prompt) > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt length {len(req.prompt)} exceeds "
+                f"the engine's max_len={self.max_len} cache positions; "
+                f"truncate the prompt or build the engine with a larger "
+                f"max_len")
         self.queue.append(req)
 
+    @property
+    def active(self) -> int:
+        return sum(s.req is not None for s in self.slots)
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        if self.prefill_mode == "decode":
+            return self._run_legacy(max_steps)
+        steps = 0
+        while steps < max_steps:
+            self._boundary()
+            if not (self.queue or self.active):
+                break
+            for _ in range(self.sync_every):
+                self.rng, key = jax.random.split(self.rng)
+                self.cache, self.state = self._step(
+                    self.params, self.cache, self.state, key)
+                steps += 1
+                if steps >= max_steps:
+                    break
+        self._boundary()
+        return self.finished
+
+    # ------------------------------------------------------------------
+    # fast path internals
+    # ------------------------------------------------------------------
+
+    def _boundary(self):
+        """Admit/retire boundary: the ONLY place the fast path syncs with
+        the device outside the batched `sync_every` cadence."""
+        st = {k: np.array(v) for k, v in jax.device_get(self.state).items()}
+        touched = False
+        for i, slot in enumerate(self.slots):
+            if slot.req is not None and st["done"][i]:
+                n = int(st["out_len"][i])
+                slot.req.out = [int(t) for t in st["out_buf"][i, :n]]
+                slot.req.done = True
+                self.finished.append(slot.req)
+                self._tokens_decoded += n
+                slot.req = None
+                st["active"][i] = st["done"][i] = False
+                st["pos"][i] = st["last_tok"][i] = st["out_len"][i] = 0
+                st["out_buf"][i, :] = 0
+                touched = True
+        admitted: list[int] = []
+        for i, slot in enumerate(self.slots):
+            if slot.req is None and self.queue:
+                slot.req = self.queue.popleft()
+                st["active"][i] = st["done"][i] = False
+                st["pos"][i] = st["last_tok"][i] = st["out_len"][i] = 0
+                st["max_new"][i] = slot.req.max_new_tokens
+                st["out_buf"][i, :] = 0
+                admitted.append(i)
+                touched = True
+        if touched:
+            self.state = jax.device_put(st)
+        if admitted:
+            mask = np.zeros((self.num_slots,), bool)
+            mask[admitted] = True
+            self.cache = self._reset(self.cache, jnp.asarray(mask))
+            self._prefill_admitted(admitted)
+
+    def _prefill_admitted(self, admitted: list[int]):
+        """Chunk the admitted slots' prompts: ceil(max_len/C) dispatches,
+        ragged tails padded under the length mask, zero host syncs (the
+        schedule depends only on host-known prompt lengths)."""
+        B, C = self.num_slots, self.chunk_size
+        prompts = {i: self.slots[i].req.prompt for i in admitted}
+        n_chunks = -(-max(len(p) for p in prompts.values()) // C)
+        for k in range(n_chunks):
+            tokens = np.zeros((B, C), np.int32)
+            valid = np.zeros((B, C), bool)
+            completes = np.zeros((B,), bool)
+            for i, prompt in prompts.items():
+                seg = prompt[k * C:(k + 1) * C]
+                if seg:
+                    tokens[i, :len(seg)] = seg
+                    valid[i, :len(seg)] = True
+                completes[i] = k * C < len(prompt) <= (k + 1) * C
+            self.rng, key = jax.random.split(self.rng)
+            self.cache, self.state = self._prefill(
+                self.params, self.cache, self.state, jnp.asarray(tokens),
+                jnp.asarray(valid), jnp.asarray(completes), key)
+
+    # ------------------------------------------------------------------
+    # legacy path (prefill-as-decode, one host sync per token) — kept as
+    # the benchmark baseline and for equivalence tests
+    # ------------------------------------------------------------------
+
     def _reset_slot_cache(self, idx: int):
-        """Zero one slot's cache row so a recycled slot starts clean."""
-        def zero_row(leaf):
-            if leaf.ndim >= 2 and leaf.shape[1] == self.num_slots:
-                return leaf.at[:, idx].set(0)   # stacked (N, B, ...)
-            if leaf.ndim >= 1 and leaf.shape[0] == self.num_slots:
-                return leaf.at[idx].set(0)      # unstacked (B, ...)
-            return leaf
-        self.cache = jax.tree.map(zero_row, self.cache)
+        """Zero one slot's cache rows so a recycled slot starts clean."""
+        mask = np.zeros((self.num_slots,), bool)
+        mask[idx] = True
+        self.cache = self._reset(self.cache, jnp.asarray(mask))
 
     def _admit(self):
         for i, slot in enumerate(self.slots):
@@ -105,12 +321,9 @@ class BatchedEngine:
                 slot.in_prompt = 0
                 self._reset_slot_cache(i)
 
-    @property
-    def active(self) -> int:
-        return sum(s.req is not None for s in self.slots)
-
     def step(self):
-        """One engine step: every active slot ingests/decodes one token."""
+        """One legacy engine step: every active slot ingests/decodes one
+        token ("prefill as decode"), then a host sync."""
         self._admit()
         if self.active == 0:
             return False
@@ -125,8 +338,9 @@ class BatchedEngine:
                 tokens[i, 0] = s.req.out[-1]
             pos[i] = s.pos
         self.rng, key = jax.random.split(self.rng)
-        nxt, self.cache = self._step(self.params, self.cache,
-                                     jnp.asarray(tokens), jnp.asarray(pos), key)
+        nxt, self.cache = self._step_legacy(self.params, self.cache,
+                                            jnp.asarray(tokens),
+                                            jnp.asarray(pos), key)
         nxt = np.asarray(nxt)
         for i, s in enumerate(self.slots):
             if s.req is None:
@@ -150,7 +364,7 @@ class BatchedEngine:
                 s.req = None
         return True
 
-    def run(self, max_steps: int = 10_000) -> list[Request]:
+    def _run_legacy(self, max_steps: int) -> list[Request]:
         steps = 0
         while (self.queue or self.active) and steps < max_steps:
             self.step()

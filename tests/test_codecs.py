@@ -123,6 +123,40 @@ def test_split_loss_trains_through_codec():
     assert losses[-1] < losses[0] * 0.8, losses[::10]
 
 
+def test_cached_key_spectrum_matches_and_survives_optimizer():
+    """fft-backend params carry keys_fft = rfft(keys); encode/decode with it
+    are bit-identical to recomputing, and the frozen complex leaf rides
+    through the optimizer stack (grads, Adam, apply_updates) untouched."""
+    import warnings
+    from repro.optim import adam, apply_updates, clip_by_global_norm
+    B, D, R = 8, 64, 4
+    c = codec_lib.C3SLCodec(R=R, D=D)
+    p = c.init(jax.random.PRNGKey(0))
+    assert "keys_fft" in p and jnp.iscomplexobj(p["keys_fft"])
+    Z = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+    no_cache = {"keys": p["keys"]}
+    assert bool(jnp.all(c.encode(p, Z) == c.encode(no_cache, Z)))
+    assert bool(jnp.all(c.decode(p, c.encode(p, Z))
+                        == c.decode(no_cache, c.encode(no_cache, Z))))
+
+    params = {"w": jnp.ones((D,)), "codec": p}
+
+    def loss(q):
+        return (c.decode(q["codec"], c.encode(q["codec"], Z * q["w"])) ** 2).mean()
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        grads = jax.grad(loss)(params)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        opt = adam(1e-2)
+        st = opt.init(params)
+        upd, st = opt.update(grads, st, params)
+        new = apply_updates(params, upd)
+    assert bool(jnp.all(new["codec"]["keys_fft"] == p["keys_fft"]))
+    assert bool(jnp.all(new["codec"]["keys"] == p["keys"]))  # stop_gradient
+    assert not bool(jnp.all(new["w"] == params["w"]))        # net still trains
+
+
 def test_codec_gradient_is_compressed_shape():
     """The backward channel tensor (dS) has the compressed shape — paper's
     bidirectional saving."""

@@ -95,6 +95,41 @@ def test_engine_with_c3sl_codec_and_int8_cache():
     assert all(len(r.out) == 3 for r in done)
 
 
+def test_submit_rejects_overlong_and_empty_prompts():
+    """Prompts that cannot fit the cache are rejected AT SUBMIT with a clear
+    error instead of being silently truncated mid-prompt."""
+    import pytest
+    cfg, params, eng = _setup(num_slots=2, max_len=8)
+    with pytest.raises(ValueError, match="exceeds the engine's max_len=8"):
+        eng.submit(Request(uid=0, prompt=list(range(1, 10)), max_new_tokens=2))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(uid=1, prompt=[], max_new_tokens=2))
+    # boundary case: a prompt of exactly max_len still yields one token
+    eng.submit(Request(uid=2, prompt=[1, 2, 3, 4, 5, 6, 7, 2], max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out) == 1
+
+
+def test_reset_slot_cache_is_layout_aware():
+    """Regression for the old shape heuristic: with max_len == num_slots an
+    UNSTACKED first-dense cache leaf (B, T, ...) has shape[1] == num_slots,
+    and `leaf.at[:, idx].set(0)` would zero cache POSITION idx across every
+    slot (corrupting all in-flight rows) instead of slot idx's row."""
+    cfg = reduced(get_config("deepseek-v2-lite-16b"))   # has first_dense_layers
+    assert cfg.first_dense_layers
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    n = 8
+    eng = BatchedEngine(params, cfg, num_slots=n, max_len=n)
+    eng.cache = jax.tree.map(jnp.ones_like, eng.cache)
+    eng._reset_slot_cache(0)
+    first = eng.cache["first"]["l0_0_mla"]["c_kv"]      # (B, T, L), T == B
+    assert np.asarray(first[0]).max() == 0.0            # slot 0 cleared
+    assert np.asarray(first[1:]).min() == 1.0           # other slots intact
+    stacked = eng.cache["stack"]["l0_0_mla"]["c_kv"]    # (N, B, T, L)
+    assert np.asarray(stacked[:, 0]).max() == 0.0
+    assert np.asarray(stacked[:, 1:]).min() == 1.0
+
+
 def test_staggered_positions_are_independent():
     """Slots at different positions don't contaminate each other: decoding
     row 0 at pos 3 while row 1 sits at pos 0 gives the same logits for row 0
