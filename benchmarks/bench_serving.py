@@ -1,11 +1,14 @@
 """Serving throughput benchmark: chunked prefill + device-resident stepping
-vs the prefill-as-decode baseline.
+vs the prefill-as-decode baseline, and paged vs contiguous KV cache.
 
 Measures end-to-end tokens/s of the continuous-batching engine on a
 prompt-heavy and a decode-heavy request mix, at several codec specs, in
 both engine modes, and writes ``BENCH_serving.json`` so later perf PRs
-have a recorded trajectory to beat.  See benchmarks/README.md for the
-protocol and the JSON schema.
+have a recorded trajectory to beat.  A third, mixed long/short-prompt
+workload compares the paged KV cache (oversubscribed page pool) against
+the contiguous per-slot strips on tokens/s, mean/max time-to-first-token,
+and peak cache bytes — with and without prefill/decode interleaving.
+See benchmarks/README.md for the protocol and the JSON schema.
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--out PATH]
 """
@@ -30,6 +33,13 @@ SMOKE_MIXES = {"prompt_heavy": (16, 2), "decode_heavy": (4, 6)}
 
 CODECS = ["none", "c3sl:R=4", "c3sl:R=4|int8"]
 SMOKE_CODECS = ["none", "c3sl:R=2"]
+
+# Mixed long/short workload for the paged-vs-contiguous comparison: requests
+# alternate the two prompt lengths, so under the contiguous layout every
+# short request still reserves a full max_len strip while the paged pool
+# (sized below slots * max_len) only holds what each request can touch.
+MIXED = {"long": (96, 16), "short": (8, 16), "n_each": 4}
+SMOKE_MIXED = {"long": (12, 2), "short": (3, 2), "n_each": 2}
 
 
 def _build(smoke: bool):
@@ -78,6 +88,98 @@ def _run_once(cfg, params, *, mode, codec, prompt_len, max_new, requests,
             "tokens_per_s": round(total / wall, 1)}
 
 
+def _run_mixed(cfg, params, *, kv_layout, interleave, mixed, num_slots,
+               max_len, page_size, num_pages, chunk_size, sync_every, seed=0):
+    """One mixed long/short run; returns throughput, TTFT, and cache bytes."""
+    from repro.serving.engine import BatchedEngine, Request
+    eng = BatchedEngine(params, cfg, num_slots=num_slots, max_len=max_len,
+                        greedy=True, seed=seed, prefill_mode="chunked",
+                        chunk_size=chunk_size, sync_every=sync_every,
+                        kv_layout=kv_layout, page_size=page_size,
+                        num_pages=num_pages if kv_layout == "paged" else None,
+                        interleave=interleave)
+    rng = np.random.RandomState(seed + 1)
+    (llen, lnew), (slen, snew) = mixed["long"], mixed["short"]
+
+    def batch(uid0):
+        reqs = []
+        for i in range(mixed["n_each"]):
+            for ln, mn in ((llen, lnew), (slen, snew)):
+                reqs.append(Request(
+                    uid=uid0 + len(reqs),
+                    prompt=list(map(int, rng.randint(1, cfg.vocab_size, ln))),
+                    max_new_tokens=mn))
+        return reqs
+
+    for r in batch(10_000)[:2]:          # warmup: compile off the clock
+        eng.submit(r)
+    eng.run()
+    eng.finished.clear()
+    eng.stats = {k: 0 for k in eng.stats}    # count the timed run only
+
+    reqs = batch(0)
+    t0 = time.time()
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    wall = time.time() - t0
+    assert len(done) == len(reqs), (len(done), len(reqs))
+    generated = sum(len(r.out) for r in done)
+    prompt_tokens = sum(len(r.prompt) for r in reqs)
+    ttfts = [r.t_first - r.t_submit for r in done if r.t_first is not None]
+    return {"wall_s": round(wall, 4),
+            "prompt_tokens": prompt_tokens,
+            "generated_tokens": generated,
+            "tokens_per_s": round((prompt_tokens + generated) / wall, 1),
+            "ttft_mean_s": round(sum(ttfts) / len(ttfts), 4),
+            "ttft_max_s": round(max(ttfts), 4),
+            "peak_cache_bytes": eng.cache_bytes,
+            "dispatches": eng.stats["dispatches"]}
+
+
+def bench_mixed(cfg, params, smoke, chunk_size, sync_every, results):
+    """Paged vs contiguous (and the interleave knob) on the mixed workload."""
+    mixed = SMOKE_MIXED if smoke else MIXED
+    num_slots = 2 if smoke else 4
+    max_len = 32 if smoke else 128
+    page_size = 8 if smoke else 16
+    # pool sized to the worst-case CONCURRENT reservation of the alternating
+    # admission order (full: 2 long + 2 short = 7+7+2+2 pages), well under
+    # the contiguous equivalent of slots * max_len/page_size pages
+    num_pages = 3 if smoke else 18
+    base = None
+    for kv_layout, interleave in (("contiguous", 0), ("paged", 0),
+                                  ("paged", 2)):
+        # best of 2 reps (full mode): wall-clock on shared CPU runners is
+        # noisy and the layouts execute identical token streams
+        reps = [_run_mixed(cfg, params, kv_layout=kv_layout,
+                           interleave=interleave, mixed=mixed,
+                           num_slots=num_slots, max_len=max_len,
+                           page_size=page_size, num_pages=num_pages,
+                           chunk_size=chunk_size, sync_every=sync_every)
+                for _ in range(1 if smoke else 2)]
+        r = max(reps, key=lambda x: x["tokens_per_s"])
+        row = {"mix": "mixed_long_short", "codec": "none", "mode": "chunked",
+               "kv_layout": kv_layout, "interleave": interleave,
+               "page_size": page_size if kv_layout == "paged" else None,
+               "num_pages": num_pages if kv_layout == "paged" else None,
+               "chunk_size": chunk_size, "sync_every": sync_every,
+               "requests": 2 * mixed["n_each"], "num_slots": num_slots, **r}
+        if base is None:
+            base = r
+        else:
+            row["cache_bytes_vs_contiguous"] = round(
+                r["peak_cache_bytes"] / base["peak_cache_bytes"], 3)
+            row["speedup_vs_contiguous"] = round(
+                r["tokens_per_s"] / base["tokens_per_s"], 2)
+        results.append(row)
+        print(f"mixed_long_short kv={kv_layout:10s} il={interleave} "
+              f"{r['tokens_per_s']:8.1f} tok/s  ttft {r['ttft_mean_s']*1e3:7.1f}ms "
+              f"(max {r['ttft_max_s']*1e3:7.1f}ms)  "
+              f"cache {r['peak_cache_bytes']/1e6:6.2f}MB", flush=True)
+    return results
+
+
 def main(smoke: bool = False, out: str = "BENCH_serving.json",
          chunk_size: int = 16):
     cfg, params = _build(smoke)
@@ -111,6 +213,8 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
                   f"decode={per_mode['decode']['tokens_per_s']:8.1f} tok/s  "
                   f"chunked={per_mode['chunked']['tokens_per_s']:8.1f} tok/s  "
                   f"({speedup:.2f}x)", flush=True)
+
+    bench_mixed(cfg, params, smoke, chunk_size, sync_every, results)
 
     payload = {
         "protocol": {

@@ -58,7 +58,7 @@ from repro.codecs.base import (Codec, CodecSpec, WireStage, apply_quant_bits,
 from repro.codecs.bottleneck import BottleNetPPCodec, DenseBottleneckCodec
 from repro.codecs.c3sl import (C3SLCodec, sequence_group_decode,
                                sequence_group_encode)
-from repro.codecs.compose import Chain
+from repro.codecs.compose import Chain, payload_wire_bytes
 from repro.codecs.identity import IdentityCodec
 from repro.codecs.wire import Int8STEQuant, NoOpWire, TopKSparsify
 
@@ -66,6 +66,6 @@ __all__ = [
     "Codec", "CodecSpec", "WireStage", "apply_quant_bits", "available",
     "build", "clamp_R", "parse_spec", "register",
     "IdentityCodec", "C3SLCodec", "DenseBottleneckCodec", "BottleNetPPCodec",
-    "Chain", "Int8STEQuant", "TopKSparsify", "NoOpWire",
+    "Chain", "Int8STEQuant", "TopKSparsify", "NoOpWire", "payload_wire_bytes",
     "sequence_group_encode", "sequence_group_decode",
 ]

@@ -51,23 +51,30 @@ class C3SLCodec(SpecMixin):
         return params
 
     def _group(self, Z):
-        B, D = Z.shape
+        """(..., B, D) -> (G, R, D) groups of R consecutive rows.  Rank-3
+        inputs (S, B, D) group WITHIN each leading slice (B % R == 0), so a
+        group never straddles two positions of a sequence-grouped payload."""
+        *lead, B, D = Z.shape
         if D != self.D:
             raise ValueError(f"feature dim {D} != codec D={self.D}")
         if B % self.R:
             raise ValueError(f"batch {B} not divisible by R={self.R}")
-        return Z.reshape(B // self.R, self.R, D)
+        return Z.reshape(-1, self.R, D)
 
     def encode(self, params, Z):
-        return hrr.bind_superpose(self._group(Z), params["keys"],
-                                  backend=self.backend,
-                                  K_fft=params.get("keys_fft"))
+        """Z (B, D) -> payload (B/R, D); Z (S, B, D) -> payload (S, B/R, D)
+        (the sequence-grouped 3-D wire layout — same math, the leading axis
+        is kept so per-row wire accounting sees the true row count)."""
+        payload = hrr.bind_superpose(self._group(Z), params["keys"],
+                                     backend=self.backend,
+                                     K_fft=params.get("keys_fft"))
+        return payload.reshape(*Z.shape[:-2], Z.shape[-2] // self.R, self.D)
 
     def decode(self, params, payload):
-        Zhat = hrr.unbind(payload, params["keys"], backend=self.backend,
-                          K_fft=params.get("keys_fft"))
+        Zhat = hrr.unbind(payload.reshape(-1, self.D), params["keys"],
+                          backend=self.backend, K_fft=params.get("keys_fft"))
         G, R, D = Zhat.shape
-        return Zhat.reshape(G * R, D)
+        return Zhat.reshape(*payload.shape[:-2], payload.shape[-2] * R, D)
 
     def param_count(self) -> int:
         return self.R * self.D  # paper Table 2
@@ -83,9 +90,15 @@ class C3SLCodec(SpecMixin):
 
 
 def sequence_group_encode(codec, params, Z_bsd: jax.Array) -> jax.Array:
-    """Beyond-paper: group along sequence blocks when batch==1 (long_500k).
+    """Beyond-paper: group along sequence blocks when batch==1 (long_500k),
+    or per position across slots (chunked prefill feeds (C, B, d)).
 
-    Z (B, S, D) with B*S divisible by R -> payload (B*S/R, D).
+    Z (B, S, D) with B*S divisible by R -> payload.  When S % R == 0 the
+    payload keeps the 3-D sequence-grouped layout (B, S/R, D) — groups
+    never straddle the leading axis, and wire stages see/account the true
+    per-row structure.  Otherwise groups wrap across the leading axis and
+    the payload is the flat (B*S/R, D).  Both are bit-identical row-wise
+    (the 3-D form is a reshape of the flat one).
     """
     B, S, D = Z_bsd.shape
     R = getattr(codec, "R", 1)
@@ -93,6 +106,8 @@ def sequence_group_encode(codec, params, Z_bsd: jax.Array) -> jax.Array:
         raise ValueError(
             f"batch {B * S} (B={B} x S={S} sequence groups) not divisible "
             f"by R={R}")
+    if S % R == 0:
+        return codec.encode(params, Z_bsd)               # 3-D (B, S/R, D)
     return codec.encode(params, Z_bsd.reshape(B * S, D))
 
 

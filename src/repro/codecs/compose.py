@@ -2,6 +2,23 @@
 from __future__ import annotations
 
 import dataclasses
+import math
+
+
+def payload_wire_bytes(codec, shape: tuple[int, ...]) -> int:
+    """Wire bytes for an ALREADY-SHAPED payload.
+
+    ``codec.wire_bytes(B)`` covers the decode path's (B, D) features; the
+    chunked-prefill path ships the 3-D sequence-grouped payload
+    (C, B/R, D) from ``sequence_group_encode``, whose per-row scale/mask
+    counts depend on the true leading shape — this entry point feeds that
+    shape straight to the codec's last wire stage (stages are rank-generic:
+    a "row" is everything but the trailing axis).  Bare transforms ship f32.
+    """
+    stages = getattr(codec, "stages", ())
+    if stages:
+        return stages[-1].wire_bytes(tuple(shape))
+    return math.prod(shape) * 4
 
 
 @dataclasses.dataclass(frozen=True)

@@ -32,6 +32,14 @@ from repro.codecs.base import SpecMixin, register
 
 
 def _rows(shape: tuple[int, ...]) -> int:
+    """Quantization rows of a payload: everything but the trailing axis.
+
+    Must agree with how the stages APPLY — scale/mask granularity is
+    axis=-1 — for payloads of ANY rank: the decode path ships 2-D
+    (B/R, D), chunked prefill ships the 3-D sequence-grouped layout
+    (C, B/R, D) whose row count is C * B/R, not B/R.  Pinned against the
+    runtime representation in tests/test_wire_accounting.py.
+    """
     return math.prod(shape[:-1]) if len(shape) > 1 else 1
 
 

@@ -39,7 +39,9 @@ def _run_engine(cfg, params, args):
                                       if codec is not None else None),
                         greedy=args.greedy, seed=args.seed,
                         prefill_mode=args.prefill_mode,
-                        chunk_size=args.chunk_size, sync_every=args.sync_every)
+                        chunk_size=args.chunk_size, sync_every=args.sync_every,
+                        kv_layout=args.kv_layout, page_size=args.page_size,
+                        num_pages=args.num_pages, interleave=args.interleave)
     rng = jax.random.PRNGKey(args.seed + 1)
     prompts = jax.random.randint(rng, (args.requests, args.prompt_len), 0,
                                  cfg.vocab_size)
@@ -52,9 +54,18 @@ def _run_engine(cfg, params, args):
     total = gen + args.requests * args.prompt_len
     print(f"arch={cfg.name} engine mode={args.prefill_mode} "
           f"slots={args.batch} chunk={eng.chunk_size} sync={eng.sync_every} "
+          f"kv={args.kv_layout} interleave={eng.interleave} "
           f"codec={eng.codec.spec() if eng.codec is not None else 'none'}")
+    if eng.paged is not None:
+        print(f"paged pool: {eng.paged.num_pages} pages x "
+              f"{eng.paged.page_size} positions "
+              f"(vs {args.batch * args.cache_len} contiguous positions); "
+              f"cache bytes {eng.cache_bytes}")
+    ttfts = [r.t_first - r.t_submit for r in done if r.t_first is not None]
     print(f"{len(done)} requests ({args.requests * args.prompt_len} prompt + "
-          f"{gen} generated tokens) in {dt:.2f}s ({total / dt:.1f} tok/s)")
+          f"{gen} generated tokens) in {dt:.2f}s ({total / dt:.1f} tok/s); "
+          f"mean TTFT {sum(ttfts) / max(len(ttfts), 1) * 1e3:.1f}ms; "
+          f"dispatches {eng.stats['dispatches']}")
     print("sample output:", done[0].out[:16])
 
 
@@ -85,6 +96,20 @@ def main():
     ap.add_argument("--prefill-mode", choices=["chunked", "decode"],
                     default="chunked",
                     help="'decode' = legacy prefill-as-decode baseline")
+    ap.add_argument("--kv-layout", choices=["contiguous", "paged"],
+                    default="contiguous",
+                    help="'paged' = shared page pool + per-slot page tables "
+                         "(short requests stop reserving max_len positions)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="cache positions per page (paged layout)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="physical pages in the pool (default: fully "
+                         "provisioned = slots * ceil(max_len/page_size); "
+                         "smaller pools oversubscribe and queue admissions)")
+    ap.add_argument("--interleave", type=int, default=0,
+                    help="decode steps interleaved after each prefill chunk "
+                         "(0 = prefill admitted prompts to completion; the "
+                         "TTFT vs inter-token-latency knob)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -5,12 +5,27 @@ All functions are pure; params are plain dicts.  Shapes:
 Decode functions take a KV cache and one new token (B, 1, D) at position
 `pos` (scalar int32), returning (y, new_cache).  Sliding-window caches are
 ring buffers of length `window`.
+
+Every decode/prefill function supports two cache layouts:
+
+* contiguous (default) — cache leaves are per-slot strips (B, T, ...).
+* paged — cache leaves are shared pools (num_pages, page_size, ...) and
+  ``pages`` carries the per-slot page table (B, P); ``length`` gives the
+  logical per-slot cache length T the contiguous layout would have.
+  Reads gather the pool into the exact contiguous (B, T, ...) view
+  (repro.models.paging.gather_pages) so masks and SDPA are the same code
+  on both layouts — that is what keeps paged outputs bit-identical.
+
+Decode functions also take ``live`` (B,) bool: rows marked False write
+NOTHING to the cache (the serving engine decodes while other slots are
+mid-prefill or empty; unmasked writes would stomp their pages).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.models import paging
 from repro.models.layers import apply_rope, dense_init
 
 NEG_INF = -1e30
@@ -178,15 +193,59 @@ def _per_row_update(cache_kv, new_kv, slots):
     )(cache_kv, new_kv, slots)
 
 
+def _write_rows(cache, new, slots, T, *, pages, live):
+    """Decode-step cache write (one position per row) on either layout.
+
+    ``new`` maps leaf name -> (B, 1, ...) values.  Paged: scatter through
+    the page table.  Contiguous with ``live``: rows not live scatter to
+    slot T -> dropped.  Contiguous without ``live``: the original
+    dynamic-update path (bit-for-bit the legacy baseline)."""
+    if pages is not None:
+        return {n: paging.scatter_rows(cache[n], pages, slots, val, live=live)
+                for n, val in new.items()}
+    if live is not None:
+        b_idx = jnp.arange(slots.shape[0])
+        wslot = jnp.where(live, slots, T)
+        return {n: cache[n].at[b_idx, wslot].set(val[:, 0], mode="drop")
+                for n, val in new.items()}
+    return {n: _per_row_update(cache[n], val, slots) for n, val in new.items()}
+
+
+def _write_chunk(cache, new, slots, valid, T, *, pages):
+    """Prefill-chunk cache write: ``new`` maps leaf name -> (B, C, ...)
+    values at logical slots (B, C); ``valid`` False (padded tails, rows not
+    prefilling) drops the write on both layouts."""
+    if pages is not None:
+        return {n: paging.scatter_chunk(cache[n], pages, slots, valid, val)
+                for n, val in new.items()}
+    idx = jnp.where(valid, slots, T)
+    b_idx = jnp.arange(slots.shape[0])[:, None]
+    return {n: cache[n].at[b_idx, idx].set(val, mode="drop")
+            for n, val in new.items()}
+
+
+def _view(cache, pages, T):
+    """The (B, T, ...) per-slot view attention reads: the cache itself on
+    the contiguous layout, a gather of the pools on the paged one."""
+    if pages is None:
+        return cache
+    return {n: paging.gather_pages(cache[n], pages, T) for n in cache}
+
+
 def apply_gqa_decode(p, x, cache, pos, *, num_heads, num_kv_heads, head_dim,
-                     rotary_dim, rope_theta=10000.0, sliding_window=None):
-    """One-token decode. x (B,1,D); cache k/v (B,T,KV,hd) (T=window for SWA).
+                     rotary_dim, rope_theta=10000.0, sliding_window=None,
+                     pages=None, length=None, live=None):
+    """One-token decode. x (B,1,D); cache k/v (B,T,KV,hd) (T=window for SWA),
+    or pooled (num_pages, ps, KV, hd) when ``pages`` is given.
 
     pos may be a scalar (lockstep batch) or (B,) int32 (continuous batching:
-    every slot at its own position).  Returns (y (B,1,D), new_cache).
+    every slot at its own position).  ``live`` (B,) masks cache writes (a
+    non-live row attends garbage the caller must ignore but writes nothing).
+    Returns (y (B,1,D), new_cache).
     """
     B = x.shape[0]
-    T = cache["k"].shape[1]
+    paged = pages is not None
+    T = length if paged else cache["k"].shape[1]
     q, k, v = _qkv(p, x, num_heads, num_kv_heads, head_dim)
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     positions = pos_b[:, None]
@@ -197,13 +256,11 @@ def apply_gqa_decode(p, x, cache, pos, *, num_heads, num_kv_heads, head_dim,
     if quant:
         k_q, k_s = _quantize_kv(k)
         v_q, v_s = _quantize_kv(v)
-        new_cache = {"k": _per_row_update(cache["k"], k_q, slots),
-                     "v": _per_row_update(cache["v"], v_q, slots),
-                     "k_scale": _per_row_update(cache["k_scale"], k_s, slots),
-                     "v_scale": _per_row_update(cache["v_scale"], v_s, slots)}
+        new = {"k": k_q, "v": v_q, "k_scale": k_s, "v_scale": v_s}
     else:
-        new_cache = {"k": _per_row_update(cache["k"], k, slots),
-                     "v": _per_row_update(cache["v"], v, slots)}
+        new = {"k": k, "v": v}
+    new_cache = _write_rows(cache, new, slots, T, pages=pages, live=live)
+    view = _view(new_cache, pages, T)
     idx = jnp.arange(T)[None, :]
     if sliding_window is not None:
         # ring buffer: valid entries are the last min(pos+1, T) writes
@@ -213,23 +270,23 @@ def apply_gqa_decode(p, x, cache, pos, *, num_heads, num_kv_heads, head_dim,
         valid = idx <= pos_b[:, None]
     mask = valid[:, None, None, :]
     if quant:
-        y = _sdpa_quant(q, new_cache["k"], new_cache["k_scale"],
-                        new_cache["v"], new_cache["v_scale"], mask,
+        y = _sdpa_quant(q, view["k"], view["k_scale"],
+                        view["v"], view["v_scale"], mask,
                         x.dtype) @ p["w_o"]
     else:
-        y = _sdpa(q, new_cache["k"], new_cache["v"], mask) @ p["w_o"]
+        y = _sdpa(q, view["k"], view["v"], mask) @ p["w_o"]
     return y, new_cache
 
 
 def apply_gqa_prefill(p, x, cache, pos, valid, *, num_heads, num_kv_heads,
                       head_dim, rotary_dim, rope_theta=10000.0,
-                      sliding_window=None):
+                      sliding_window=None, pages=None, length=None):
     """Chunked prefill: ingest C tokens per row in ONE dispatch.
 
-    x (B,C,D); cache k/v (B,T,KV,hd) (T=window for SWA); pos (B,) per-row
-    start positions; valid (B,C) marks real tokens (False = ragged-tail
-    padding or rows not prefilling: no cache write, no attention
-    contribution).  Returns (y (B,C,D), new_cache).
+    x (B,C,D); cache k/v (B,T,KV,hd) (T=window for SWA) or pooled with page
+    table ``pages``; pos (B,) per-row start positions; valid (B,C) marks
+    real tokens (False = ragged-tail padding or rows not prefilling: no
+    cache write, no attention contribution).  Returns (y (B,C,D), new_cache).
 
     Attention runs over [pre-chunk cache ; chunk keys] — never the
     post-write cache — so ring buffers stay correct: a chunk write that
@@ -238,7 +295,8 @@ def apply_gqa_prefill(p, x, cache, pos, valid, *, num_heads, num_kv_heads,
     written at most once per chunk).
     """
     B, C, D = x.shape
-    T = cache["k"].shape[1]
+    paged = pages is not None
+    T = length if paged else cache["k"].shape[1]
     if sliding_window is not None and C > T:
         raise ValueError(f"chunk size {C} exceeds ring-buffer length {T}")
     q, k, v = _qkv(p, x, num_heads, num_kv_heads, head_dim)
@@ -259,32 +317,27 @@ def apply_gqa_prefill(p, x, cache, pos, valid, *, num_heads, num_kv_heads,
         m_chunk = m_chunk & (qpos[:, None, :] > qpos[:, :, None] - sliding_window)
     mask = jnp.concatenate([m_cache, m_chunk], axis=-1)[:, None]  # (B,1,C,T+C)
 
+    cview = _view(cache, pages, T)
     quant = "k_scale" in cache
     if quant:
         # dequantized *view* for the prefill matmuls (transient, prefill-only;
         # the decode hot loop keeps streaming int8 via _sdpa_quant)
-        ck = (cache["k"].astype(jnp.float32) * cache["k_scale"]).astype(x.dtype)
-        cv = (cache["v"].astype(jnp.float32) * cache["v_scale"]).astype(x.dtype)
+        ck = (cview["k"].astype(jnp.float32) * cview["k_scale"]).astype(x.dtype)
+        cv = (cview["v"].astype(jnp.float32) * cview["v_scale"]).astype(x.dtype)
     else:
-        ck, cv = cache["k"], cache["v"]
+        ck, cv = cview["k"], cview["v"]
     y = _sdpa(q, jnp.concatenate([ck, k], axis=1),
               jnp.concatenate([cv, v], axis=1), mask) @ p["w_o"]
 
     # write the chunk; padded tokens scatter to index T == out of bounds -> drop
     slot = qpos % T if sliding_window is not None else qpos
-    slot = jnp.where(valid, slot, T)
-    b_idx = jnp.arange(B)[:, None]
     if quant:
         k_q, k_s = _quantize_kv(k)
         v_q, v_s = _quantize_kv(v)
-        new_cache = {"k": cache["k"].at[b_idx, slot].set(k_q, mode="drop"),
-                     "v": cache["v"].at[b_idx, slot].set(v_q, mode="drop"),
-                     "k_scale": cache["k_scale"].at[b_idx, slot].set(k_s, mode="drop"),
-                     "v_scale": cache["v_scale"].at[b_idx, slot].set(v_s, mode="drop")}
+        new = {"k": k_q, "v": v_q, "k_scale": k_s, "v_scale": v_s}
     else:
-        new_cache = {"k": cache["k"].at[b_idx, slot].set(k, mode="drop"),
-                     "v": cache["v"].at[b_idx, slot].set(v, mode="drop")}
-    return y, new_cache
+        new = {"k": k, "v": v}
+    return y, _write_chunk(cache, new, slot, valid, T, pages=pages)
 
 
 # ---------------------------------------------------------------------------
@@ -345,20 +398,24 @@ def init_mla_cache(batch: int, length: int, kv_lora_rank: int, qk_rope_dim: int,
 
 
 def apply_mla_decode(p, x, cache, pos, *, num_heads, kv_lora_rank, qk_nope_dim,
-                     qk_rope_dim, v_head_dim, rope_theta=10000.0):
+                     qk_rope_dim, v_head_dim, rope_theta=10000.0,
+                     pages=None, length=None, live=None):
     """Absorbed-matrices MLA decode: scores live in the kv_lora space.
-    pos: scalar or (B,) int32 (continuous batching)."""
+    pos: scalar or (B,) int32 (continuous batching); ``pages``/``length``
+    select the paged cache layout, ``live`` masks cache writes."""
     B = x.shape[0]
     H = num_heads
-    T = cache["c_kv"].shape[1]
+    paged = pages is not None
+    T = length if paged else cache["c_kv"].shape[1]
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     q_nope, q_rope, c_kv_new, k_pe_new = _mla_qc(
         p, x, pos_b[:, None], num_heads=H,
         qk_nope_dim=qk_nope_dim, qk_rope_dim=qk_rope_dim, rope_theta=rope_theta)
-    upd = jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(
-        c, n, s, axis=0))
-    c_kv = upd(cache["c_kv"], c_kv_new, pos_b)
-    k_pe = upd(cache["k_pe"], k_pe_new, pos_b)
+    new = {"c_kv": c_kv_new, "k_pe": k_pe_new}
+    new_cache = _write_rows(cache, new, pos_b, T, pages=pages, live=live)
+    view = _view(new_cache, pages, T)
+    c_kv = view["c_kv"]
+    k_pe = view["k_pe"]
     # absorb W_uk into q: q_eff (B,H,L)
     w_uk = p["w_uk"].reshape(kv_lora_rank, H, qk_nope_dim)
     q_eff = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], w_uk)
@@ -371,27 +428,31 @@ def apply_mla_decode(p, x, cache, pos, *, num_heads, kv_lora_rank, qk_nope_dim,
     o_c = jnp.einsum("bht,btl->bhl", probs, c_kv)                  # (B,H,L)
     w_uv = p["w_uv"].reshape(kv_lora_rank, H, v_head_dim)
     out = jnp.einsum("bhl,lhv->bhv", o_c, w_uv).reshape(B, 1, H * v_head_dim)
-    return out @ p["w_o"], {"c_kv": c_kv, "k_pe": k_pe}
+    return out @ p["w_o"], new_cache
 
 
 def apply_mla_prefill(p, x, cache, pos, valid, *, num_heads, kv_lora_rank,
-                      qk_nope_dim, qk_rope_dim, v_head_dim, rope_theta=10000.0):
+                      qk_nope_dim, qk_rope_dim, v_head_dim, rope_theta=10000.0,
+                      pages=None, length=None):
     """Chunked absorbed-matrices MLA prefill: C tokens per row, one dispatch.
 
-    x (B,C,D); cache c_kv (B,T,L) / k_pe (B,T,rope); pos (B,) start
-    positions; valid (B,C) as in apply_gqa_prefill.  Scores live in the
-    kv_lora space over [pre-chunk cache ; chunk latents].
+    x (B,C,D); cache c_kv (B,T,L) / k_pe (B,T,rope), or pooled with page
+    table ``pages``; pos (B,) start positions; valid (B,C) as in
+    apply_gqa_prefill.  Scores live in the kv_lora space over
+    [pre-chunk cache ; chunk latents].
     """
     B, C, _ = x.shape
     H = num_heads
-    T = cache["c_kv"].shape[1]
+    paged = pages is not None
+    T = length if paged else cache["c_kv"].shape[1]
     pos = jnp.asarray(pos, jnp.int32)
     qpos = pos[:, None] + jnp.arange(C, dtype=jnp.int32)          # (B,C)
     q_nope, q_rope, c_kv_new, k_pe_new = _mla_qc(
         p, x, qpos, num_heads=H, qk_nope_dim=qk_nope_dim,
         qk_rope_dim=qk_rope_dim, rope_theta=rope_theta)
-    c_all = jnp.concatenate([cache["c_kv"], c_kv_new], axis=1)    # (B,T+C,L)
-    pe_all = jnp.concatenate([cache["k_pe"], k_pe_new], axis=1)
+    cview = _view(cache, pages, T)
+    c_all = jnp.concatenate([cview["c_kv"], c_kv_new], axis=1)    # (B,T+C,L)
+    pe_all = jnp.concatenate([cview["k_pe"], k_pe_new], axis=1)
     w_uk = p["w_uk"].reshape(kv_lora_rank, H, qk_nope_dim)
     q_eff = jnp.einsum("bchd,lhd->bchl", q_nope, w_uk)
     scale = (qk_nope_dim + qk_rope_dim) ** -0.5
@@ -407,8 +468,5 @@ def apply_mla_prefill(p, x, cache, pos, valid, *, num_heads, kv_lora_rank,
     o_c = jnp.einsum("bhct,btl->bchl", probs, c_all)
     w_uv = p["w_uv"].reshape(kv_lora_rank, H, v_head_dim)
     out = jnp.einsum("bchl,lhv->bchv", o_c, w_uv).reshape(B, C, H * v_head_dim)
-    idx = jnp.where(valid, qpos, T)                               # T -> dropped
-    b_idx = jnp.arange(B)[:, None]
-    new_cache = {"c_kv": cache["c_kv"].at[b_idx, idx].set(c_kv_new, mode="drop"),
-                 "k_pe": cache["k_pe"].at[b_idx, idx].set(k_pe_new, mode="drop")}
-    return out @ p["w_o"], new_cache
+    new = {"c_kv": c_kv_new, "k_pe": k_pe_new}
+    return out @ p["w_o"], _write_chunk(cache, new, qpos, valid, T, pages=pages)

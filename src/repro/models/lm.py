@@ -161,14 +161,26 @@ def lm_loss(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None,
 # ---------------------------------------------------------------------------
 
 def init_decode_cache(params, cfg: ModelConfig, batch: int, length: int,
-                      dtype=jnp.float32, frontend_emb=None):
+                      dtype=jnp.float32, frontend_emb=None, paged=None):
+    """Decode cache pytree.  With ``paged`` (a repro.models.paging.PagedLayout)
+    the per-position leaves become shared page pools and the cache carries
+    the per-slot page tables under "pages" (full-length caches) and
+    "pages_swa" (sliding-window rings) — int32 (B, P) arrays of physical
+    page ids the serving engine rewrites at admit/retire boundaries."""
     cache: dict[str, Any] = {
-        "stack": stack_lib.init_stack_cache(cfg, batch, length, dtype)}
+        "stack": stack_lib.init_stack_cache(cfg, batch, length, dtype,
+                                            paged=paged)}
     if cfg.first_dense_layers:
-        cache["first"] = stack_lib.init_superblock_cache(cfg, batch, length, dtype)
+        cache["first"] = stack_lib.init_superblock_cache(cfg, batch, length,
+                                                         dtype, paged=paged)
     if cfg.is_encdec:
         assert frontend_emb is not None
         cache["memory"] = _run_encoder(params, cfg, frontend_emb, remat=False)
+    if paged is not None:
+        cache["pages"] = jnp.zeros((batch, paged.pages_per_slot), jnp.int32)
+        if paged.len_swa:
+            cache["pages_swa"] = jnp.zeros((batch, paged.pages_per_slot_swa),
+                                           jnp.int32)
     return cache
 
 
@@ -188,33 +200,39 @@ def abstract_decode_cache(cfg: ModelConfig, batch: int, length: int,
 
 
 def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
-                codec=None, codec_params=None):
+                codec=None, codec_params=None, paged=None, live=None):
     """tokens (B, 1) int32; pos scalar int32.  Returns (logits (B,1,V), cache').
 
     With a codec, the cut-layer feature (B, d_model) is compressed batch-wise
-    across the decode batch — the serving-path C3-SL integration.
+    across the decode batch — the serving-path C3-SL integration.  ``paged``
+    (static PagedLayout, matching the cache built with it) switches the
+    per-position cache leaves to pool+page-table addressing; ``live`` (B,)
+    masks every cache/state write for rows that are not decoding.
     """
     h = params["embed"][tokens]
     memory = cache.get("memory")
+    pages, pages_swa = cache.get("pages"), cache.get("pages_swa")
+    kw = dict(memory=memory, paged=paged, pages=pages, pages_swa=pages_swa,
+              live=live)
     new_cache = dict(cache)
     if cfg.first_dense_layers:
         h, new_cache["first"] = stack_lib.apply_superblock_decode(
-            params["first"], cache["first"], cfg, h, pos, memory=memory)
+            params["first"], cache["first"], cfg, h, pos, **kw)
 
     if codec is None:
         h, new_cache["stack"] = stack_lib.apply_stack_decode(
-            params["stack"], cache["stack"], cfg, h, pos, memory=memory)
+            params["stack"], cache["stack"], cfg, h, pos, **kw)
     else:
         n_cut = cfg.num_superblocks // 2
         p_front, p_back = _split_stacked(params["stack"], n_cut)
         c_front, c_back = _split_stacked(cache["stack"], n_cut)
         h, nc_front = stack_lib.apply_stack_decode(p_front, c_front, cfg, h, pos,
-                                                   memory=memory)
+                                                   **kw)
         B, _, d = h.shape
         payload = codec.encode(codec_params, h.reshape(B, d))
         h = codec.decode(codec_params, payload).reshape(B, 1, d)
         h, nc_back = stack_lib.apply_stack_decode(p_back, c_back, cfg, h, pos,
-                                                  memory=memory)
+                                                  **kw)
         new_cache["stack"] = jax.tree.map(
             lambda f, b: jnp.concatenate([f, b], axis=0), nc_front, nc_back)
 
@@ -227,7 +245,7 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
 # ---------------------------------------------------------------------------
 
 def prefill_chunk(params, cache, tokens, pos, cfg: ModelConfig, *,
-                  codec=None, codec_params=None, valid=None):
+                  codec=None, codec_params=None, valid=None, paged=None):
     """Ingest C prompt tokens per row in ONE dispatch (vs C decode dispatches).
 
     tokens (B,C) int32; pos (B,) int32 per-row start positions; valid (B,C)
@@ -254,14 +272,16 @@ def prefill_chunk(params, cache, tokens, pos, cfg: ModelConfig, *,
         valid = jnp.ones((B, C), bool)
     h = params["embed"][tokens]
     memory = cache.get("memory")
+    pages, pages_swa = cache.get("pages"), cache.get("pages_swa")
+    kw = dict(memory=memory, paged=paged, pages=pages, pages_swa=pages_swa)
     new_cache = dict(cache)
     if cfg.first_dense_layers:
         h, new_cache["first"] = stack_lib.apply_superblock_prefill(
-            params["first"], cache["first"], cfg, h, pos, valid, memory=memory)
+            params["first"], cache["first"], cfg, h, pos, valid, **kw)
 
     if codec is None:
         h, new_cache["stack"] = stack_lib.apply_stack_prefill(
-            params["stack"], cache["stack"], cfg, h, pos, valid, memory=memory)
+            params["stack"], cache["stack"], cfg, h, pos, valid, **kw)
     else:
         from repro.codecs.c3sl import (sequence_group_decode,
                                        sequence_group_encode)
@@ -269,12 +289,12 @@ def prefill_chunk(params, cache, tokens, pos, cfg: ModelConfig, *,
         p_front, p_back = _split_stacked(params["stack"], n_cut)
         c_front, c_back = _split_stacked(cache["stack"], n_cut)
         h, nc_front = stack_lib.apply_stack_prefill(p_front, c_front, cfg, h,
-                                                    pos, valid, memory=memory)
+                                                    pos, valid, **kw)
         payload = sequence_group_encode(codec, codec_params, h.swapaxes(0, 1))
         h = sequence_group_decode(codec, codec_params, payload,
                                   C, B).swapaxes(0, 1)
         h, nc_back = stack_lib.apply_stack_prefill(p_back, c_back, cfg, h,
-                                                   pos, valid, memory=memory)
+                                                   pos, valid, **kw)
         new_cache["stack"] = jax.tree.map(
             lambda f, b: jnp.concatenate([f, b], axis=0), nc_front, nc_back)
 

@@ -208,12 +208,28 @@ def apply_stack(stacked, cfg: ModelConfig, h, positions, *, memory=None,
 # decode (one token, stacked caches)
 # ---------------------------------------------------------------------------
 
-def init_sublayer_cache(kind: str, cfg: ModelConfig, batch: int, length: int, dtype):
+def init_sublayer_cache(kind: str, cfg: ModelConfig, batch: int, length: int,
+                        dtype, *, paged=None):
+    """One sublayer's decode cache.  With ``paged`` (a PagedLayout), the
+    per-position kinds (attn/mla) become shared page POOLS
+    (num_pages, page_size, ...) instead of per-slot (B, T, ...) strips —
+    the same leaf constructors, re-dimensioned.  Stateful kinds
+    (mamba/rwkv) keep their per-slot O(1) state either way."""
     if kind == "attn":
+        if paged is not None:
+            np_, sw = ((paged.num_pages_swa, True) if cfg.sliding_window
+                       else (paged.num_pages, False))
+            return attn_lib.init_gqa_cache(np_, paged.page_size,
+                                           cfg.num_kv_heads, cfg.head_dim_,
+                                           dtype, quant=cfg.kv_cache_quant)
         T = min(length, cfg.sliding_window) if cfg.sliding_window else length
         return attn_lib.init_gqa_cache(batch, T, cfg.num_kv_heads, cfg.head_dim_,
                                        dtype, quant=cfg.kv_cache_quant)
     if kind == "mla":
+        if paged is not None:
+            return attn_lib.init_mla_cache(paged.num_pages, paged.page_size,
+                                           cfg.kv_lora_rank, cfg.qk_rope_dim,
+                                           dtype)
         return attn_lib.init_mla_cache(batch, length, cfg.kv_lora_rank,
                                        cfg.qk_rope_dim, dtype)
     if kind == "mamba":
@@ -229,34 +245,49 @@ def init_sublayer_cache(kind: str, cfg: ModelConfig, batch: int, length: int, dt
 
 
 def init_superblock_cache(cfg: ModelConfig, batch: int, length: int, dtype,
-                          pattern=None):
+                          pattern=None, *, paged=None):
     pattern = pattern or cfg.block_pattern
-    return {f"l{li}_{si}_{kind}": init_sublayer_cache(kind, cfg, batch, length, dtype)
+    return {f"l{li}_{si}_{kind}": init_sublayer_cache(kind, cfg, batch, length,
+                                                      dtype, paged=paged)
             for li, layer in enumerate(pattern)
             for si, kind in enumerate(layer)}
 
 
-def init_stack_cache(cfg: ModelConfig, batch: int, length: int, dtype):
-    one = init_superblock_cache(cfg, batch, length, dtype)
+def init_stack_cache(cfg: ModelConfig, batch: int, length: int, dtype, *,
+                     paged=None):
+    one = init_superblock_cache(cfg, batch, length, dtype, paged=paged)
     return jax.tree.map(
         lambda a: jnp.broadcast_to(a, (cfg.num_superblocks, *a.shape)), one)
 
 
+def _paged_args(kind: str, cfg: ModelConfig, paged, pages, pages_swa):
+    """(pages, length) kwargs for an attn/mla sublayer: SWA attn caches use
+    the ring table + window length, everything else the full-length table."""
+    if paged is None:
+        return {"pages": None, "length": None}
+    if kind == "attn" and cfg.sliding_window:
+        return {"pages": pages_swa, "length": paged.len_swa}
+    return {"pages": pages, "length": paged.len_linear}
+
+
 def apply_sublayer_decode(kind: str, p, cache, cfg: ModelConfig, h, pos, *,
-                          memory=None):
+                          memory=None, paged=None, pages=None, pages_swa=None,
+                          live=None):
     x = _apply_norm(cfg, p["norm"], h)
     if kind == "attn":
         y, new_cache = attn_lib.apply_gqa_decode(
             p, x, cache, pos, num_heads=cfg.num_heads,
             num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim_,
             rotary_dim=cfg.rotary_dim, rope_theta=cfg.rope_theta,
-            sliding_window=cfg.sliding_window)
+            sliding_window=cfg.sliding_window, live=live,
+            **_paged_args(kind, cfg, paged, pages, pages_swa))
     elif kind == "mla":
         y, new_cache = attn_lib.apply_mla_decode(
             p, x, cache, pos, num_heads=cfg.num_heads,
             kv_lora_rank=cfg.kv_lora_rank, qk_nope_dim=cfg.qk_nope_dim,
             qk_rope_dim=cfg.qk_rope_dim, v_head_dim=cfg.v_head_dim,
-            rope_theta=cfg.rope_theta)
+            rope_theta=cfg.rope_theta, live=live,
+            **_paged_args(kind, cfg, paged, pages, pages_swa))
     elif kind == "cross":
         y = attn_lib.apply_cross_attention(p, x, memory, num_heads=cfg.num_heads,
                                            num_kv_heads=cfg.num_kv_heads,
@@ -285,30 +316,45 @@ def apply_sublayer_decode(kind: str, p, cache, cfg: ModelConfig, h, pos, *,
         new_cache = {"x_prev": st["x_prev_cm"]}
     else:
         raise ValueError(kind)
+    if live is not None and kind in ("mamba", "rwkv_tm", "rwkv_cm"):
+        # recurrent state commits only for live rows (a mid-prefill slot's
+        # state must not advance on interleaved decode steps)
+        new_cache = jax.tree.map(
+            lambda n, o: jnp.where(
+                live.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+            new_cache, cache)
     return y, new_cache
 
 
 def apply_superblock_decode(p_sb, cache_sb, cfg: ModelConfig, h, pos, *,
-                            pattern=None, memory=None):
+                            pattern=None, memory=None, paged=None, pages=None,
+                            pages_swa=None, live=None):
     pattern = pattern or cfg.block_pattern
     new_cache = {}
     for li, layer in enumerate(pattern):
         for si, kind in enumerate(layer):
             key = f"l{li}_{si}_{kind}"
             y, new_cache[key] = apply_sublayer_decode(
-                kind, p_sb[key], cache_sb[key], cfg, h, pos, memory=memory)
+                kind, p_sb[key], cache_sb[key], cfg, h, pos, memory=memory,
+                paged=paged, pages=pages, pages_swa=pages_swa, live=live)
             h = h + y
     return h, new_cache
 
 
-def apply_stack_decode(stacked, cache, cfg: ModelConfig, h, pos, *, memory=None):
+def apply_stack_decode(stacked, cache, cfg: ModelConfig, h, pos, *, memory=None,
+                       paged=None, pages=None, pages_swa=None, live=None):
     """One-token decode through the whole stack; cache leaves have leading
-    superblock dim.  Returns (h, new_cache)."""
+    superblock dim.  Returns (h, new_cache).  Page tables (``pages`` /
+    ``pages_swa``) are shared by every superblock — the scan closes over
+    them; only the pools are scanned."""
 
     def body(h, xs):
         p_sb, cache_sb = xs
         h, new_cache_sb = apply_superblock_decode(p_sb, cache_sb, cfg, h, pos,
-                                                  memory=memory)
+                                                  memory=memory, paged=paged,
+                                                  pages=pages,
+                                                  pages_swa=pages_swa,
+                                                  live=live)
         return h, new_cache_sb
 
     h, new_cache = jax.lax.scan(body, h, (stacked, cache))
@@ -349,7 +395,8 @@ def _prefill_stateful(kind: str, p, cache, cfg: ModelConfig, x, valid):
 
 
 def apply_sublayer_prefill(kind: str, p, cache, cfg: ModelConfig, h, pos,
-                           valid, *, memory=None):
+                           valid, *, memory=None, paged=None, pages=None,
+                           pages_swa=None):
     """Chunked-prefill sublayer step.  h (B,C,d); pos (B,) start positions;
     valid (B,C) marks real tokens.  Returns (residual update, new_cache).
     Padded positions never touch caches or recurrent state; their outputs
@@ -360,13 +407,15 @@ def apply_sublayer_prefill(kind: str, p, cache, cfg: ModelConfig, h, pos,
             p, x, cache, pos, valid, num_heads=cfg.num_heads,
             num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim_,
             rotary_dim=cfg.rotary_dim, rope_theta=cfg.rope_theta,
-            sliding_window=cfg.sliding_window)
+            sliding_window=cfg.sliding_window,
+            **_paged_args(kind, cfg, paged, pages, pages_swa))
     elif kind == "mla":
         y, new_cache = attn_lib.apply_mla_prefill(
             p, x, cache, pos, valid, num_heads=cfg.num_heads,
             kv_lora_rank=cfg.kv_lora_rank, qk_nope_dim=cfg.qk_nope_dim,
             qk_rope_dim=cfg.qk_rope_dim, v_head_dim=cfg.v_head_dim,
-            rope_theta=cfg.rope_theta)
+            rope_theta=cfg.rope_theta,
+            **_paged_args(kind, cfg, paged, pages, pages_swa))
     elif kind == "cross":
         y = attn_lib.apply_cross_attention(p, x, memory, num_heads=cfg.num_heads,
                                            num_kv_heads=cfg.num_kv_heads,
@@ -391,27 +440,31 @@ def apply_sublayer_prefill(kind: str, p, cache, cfg: ModelConfig, h, pos,
 
 
 def apply_superblock_prefill(p_sb, cache_sb, cfg: ModelConfig, h, pos, valid, *,
-                             pattern=None, memory=None):
+                             pattern=None, memory=None, paged=None, pages=None,
+                             pages_swa=None):
     pattern = pattern or cfg.block_pattern
     new_cache = {}
     for li, layer in enumerate(pattern):
         for si, kind in enumerate(layer):
             key = f"l{li}_{si}_{kind}"
             y, new_cache[key] = apply_sublayer_prefill(
-                kind, p_sb[key], cache_sb[key], cfg, h, pos, valid, memory=memory)
+                kind, p_sb[key], cache_sb[key], cfg, h, pos, valid,
+                memory=memory, paged=paged, pages=pages, pages_swa=pages_swa)
             h = h + y
     return h, new_cache
 
 
 def apply_stack_prefill(stacked, cache, cfg: ModelConfig, h, pos, valid, *,
-                        memory=None):
+                        memory=None, paged=None, pages=None, pages_swa=None):
     """Chunked prefill through the whole stack; cache leaves have leading
     superblock dim.  Returns (h (B,C,d), new_cache)."""
 
     def body(h, xs):
         p_sb, cache_sb = xs
         h, new_cache_sb = apply_superblock_prefill(p_sb, cache_sb, cfg, h, pos,
-                                                   valid, memory=memory)
+                                                   valid, memory=memory,
+                                                   paged=paged, pages=pages,
+                                                   pages_swa=pages_swa)
         return h, new_cache_sb
 
     h, new_cache = jax.lax.scan(body, h, (stacked, cache))

@@ -12,14 +12,42 @@ Two prefill modes:
   length mask), so a length-L prompt costs ceil(L/C) dispatches instead of
   L.  Slot state (positions, last token, done flags, output buffer) lives
   ON DEVICE and is advanced inside the jitted step with `jnp.where`
-  masking; the Python loop syncs with the device only every ``sync_every``
-  decode steps (EOS flags fetched in batches) and on admit/retire
-  boundaries.  Cache and state buffers are donated to the jitted programs,
-  so XLA updates them in place instead of copying the KV cache every step.
+  masking; decode runs in jitted WINDOWS — a `lax.while_loop` of up to
+  ``sync_every`` fused steps per dispatch that exits device-side the
+  moment no slot is live, so a drained batch never pays for the rest of
+  its window.  The Python loop syncs with the device only per window and
+  on admit/retire boundaries.  Cache and state buffers are donated to the
+  jitted programs, so XLA updates them in place instead of copying the KV
+  cache every step.
 
 * ``"decode"`` — the original prefill-as-decode path (one token, one
   dispatch, one host sync per engine step), kept as the measurable
   baseline for benchmarks/bench_serving.py and for equivalence tests.
+
+Two KV-cache layouts (``kv_layout``):
+
+* ``"contiguous"`` (default) — every slot owns a (max_len, ...) strip, so
+  one short request reserves as much HBM as a long one.
+* ``"paged"`` — per-position cache leaves are shared pools of
+  ``page_size``-position pages addressed through per-slot page tables
+  (repro.models.paging); a request reserves only
+  ``ceil(min(prompt + max_new, max_len) / page_size)`` pages at admit and
+  frees them at retire.  ``num_pages`` sizes the pool — below
+  ``num_slots * ceil(max_len / page_size)`` it is an oversubscribed pool
+  and admission waits (FIFO) for pages.  Paged reads gather the pool into
+  the exact contiguous layout inside the jitted step, so outputs are
+  bit-identical to the contiguous baseline (same masks, same reductions).
+
+Prefill/decode interleaving (``interleave``): 0 prefills every admitted
+prompt to completion before decoding resumes (lowest time-to-first-token
+for the admitted request, but running slots stall for the whole prompt);
+k > 0 alternates one prefill chunk with up to k decode steps, bounding
+how long running requests stall per admitted prompt at the cost of a
+slower prefill.  The knob trades new-request TTFT against in-flight
+inter-token latency; GREEDY outputs are unaffected without a codec
+(rows are independent — with sampling the dispatch schedule changes the
+RNG-key stream, so tokens differ), and the equivalence suite runs at
+interleave=0.
 
 The C3-SL codec applies to each step's cut-layer features across the
 active slots; on the chunked path the features are grouped PER POSITION
@@ -29,11 +57,14 @@ when slot occupancy matches too (full batch, equal-length prompts,
 lockstep admission); empty slots or ragged prompts contribute different
 padding features to the superposition on the two paths, so there outputs
 agree only up to codec cross-talk — the price batch-wise compression
-always puts on occupancy changes.
+always puts on occupancy changes.  The same caveat applies to paged vs
+contiguous under a codec: non-live rows read (masked-out but
+codec-visible) stale pages instead of zeroed strips.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 
 import jax
@@ -43,6 +74,8 @@ import numpy as np
 from repro import codecs as codecs_lib
 from repro.configs.base import ModelConfig
 from repro.models import lm as lm_lib
+from repro.models.paging import PagedLayout
+from repro.serving.paging import PageAllocator
 
 
 @dataclasses.dataclass
@@ -52,6 +85,8 @@ class Request:
     max_new_tokens: int = 16
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: float = 0.0   # set by submit()
+    t_first: float | None = None  # first token observed (TTFT = t_first - t_submit)
 
 
 @dataclasses.dataclass
@@ -59,6 +94,8 @@ class _Slot:
     req: Request | None = None
     pos: int = 0             # next cache position to write (legacy mode)
     in_prompt: int = 0       # tokens of the prompt already ingested (legacy)
+    ingested: int = 0        # tokens of the prompt already ingested (chunked)
+    pages: list = dataclasses.field(default_factory=list)  # owned linear pages
 
 
 class BatchedEngine:
@@ -66,7 +103,9 @@ class BatchedEngine:
                  max_len: int = 256, eos_id: int | None = None,
                  codec=None, codec_params=None, greedy: bool = True,
                  seed: int = 0, prefill_mode: str = "chunked",
-                 chunk_size: int = 16, sync_every: int = 8):
+                 chunk_size: int = 16, sync_every: int = 8,
+                 kv_layout: str = "contiguous", page_size: int = 16,
+                 num_pages: int | None = None, interleave: int = 0):
         # `codec` may be a ready codec object or a registry spec string
         # (e.g. "c3sl:R=4|int8"); specs are built against the decode cut
         # layer (D = d_model) and clamped to the slot count.  "none" means
@@ -82,6 +121,9 @@ class BatchedEngine:
         if prefill_mode not in ("chunked", "decode"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r} "
                              "(expected 'chunked' | 'decode')")
+        if kv_layout not in ("contiguous", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r} "
+                             "(expected 'contiguous' | 'paged')")
         self.codec = codec
         self.codec_params = codec_params
         self.params = params
@@ -91,6 +133,8 @@ class BatchedEngine:
         self.eos_id = eos_id
         self.greedy = greedy
         self.prefill_mode = prefill_mode
+        self.kv_layout = kv_layout
+        self.interleave = max(0, interleave)
         # each ring slot must be written at most once per chunk (SWA caches
         # are rings of length sliding_window)
         if cfg.sliding_window:
@@ -98,11 +142,44 @@ class BatchedEngine:
         self.chunk_size = max(1, min(chunk_size, max_len))
         self.sync_every = max(1, sync_every)
         self.rng = jax.random.PRNGKey(seed)
-        self.cache = lm_lib.init_decode_cache(params, cfg, num_slots, max_len)
+
+        self.paged: PagedLayout | None = None
+        self.allocator: PageAllocator | None = None
+        # which cache class actually backs full-length pages: MLA latents
+        # always; attn only without a sliding window (SWA attn lives in the
+        # statically-owned ring pools).  A pure-SWA or attention-free model
+        # must not gate admission on a pool no leaf is allocated from.
+        kinds = {k for layer in cfg.block_pattern for k in layer}
+        self._linear_backed = ("mla" in kinds
+                               or ("attn" in kinds and not cfg.sliding_window))
+        if kv_layout == "paged":
+            len_swa = min(max_len, cfg.sliding_window) if cfg.sliding_window else 0
+            pps = -(-max_len // page_size)
+            pps_swa = -(-len_swa // page_size) if len_swa else 0
+            if num_pages is None:
+                num_pages = num_slots * pps      # fully provisioned pool
+            # SWA rings are window-bounded already; each slot keeps its ring
+            # pages for its lifetime (static table), only full-length pages
+            # are allocated per request.
+            self.paged = PagedLayout(page_size, max_len, num_pages,
+                                     len_swa, num_slots * pps_swa)
+            self.allocator = PageAllocator(num_pages)
+            self._table = np.zeros((num_slots, pps), np.int32)
+        self.cache = lm_lib.init_decode_cache(params, cfg, num_slots, max_len,
+                                              paged=self.paged)
+        if self.paged is not None:
+            self.cache["pages"] = jnp.asarray(self._table)
+            if self.paged.len_swa:
+                self.cache["pages_swa"] = jnp.asarray(
+                    np.arange(num_slots * self.paged.pages_per_slot_swa,
+                              dtype=np.int32)
+                    .reshape(num_slots, self.paged.pages_per_slot_swa))
         self.slots = [_Slot() for _ in range(num_slots)]
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
         self._tokens_decoded = 0
+        self._dirty = True            # force the first boundary to run
+        self.stats = {"dispatches": 0, "decode_steps": 0, "prefill_chunks": 0}
         self.state = self._init_state()
         self._build_programs()
 
@@ -128,6 +205,8 @@ class BatchedEngine:
     def _build_programs(self):
         cfg, codec, codec_params = self.cfg, self.codec, self.codec_params
         greedy, eos_id, max_len = self.greedy, self.eos_id, self.max_len
+        paged = self.paged
+        self._window_len = max(self.sync_every, self.interleave, 1)
 
         def pick(logits, key):
             if greedy:
@@ -141,11 +220,14 @@ class BatchedEngine:
             return fin
 
         def step_fn(params, cache, state, key):
-            """One fused decode step: model forward + ALL slot bookkeeping."""
+            """One fused decode step: model forward + ALL slot bookkeeping.
+            Cache/state writes are masked to `live` rows, so decoding can
+            run while other slots are empty or mid-prefill (interleaving)
+            without stomping their cache pages or recurrent state."""
             live = state["active"] & ~state["done"]
             logits, cache = lm_lib.decode_step(
                 params, cache, state["last_tok"][:, None], state["pos"], cfg,
-                codec=codec, codec_params=codec_params)
+                codec=codec, codec_params=codec_params, paged=paged, live=live)
             nxt = jnp.where(live, pick(logits[:, -1], key), state["last_tok"])
             B, cap = state["out_buf"].shape
             col = jnp.where(live, jnp.minimum(state["out_len"], cap - 1), cap)
@@ -156,13 +238,29 @@ class BatchedEngine:
             return cache, {**state, "pos": pos, "last_tok": nxt, "done": done,
                            "out_len": out_len, "out_buf": out_buf}
 
+        def window_fn(params, cache, state, keys, n):
+            """Up to n (<= W) fused decode steps in ONE dispatch; exits
+            device-side as soon as no slot is live, so a drained batch
+            pays nothing for the rest of its window."""
+            def cond(carry):
+                i, _, state = carry
+                return (i < n) & jnp.any(state["active"] & ~state["done"])
+
+            def body(carry):
+                i, cache, state = carry
+                cache, state = step_fn(params, cache, state, keys[i])
+                return i + 1, cache, state
+
+            return jax.lax.while_loop(cond, body, (jnp.int32(0), cache, state))
+
         def prefill_fn(params, cache, state, tokens, valid, completes, key):
             """Ingest one prompt chunk for the rows `valid` marks; rows whose
             prompt ends in this chunk (`completes`) commit their first
             generated token from the last prompt position's logits."""
             logits, cache = lm_lib.prefill_chunk(
                 params, cache, tokens, state["pos"], cfg,
-                codec=codec, codec_params=codec_params, valid=valid)
+                codec=codec, codec_params=codec_params, valid=valid,
+                paged=paged)
             nxt = jnp.where(completes, pick(logits, key), state["last_tok"])
             B, cap = state["out_buf"].shape
             col = jnp.where(completes, jnp.minimum(state["out_len"], cap - 1), cap)
@@ -180,26 +278,38 @@ class BatchedEngine:
             layout is known by KEY: "stack" leaves carry (num_superblocks,
             B, ...), "first" leaves (B, ...), "memory" (encoder output) is
             never per-slot state — no shape guessing against dims that
-            happen to equal num_slots (heads, cache length, ...)."""
+            happen to equal num_slots (heads, cache length, ...).  Paged
+            pools (attn/mla leaves) are left alone: reads past a slot's
+            written positions are masked, so stale pages are invisible;
+            only per-slot recurrent state needs zeroing."""
             def zero(subtree, axis):
                 def z(leaf):
                     m = mask.reshape((1,) * axis + (-1,)
                                      + (1,) * (leaf.ndim - axis - 1))
                     return jnp.where(m, 0, leaf)
                 return jax.tree.map(z, subtree)
+
+            def zero_block(block, axis):
+                if paged is None:
+                    return zero(block, axis)
+                return {key: (sub if key.rsplit("_", 1)[-1] in ("attn", "mla")
+                              else zero(sub, axis))
+                        for key, sub in block.items()}
+
             new = dict(cache)
-            new["stack"] = zero(cache["stack"], 1)
+            new["stack"] = zero_block(cache["stack"], 1)
             if "first" in cache:
-                new["first"] = zero(cache["first"], 0)
+                new["first"] = zero_block(cache["first"], 0)
             return new
 
-        def legacy_step_fn(params, cache, tokens, pos, key):
+        def legacy_step_fn(params, cache, tokens, pos, key, live):
             logits, cache = lm_lib.decode_step(params, cache, tokens, pos, cfg,
                                                codec=codec,
-                                               codec_params=codec_params)
+                                               codec_params=codec_params,
+                                               paged=paged, live=live)
             return pick(logits[:, -1], key), cache
 
-        self._step = jax.jit(step_fn, donate_argnums=(1, 2))
+        self._window = jax.jit(window_fn, donate_argnums=(1, 2))
         self._prefill = jax.jit(prefill_fn, donate_argnums=(1, 2))
         self._reset = jax.jit(reset_fn, donate_argnums=(0,))
         self._step_legacy = jax.jit(legacy_step_fn)
@@ -211,17 +321,37 @@ class BatchedEngine:
     def submit(self, req: Request):
         if not req.prompt:
             raise ValueError(f"request {req.uid}: empty prompt")
-        if len(req.prompt) > self.max_len:
+        if len(req.prompt) >= self.max_len:
+            # a full cache leaves no position for the decode loop to write:
+            # the request would be admitted, prefilled, and cut off after the
+            # single prefill-predicted token regardless of max_new_tokens
             raise ValueError(
-                f"request {req.uid}: prompt length {len(req.prompt)} exceeds "
-                f"the engine's max_len={self.max_len} cache positions; "
-                f"truncate the prompt or build the engine with a larger "
-                f"max_len")
+                f"request {req.uid}: prompt length {len(req.prompt)} leaves "
+                f"no decode positions in the engine's max_len={self.max_len} "
+                f"cache (need prompt length <= max_len - 1); truncate the "
+                f"prompt or build the engine with a larger max_len")
+        if self.paged is not None and self._linear_backed:
+            need = self.paged.pages_for(len(req.prompt) + req.max_new_tokens)
+            if need > self.paged.num_pages:
+                raise ValueError(
+                    f"request {req.uid}: needs {need} cache pages but the "
+                    f"pool only has {self.paged.num_pages}; shorten the "
+                    f"request or build the engine with more num_pages")
+        req.t_submit = time.monotonic()
         self.queue.append(req)
+        self._dirty = True            # a later run() must re-check admission
 
     @property
     def active(self) -> int:
         return sum(s.req is not None for s in self.slots)
+
+    @property
+    def cache_bytes(self) -> int:
+        """RESIDENT device bytes held by the KV cache (pools + tables +
+        states) — the paged-vs-contiguous benchmark's memory metric.
+        Excludes per-step transients (the paged read's gathered view of
+        one layer's cache; see benchmarks/README.md)."""
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache))
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         if self.prefill_mode == "decode":
@@ -231,13 +361,22 @@ class BatchedEngine:
             self._boundary()
             if not (self.queue or self.active):
                 break
-            for _ in range(self.sync_every):
-                self.rng, key = jax.random.split(self.rng)
-                self.cache, self.state = self._step(
-                    self.params, self.cache, self.state, key)
-                steps += 1
-                if steps >= max_steps:
-                    break
+            if self._pending_prefill():
+                self._prefill_one_chunk()
+                if self.interleave == 0:
+                    # PR2 behavior: admitted prompts prefill to completion
+                    while self._pending_prefill():
+                        self._prefill_one_chunk()
+                else:
+                    # the host knows which slots have finished their prompt —
+                    # don't dispatch a window that would exit at step 0
+                    if any(s.req is not None
+                           and s.ingested >= len(s.req.prompt)
+                           for s in self.slots):
+                        steps += self._decode_window(
+                            min(self.interleave, max_steps - steps))
+                    continue
+            steps += self._decode_window(min(self.sync_every, max_steps - steps))
         self._boundary()
         return self.finished
 
@@ -245,19 +384,94 @@ class BatchedEngine:
     # fast path internals
     # ------------------------------------------------------------------
 
+    def _decode_window(self, n: int) -> int:
+        """Dispatch one jitted decode window of up to n steps; returns the
+        number of steps the device actually executed before draining."""
+        if n <= 0:
+            return 0
+        n = min(n, self._window_len)
+        keys = jax.random.split(self.rng, self._window_len + 1)
+        self.rng = keys[0]
+        i, self.cache, self.state = self._window(
+            self.params, self.cache, self.state, keys[1:], jnp.int32(n))
+        self.stats["dispatches"] += 1
+        executed = int(i)
+        self.stats["decode_steps"] += executed
+        if executed:
+            self._dirty = True
+        return executed
+
+    def _pending_prefill(self) -> bool:
+        return any(s.req is not None and s.ingested < len(s.req.prompt)
+                   for s in self.slots)
+
+    def _prefill_one_chunk(self):
+        """One chunk of up to chunk_size prompt tokens for EVERY slot still
+        prefilling, in a single dispatch (ragged tails padded under the
+        length mask; rows not prefilling are fully masked)."""
+        B, C = self.num_slots, self.chunk_size
+        tokens = np.zeros((B, C), np.int32)
+        valid = np.zeros((B, C), bool)
+        completes = np.zeros((B,), bool)
+        any_rows = False
+        for i, slot in enumerate(self.slots):
+            if slot.req is None or slot.ingested >= len(slot.req.prompt):
+                continue
+            seg = slot.req.prompt[slot.ingested:slot.ingested + C]
+            tokens[i, :len(seg)] = seg
+            valid[i, :len(seg)] = True
+            slot.ingested += len(seg)
+            completes[i] = slot.ingested >= len(slot.req.prompt)
+            any_rows = True
+        if not any_rows:
+            return
+        self.rng, key = jax.random.split(self.rng)
+        self.cache, self.state = self._prefill(
+            self.params, self.cache, self.state, jnp.asarray(tokens),
+            jnp.asarray(valid), jnp.asarray(completes), key)
+        self.stats["dispatches"] += 1
+        self.stats["prefill_chunks"] += 1
+        if completes.any():
+            # the completing dispatch commits the row's first token: stamp
+            # TTFT here, so the metric has per-chunk resolution at EVERY
+            # interleave setting.  Dispatch is async — block until the
+            # token actually exists, or enqueue time would flatter
+            # schedules that batch many dispatches between host syncs.
+            jax.block_until_ready(self.state["out_len"])
+            now = time.monotonic()
+            for i in np.flatnonzero(completes):
+                if self.slots[i].req.t_first is None:
+                    self.slots[i].req.t_first = now
+            self._dirty = True
+
     def _boundary(self):
         """Admit/retire boundary: the ONLY place the fast path syncs with
-        the device outside the batched `sync_every` cadence."""
+        the device outside the per-window cadence.  In paged mode this is
+        also where pages move: retire frees a slot's pages, admission
+        waits (FIFO — no overtaking) until the head request's reservation
+        fits the pool.  Skipped entirely while the host knows nothing could
+        have changed (no decode steps executed, no prompt completed, no new
+        submissions since the last boundary) — interleaved prefill of a
+        long prompt must not pay a blocking device_get per chunk."""
+        if not self._dirty:
+            return
+        self._dirty = False
         st = {k: np.array(v) for k, v in jax.device_get(self.state).items()}
+        now = time.monotonic()
         touched = False
         for i, slot in enumerate(self.slots):
-            if slot.req is not None and st["done"][i]:
+            if slot.req is None:
+                continue
+            if slot.req.t_first is None and st["out_len"][i] > 0:
+                slot.req.t_first = now
+            if st["done"][i]:
                 n = int(st["out_len"][i])
                 slot.req.out = [int(t) for t in st["out_buf"][i, :n]]
                 slot.req.done = True
                 self.finished.append(slot.req)
                 self._tokens_decoded += n
                 slot.req = None
+                self._free_slot_pages(i)
                 st["active"][i] = st["done"][i] = False
                 st["pos"][i] = st["last_tok"][i] = st["out_len"][i] = 0
                 st["out_buf"][i, :] = 0
@@ -265,7 +479,10 @@ class BatchedEngine:
         admitted: list[int] = []
         for i, slot in enumerate(self.slots):
             if slot.req is None and self.queue:
+                if not self._alloc_slot_pages(i, self.queue[0]):
+                    break                      # FIFO: wait for pages to free
                 slot.req = self.queue.popleft()
+                slot.ingested = 0
                 st["active"][i] = st["done"][i] = False
                 st["pos"][i] = st["last_tok"][i] = st["out_len"][i] = 0
                 st["max_new"][i] = slot.req.max_new_tokens
@@ -275,32 +492,34 @@ class BatchedEngine:
         if touched:
             self.state = jax.device_put(st)
         if admitted:
+            if self.paged is not None:
+                self.cache = {**self.cache, "pages": jnp.asarray(self._table)}
             mask = np.zeros((self.num_slots,), bool)
             mask[admitted] = True
             self.cache = self._reset(self.cache, jnp.asarray(mask))
-            self._prefill_admitted(admitted)
 
-    def _prefill_admitted(self, admitted: list[int]):
-        """Chunk the admitted slots' prompts: ceil(max_len/C) dispatches,
-        ragged tails padded under the length mask, zero host syncs (the
-        schedule depends only on host-known prompt lengths)."""
-        B, C = self.num_slots, self.chunk_size
-        prompts = {i: self.slots[i].req.prompt for i in admitted}
-        n_chunks = -(-max(len(p) for p in prompts.values()) // C)
-        for k in range(n_chunks):
-            tokens = np.zeros((B, C), np.int32)
-            valid = np.zeros((B, C), bool)
-            completes = np.zeros((B,), bool)
-            for i, prompt in prompts.items():
-                seg = prompt[k * C:(k + 1) * C]
-                if seg:
-                    tokens[i, :len(seg)] = seg
-                    valid[i, :len(seg)] = True
-                completes[i] = k * C < len(prompt) <= (k + 1) * C
-            self.rng, key = jax.random.split(self.rng)
-            self.cache, self.state = self._prefill(
-                self.params, self.cache, self.state, jnp.asarray(tokens),
-                jnp.asarray(valid), jnp.asarray(completes), key)
+    # ------------------------------------------------------------------
+    # page bookkeeping (host side; no-ops for the contiguous layout)
+    # ------------------------------------------------------------------
+
+    def _alloc_slot_pages(self, i: int, req: Request) -> bool:
+        if self.paged is None or not self._linear_backed:
+            return True           # no leaf draws from the full-length pool
+        need = self.paged.pages_for(len(req.prompt) + req.max_new_tokens)
+        got = self.allocator.alloc(need)
+        if got is None:
+            return False
+        self.slots[i].pages = got
+        self._table[i, :] = 0
+        self._table[i, :len(got)] = got
+        return True
+
+    def _free_slot_pages(self, i: int):
+        if self.paged is None:
+            return
+        self.allocator.free(self.slots[i].pages)
+        self.slots[i].pages = []
+        self._table[i, :] = 0
 
     # ------------------------------------------------------------------
     # legacy path (prefill-as-decode, one host sync per token) — kept as
@@ -316,9 +535,14 @@ class BatchedEngine:
     def _admit(self):
         for i, slot in enumerate(self.slots):
             if slot.req is None and self.queue:
+                if not self._alloc_slot_pages(i, self.queue[0]):
+                    break
                 slot.req = self.queue.popleft()
                 slot.pos = 0
                 slot.in_prompt = 0
+                if self.paged is not None:
+                    self.cache = {**self.cache,
+                                  "pages": jnp.asarray(self._table)}
                 self._reset_slot_cache(i)
 
     def step(self):
@@ -329,18 +553,28 @@ class BatchedEngine:
             return False
         tokens = np.zeros((self.num_slots, 1), np.int32)
         pos = np.zeros((self.num_slots,), np.int32)
+        occupied = np.zeros((self.num_slots,), bool)
         for i, s in enumerate(self.slots):
             if s.req is None:
                 continue
+            occupied[i] = True
             if s.in_prompt < len(s.req.prompt):
                 tokens[i, 0] = s.req.prompt[s.in_prompt]
             else:
                 tokens[i, 0] = s.req.out[-1]
             pos[i] = s.pos
         self.rng, key = jax.random.split(self.rng)
+        # contiguous: unmasked writes (empty rows scribble on their own
+        # zeroed strip, exactly the PR2 baseline the equivalence tests pin);
+        # paged: empty rows hold no pages, so their writes MUST be masked
+        live = jnp.asarray(occupied) if self.paged is not None else None
         nxt, self.cache = self._step_legacy(self.params, self.cache,
                                             jnp.asarray(tokens),
-                                            jnp.asarray(pos), key)
+                                            jnp.asarray(pos), key, live)
+        self.stats["dispatches"] += 1
+        # one fused batch step per dispatch — same unit as the chunked
+        # path's decode_steps (NOT per-slot generated tokens)
+        self.stats["decode_steps"] += 1
         nxt = np.asarray(nxt)
         for i, s in enumerate(self.slots):
             if s.req is None:
@@ -354,6 +588,8 @@ class BatchedEngine:
             if not fed_prompt or s.in_prompt == len(s.req.prompt):
                 tok = int(nxt[i])
                 s.req.out.append(tok)
+                if s.req.t_first is None:
+                    s.req.t_first = time.monotonic()
                 self._tokens_decoded += 1
                 if (self.eos_id is not None and tok == self.eos_id) \
                         or len(s.req.out) >= s.req.max_new_tokens \
@@ -362,6 +598,7 @@ class BatchedEngine:
             if s.req.done:
                 self.finished.append(s.req)
                 s.req = None
+                self._free_slot_pages(i)
         return True
 
     def _run_legacy(self, max_steps: int) -> list[Request]:

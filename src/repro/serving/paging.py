@@ -1,0 +1,47 @@
+"""Host-side page allocator for the paged KV cache.
+
+The device-side layout (pools + page tables, see ``repro.models.paging``)
+is pure data; WHICH physical pages a slot holds is serving policy and is
+decided here, on the host, at admit/retire boundaries only — the jitted
+step never allocates.
+
+The engine reserves a request's full worst-case footprint at admit
+(``ceil(min(prompt_len + max_new_tokens, max_len) / page_size)`` pages),
+so a mid-flight decode can never run out of pages and there is no
+preemption path; the memory win over the contiguous layout is that a
+short request ties up its own footprint instead of ``max_len`` positions.
+Admission is FIFO-blocking: when the head of the queue does not fit, the
+engine waits for pages to free rather than admitting later (smaller)
+requests past it, so a long request cannot be starved.
+"""
+from __future__ import annotations
+
+
+class PageAllocator:
+    """Free-list allocator over ``num_pages`` physical pages.
+
+    Frees are pushed back in retire order, so a recycled slot typically
+    gets DIFFERENT physical pages than its previous occupant — the
+    equivalence tests lean on this to exercise free + realloc shuffling.
+    """
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free = list(range(num_pages))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` pages, or None (allocation is all-or-nothing)."""
+        if n > len(self._free):
+            return None
+        got, self._free = self._free[:n], self._free[n:]
+        return got
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            if not 0 <= p < self.num_pages or p in self._free:
+                raise ValueError(f"double/invalid free of page {p}")
+        self._free.extend(pages)

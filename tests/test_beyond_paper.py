@@ -30,7 +30,8 @@ def test_sequence_group_binding_long_context():
     p = codec.init(jax.random.PRNGKey(0))
     Z = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
     payload = codec_lib.sequence_group_encode(codec, p, Z)
-    assert payload.shape == (B * S // 4, d)  # 4x fewer vectors on the wire
+    # 4x fewer vectors on the wire, leading group axis kept (3-D layout)
+    assert payload.shape == (B, S // 4, d)
     Zhat = codec_lib.sequence_group_decode(codec, p, payload, B, S)
     assert Zhat.shape == Z.shape
     # information flows (lossy but correlated)

@@ -184,7 +184,11 @@ def test_sequence_group_encode_validates_divisibility():
         codecs.sequence_group_encode(c, p, jnp.zeros((1, 63, 32)))
     payload = codecs.sequence_group_encode(
         c, p, jax.random.normal(jax.random.PRNGKey(1), (1, 64, 32)))
-    assert payload.shape == (16, 32)
+    assert payload.shape == (1, 16, 32)   # sequence-grouped 3-D layout
+    # groups that would straddle the leading axis fall back to the flat form
+    flat = codecs.sequence_group_encode(
+        c, p, jax.random.normal(jax.random.PRNGKey(1), (2, 6, 32)))
+    assert flat.shape == (3, 32)
 
 
 def test_engine_accepts_spec_strings():

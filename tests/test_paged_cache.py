@@ -1,0 +1,358 @@
+"""Paged KV cache: reads must be bit-identical to the contiguous layout.
+
+Covers the property the engine's correctness rests on — gather-addressed
+paged attention (GQA linear + SWA ring + int8 KV + MLA latents) equals the
+contiguous cache for the same token stream — across ragged prefill tails,
+staggered per-row positions, shuffled/non-contiguous page tables, and
+mid-flight slot recycling (pages freed and reallocated to other requests).
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.models import lm as lm_lib
+from repro.models.paging import PagedLayout, gather_pages, scatter_chunk, \
+    scatter_rows
+from repro.serving.engine import BatchedEngine, Request
+
+
+def _cfg(**over):
+    base = dict(num_layers=2, d_model=128, d_ff=256, vocab_size=128,
+                num_heads=4, num_kv_heads=2, head_dim=32)
+    base.update(over)
+    return reduced(get_config("deepseek-7b"), **base)
+
+
+def _variant_cfg(variant):
+    cfg = _cfg()
+    if variant == "swa":
+        cfg = dataclasses.replace(cfg, sliding_window=8)
+    elif variant == "int8":
+        cfg = dataclasses.replace(cfg, kv_cache_quant=True)
+    return cfg
+
+
+def _paged_cache(params, cfg, B, T, ps, rng):
+    """Fully-provisioned paged cache with SHUFFLED page tables, so every
+    slot owns scattered, out-of-order physical pages — the layout can only
+    agree with the contiguous cache if the table indirection is right."""
+    pps = -(-T // ps)
+    len_swa = min(T, cfg.sliding_window) if cfg.sliding_window else 0
+    pps_swa = -(-len_swa // ps) if len_swa else 0
+    layout = PagedLayout(ps, T, B * pps, len_swa, max(B * pps_swa, 1)
+                         if len_swa else 0)
+    cache = lm_lib.init_decode_cache(params, cfg, B, T, paged=layout)
+    cache["pages"] = jnp.asarray(
+        rng.permutation(B * pps).astype(np.int32).reshape(B, pps))
+    if len_swa:
+        cache["pages_swa"] = jnp.asarray(
+            rng.permutation(B * pps_swa).astype(np.int32).reshape(B, pps_swa))
+    return layout, cache
+
+
+# ---------------------------------------------------------------------------
+# paging primitives
+# ---------------------------------------------------------------------------
+
+def test_gather_scatter_roundtrip():
+    """gather_pages(view) of scattered writes reconstructs the contiguous
+    layout exactly, including a view length that is NOT a page multiple."""
+    rng = np.random.RandomState(0)
+    B, T, ps = 3, 14, 4                      # 4 pages/slot, view sliced to 14
+    pps = -(-T // ps)
+    table = jnp.asarray(rng.permutation(B * pps).astype(np.int32)
+                        .reshape(B, pps))
+    pool = jnp.zeros((B * pps, ps, 2), jnp.float32)
+    ref = np.zeros((B, pps * ps, 2), np.float32)
+    # row-wise decode writes at staggered positions, some rows masked dead
+    for t in range(T):
+        vals = rng.randn(B, 1, 2).astype(np.float32)
+        live = rng.rand(B) < 0.8
+        slots = jnp.full((B,), t, jnp.int32)
+        pool = scatter_rows(pool, table, slots, jnp.asarray(vals),
+                            live=jnp.asarray(live))
+        ref[live, t] = vals[live, 0]
+    got = np.asarray(gather_pages(pool, table, T))
+    np.testing.assert_array_equal(got, ref[:, :T])
+    # chunked writes with ragged-tail masking
+    slots = jnp.asarray(np.stack([np.arange(4) + o for o in (0, 5, 9)])
+                        .astype(np.int32))
+    valid = jnp.asarray(np.array([[1, 1, 1, 0], [1, 1, 0, 0], [1, 1, 1, 1]],
+                                 bool))
+    vals = rng.randn(B, 4, 2).astype(np.float32)
+    pool = scatter_chunk(pool, table, slots, valid, jnp.asarray(vals))
+    got = np.asarray(gather_pages(pool, table, T))
+    for b, o in enumerate((0, 5, 9)):
+        for c in range(4):
+            if bool(valid[b, c]):
+                ref[b, o + c] = vals[b, c]
+    np.testing.assert_array_equal(got, ref[:, :T])
+
+
+# ---------------------------------------------------------------------------
+# step-level parity: decode + chunked prefill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["plain", "swa", "int8"])
+def test_paged_decode_matches_contiguous(variant):
+    """Staggered live-masked decode: identical logits on both layouts,
+    page size NOT dividing max_len (exercises the sliced view)."""
+    cfg = _variant_cfg(variant)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    B, T, ps = 3, 16, 5
+    rng = np.random.RandomState(1)
+    layout, pcache = _paged_cache(params, cfg, B, T, ps, rng)
+    ccache = lm_lib.init_decode_cache(params, cfg, B, T)
+    pos = np.zeros((B,), np.int32)
+    for t in range(12):
+        toks = rng.randint(1, cfg.vocab_size, (B, 1)).astype(np.int32)
+        live = rng.rand(B) < 0.75
+        live[t % B] = True                   # at least one row advances
+        lc, ccache = lm_lib.decode_step(params, ccache, jnp.asarray(toks),
+                                        jnp.asarray(pos), cfg,
+                                        live=jnp.asarray(live))
+        lp, pcache = lm_lib.decode_step(params, pcache, jnp.asarray(toks),
+                                        jnp.asarray(pos), cfg, paged=layout,
+                                        live=jnp.asarray(live))
+        lc, lp = np.asarray(lc), np.asarray(lp)
+        np.testing.assert_allclose(lp[live], lc[live], rtol=1e-5, atol=1e-5)
+        assert (lp[live].argmax(-1) == lc[live].argmax(-1)).all()
+        pos += live
+
+
+@pytest.mark.parametrize("variant", ["plain", "swa", "int8"])
+def test_paged_prefill_matches_contiguous(variant):
+    """Ragged chunked prefill (rows complete in different chunks): identical
+    last-valid logits AND the gathered paged view equals the contiguous
+    cache bit-for-bit at every written position."""
+    cfg = _variant_cfg(variant)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    B, T, ps, C = 2, 16, 3, 4
+    rng = np.random.RandomState(2)
+    layout, pcache = _paged_cache(params, cfg, B, T, ps, rng)
+    ccache = lm_lib.init_decode_cache(params, cfg, B, T)
+    prompts = [list(map(int, rng.randint(1, cfg.vocab_size, 11))),
+               list(map(int, rng.randint(1, cfg.vocab_size, 6)))]
+    pos = np.zeros((B,), np.int32)
+    for k in range(math.ceil(max(len(p) for p in prompts) / C)):
+        toks = np.zeros((B, C), np.int32)
+        val = np.zeros((B, C), bool)
+        for b, p in enumerate(prompts):
+            seg = p[k * C:(k + 1) * C]
+            toks[b, :len(seg)] = seg
+            val[b, :len(seg)] = True
+        lc, ccache = lm_lib.prefill_chunk(params, ccache, jnp.asarray(toks),
+                                          jnp.asarray(pos), cfg,
+                                          valid=jnp.asarray(val))
+        lp, pcache = lm_lib.prefill_chunk(params, pcache, jnp.asarray(toks),
+                                          jnp.asarray(pos), cfg,
+                                          valid=jnp.asarray(val), paged=layout)
+        rows = val.any(1)
+        np.testing.assert_allclose(np.asarray(lp)[rows], np.asarray(lc)[rows],
+                                   rtol=1e-5, atol=1e-5)
+        pos += val.sum(1).astype(np.int32)
+    # gathered paged pools == contiguous strips at every written position
+    T_swa = min(T, cfg.sliding_window) if cfg.sliding_window else T
+    table = pcache["pages_swa"] if cfg.sliding_window else pcache["pages"]
+    for name in ccache["stack"]["l0_0_attn"]:
+        c_leaf = np.asarray(ccache["stack"]["l0_0_attn"][name])   # (N,B,T,..)
+        p_pool = pcache["stack"]["l0_0_attn"][name]
+        for n in range(c_leaf.shape[0]):
+            view = np.asarray(gather_pages(p_pool[n], table, T_swa))
+            for b, p in enumerate(prompts):
+                w = min(len(p), T_swa)       # ring holds the last w writes
+                np.testing.assert_array_equal(view[b, :w], c_leaf[n, b, :w])
+
+
+def test_paged_prefill_mla_first_dense():
+    """MLA latent caches + the unstacked first-dense superblock page their
+    pools through the same tables."""
+    cfg = reduced(get_config("deepseek-v2-lite-16b"))
+    assert cfg.first_dense_layers
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    B, T, ps, C = 2, 16, 4, 4
+    rng = np.random.RandomState(3)
+    layout, pcache = _paged_cache(params, cfg, B, T, ps, rng)
+    ccache = lm_lib.init_decode_cache(params, cfg, B, T)
+    prompts = [list(map(int, rng.randint(1, cfg.vocab_size, 7))),
+               list(map(int, rng.randint(1, cfg.vocab_size, 4)))]
+    pos = np.zeros((B,), np.int32)
+    lc = lp = None
+    for k in range(2):
+        toks = np.zeros((B, C), np.int32)
+        val = np.zeros((B, C), bool)
+        for b, p in enumerate(prompts):
+            seg = p[k * C:(k + 1) * C]
+            toks[b, :len(seg)] = seg
+            val[b, :len(seg)] = True
+        lc, ccache = lm_lib.prefill_chunk(params, ccache, jnp.asarray(toks),
+                                          jnp.asarray(pos), cfg,
+                                          valid=jnp.asarray(val))
+        lp, pcache = lm_lib.prefill_chunk(params, pcache, jnp.asarray(toks),
+                                          jnp.asarray(pos), cfg,
+                                          valid=jnp.asarray(val), paged=layout)
+        rows = val.any(1)
+        np.testing.assert_allclose(np.asarray(lp)[rows], np.asarray(lc)[rows],
+                                   rtol=1e-4, atol=1e-5)
+        pos += val.sum(1).astype(np.int32)
+    # decode a few tokens on top of the prefilled caches
+    for t in range(3):
+        toks = rng.randint(1, cfg.vocab_size, (B, 1)).astype(np.int32)
+        live = jnp.ones((B,), bool)
+        lc, ccache = lm_lib.decode_step(params, ccache, jnp.asarray(toks),
+                                        jnp.asarray(pos), cfg, live=live)
+        lp, pcache = lm_lib.decode_step(params, pcache, jnp.asarray(toks),
+                                        jnp.asarray(pos), cfg, paged=layout,
+                                        live=live)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lc),
+                                   rtol=1e-4, atol=1e-5)
+        pos += 1
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity: recycling (page free + realloc), codec, scheduler
+# ---------------------------------------------------------------------------
+
+def _engine_pair(cfg, params, *, num_pages, page_size=4, **kw):
+    paged = BatchedEngine(params, cfg, kv_layout="paged", page_size=page_size,
+                          num_pages=num_pages, **kw)
+    contig = BatchedEngine(params, cfg, kv_layout="contiguous", **kw)
+    return paged, contig
+
+
+def test_paged_engine_recycling_matches_contiguous():
+    """7 ragged requests through 2 slots with an OVERSUBSCRIBED pool: slots
+    recycle mid-flight, pages free and realloc in shuffled order, admission
+    occasionally waits for pages — greedy outputs must match the contiguous
+    engine token-for-token."""
+    cfg = _cfg()
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    # contiguous equivalent would hold 2 slots * 32 positions = 16 pages;
+    # 10 pages oversubscribes while still fitting any single request
+    paged, contig = _engine_pair(cfg, params, num_pages=10, num_slots=2,
+                                 max_len=32, eos_id=1, chunk_size=4,
+                                 sync_every=3)
+    lens = [3, 9, 5, 2, 12, 7, 4]
+    rng = np.random.RandomState(11)
+    reqs = [list(map(int, rng.randint(2, cfg.vocab_size, n))) for n in lens]
+    for eng in (paged, contig):
+        for u, p in enumerate(reqs):
+            eng.submit(Request(uid=u, prompt=list(p), max_new_tokens=3 + u % 4))
+    out_p = {r.uid: r.out for r in paged.run()}
+    out_c = {r.uid: r.out for r in contig.run()}
+    assert len(out_p) == len(out_c) == len(reqs)
+    assert out_p == out_c
+    assert paged.allocator.free_pages == paged.paged.num_pages  # all freed
+    # the paged cache really is smaller than the contiguous strips
+    assert paged.cache_bytes < contig.cache_bytes
+
+
+def test_paged_engine_swa_int8_matches_contiguous():
+    """Ring-buffer SWA + int8 KV through the paged engine."""
+    cfg = dataclasses.replace(_cfg(), sliding_window=8, kv_cache_quant=True)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    paged, contig = _engine_pair(cfg, params, num_pages=12, num_slots=2,
+                                 max_len=32, chunk_size=4, sync_every=2)
+    rng = np.random.RandomState(13)
+    reqs = [list(map(int, rng.randint(2, cfg.vocab_size, n)))
+            for n in (11, 4, 6)]             # 11 > window: ring wraps
+    for eng in (paged, contig):
+        for u, p in enumerate(reqs):
+            eng.submit(Request(uid=u, prompt=list(p), max_new_tokens=4))
+    assert {r.uid: r.out for r in paged.run()} \
+        == {r.uid: r.out for r in contig.run()}
+
+
+def test_paged_engine_codec_matches_contiguous():
+    """The PR2 codec equivalence setting (full batch, equal-length prompts,
+    lockstep admission) with c3sl:R=4|int8: paged == contiguous exactly."""
+    cfg = _cfg()
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    paged, contig = _engine_pair(cfg, params, num_pages=16, num_slots=4,
+                                 max_len=32, codec="c3sl:R=4|int8",
+                                 chunk_size=4, sync_every=2)
+    rng = np.random.RandomState(19)
+    reqs = [list(map(int, rng.randint(1, cfg.vocab_size, 8))) for _ in range(4)]
+    for eng in (paged, contig):
+        for u, p in enumerate(reqs):
+            eng.submit(Request(uid=u, prompt=list(p), max_new_tokens=4))
+    assert {r.uid: r.out for r in paged.run()} \
+        == {r.uid: r.out for r in contig.run()}
+
+
+def test_paged_engine_serializes_when_pool_is_tight():
+    """A pool that fits only ONE request at a time still completes everything
+    (admission waits FIFO for pages instead of deadlocking or overtaking)."""
+    cfg = _cfg()
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    eng = BatchedEngine(params, cfg, kv_layout="paged", page_size=4,
+                        num_pages=5, num_slots=3, max_len=32, chunk_size=4)
+    rng = np.random.RandomState(23)
+    reqs = [list(map(int, rng.randint(1, cfg.vocab_size, 12)))
+            for _ in range(3)]               # each needs 4 of the 5 pages
+    for u, p in enumerate(reqs):
+        eng.submit(Request(uid=u, prompt=list(p), max_new_tokens=4))
+    done = eng.run()
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    assert all(len(r.out) == 4 for r in done)
+    assert eng.allocator.free_pages == 5
+
+
+def test_paged_swa_only_model_skips_linear_reservation():
+    """Regression: with a sliding window every attn leaf lives in the
+    statically-owned ring pools, so admission must not gate (or submit
+    reject) on the full-length pool no leaf is allocated from — a tiny
+    num_pages must neither reject nor serialize a pure-SWA model."""
+    cfg = dataclasses.replace(_cfg(), sliding_window=8)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    paged, contig = _engine_pair(cfg, params, num_pages=1, num_slots=2,
+                                 max_len=32, chunk_size=4, sync_every=2)
+    rng = np.random.RandomState(37)
+    reqs = [list(map(int, rng.randint(2, cfg.vocab_size, n)))
+            for n in (14, 9, 5)]             # far beyond 1 page * 4 positions
+    for eng in (paged, contig):
+        for u, p in enumerate(reqs):
+            eng.submit(Request(uid=u, prompt=list(p), max_new_tokens=4))
+    assert {r.uid: r.out for r in paged.run()} \
+        == {r.uid: r.out for r in contig.run()}
+    assert all(not s.pages for s in paged.slots)   # nothing ever reserved
+
+
+def test_paged_submit_rejects_requests_larger_than_pool():
+    import pytest as _pytest
+    cfg = _cfg()
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    eng = BatchedEngine(params, cfg, kv_layout="paged", page_size=4,
+                        num_pages=3, num_slots=2, max_len=32)
+    with _pytest.raises(ValueError, match="cache pages"):
+        eng.submit(Request(uid=0, prompt=list(range(1, 14)),
+                           max_new_tokens=8))  # needs ceil(21/4)=6 > 3 pages
+
+
+def test_paged_property_sweep():
+    """Randomized sweep: random prompt mixes, chunk sizes, page sizes, and
+    cache variants — paged and contiguous engines agree token-for-token."""
+    rng = np.random.RandomState(29)
+    for trial, variant in enumerate(["plain", "swa", "int8"]):
+        cfg = _variant_cfg(variant)
+        params = lm_lib.init_lm_params(jax.random.PRNGKey(trial), cfg)
+        C = int(rng.randint(2, 6))
+        ps = int(rng.randint(3, 7))
+        paged, contig = _engine_pair(cfg, params, num_pages=14, page_size=ps,
+                                     num_slots=2, max_len=24, chunk_size=C,
+                                     sync_every=int(rng.randint(1, 5)),
+                                     eos_id=1)
+        lens = rng.randint(1, 16, size=5)
+        reqs = [list(map(int, rng.randint(2, cfg.vocab_size, n)))
+                for n in lens]
+        for eng in (paged, contig):
+            for u, p in enumerate(reqs):
+                eng.submit(Request(uid=u, prompt=list(p),
+                                   max_new_tokens=int(2 + u % 4)))
+        assert {r.uid: r.out for r in paged.run()} \
+            == {r.uid: r.out for r in contig.run()}, (trial, variant)

@@ -96,18 +96,26 @@ def test_engine_with_c3sl_codec_and_int8_cache():
 
 
 def test_submit_rejects_overlong_and_empty_prompts():
-    """Prompts that cannot fit the cache are rejected AT SUBMIT with a clear
-    error instead of being silently truncated mid-prompt."""
+    """Prompts that leave no decode position are rejected AT SUBMIT with a
+    clear error instead of coming back short.  Regression: a prompt of
+    exactly max_len used to be admitted, prefilled, and cut off after one
+    token regardless of max_new_tokens (finish_check fires at
+    pos >= max_len) — it must be rejected, not silently truncated."""
     import pytest
     cfg, params, eng = _setup(num_slots=2, max_len=8)
-    with pytest.raises(ValueError, match="exceeds the engine's max_len=8"):
+    with pytest.raises(ValueError, match="max_len=8"):
         eng.submit(Request(uid=0, prompt=list(range(1, 10)), max_new_tokens=2))
     with pytest.raises(ValueError, match="empty prompt"):
         eng.submit(Request(uid=1, prompt=[], max_new_tokens=2))
-    # boundary case: a prompt of exactly max_len still yields one token
-    eng.submit(Request(uid=2, prompt=[1, 2, 3, 4, 5, 6, 7, 2], max_new_tokens=4))
+    # the old silent-truncation case: len(prompt) == max_len
+    with pytest.raises(ValueError, match="no decode positions"):
+        eng.submit(Request(uid=2, prompt=[1, 2, 3, 4, 5, 6, 7, 2],
+                           max_new_tokens=4))
+    # boundary case max_len - 1 is admitted; generation is still capped by
+    # the cache (1 prefill-predicted token + 1 decoded position), never 0
+    eng.submit(Request(uid=3, prompt=[1, 2, 3, 4, 5, 6, 7], max_new_tokens=4))
     done = eng.run()
-    assert len(done) == 1 and len(done[0].out) == 1
+    assert len(done) == 1 and len(done[0].out) == 2
 
 
 def test_reset_slot_cache_is_layout_aware():
@@ -128,6 +136,56 @@ def test_reset_slot_cache_is_layout_aware():
     stacked = eng.cache["stack"]["l0_0_mla"]["c_kv"]    # (N, B, T, L)
     assert np.asarray(stacked[:, 0]).max() == 0.0
     assert np.asarray(stacked[:, 1:]).min() == 1.0
+
+
+def test_drained_batch_exits_decode_window_early():
+    """Regression: the run loop used to dispatch the full `sync_every`
+    donated steps before checking EOS flags, so a batch that drained on
+    step 1 paid sync_every - 1 wasted dispatches per boundary.  Decode now
+    runs as ONE jitted window whose device-side while_loop stops the moment
+    no slot is live: dispatch and step counts must reflect that."""
+    cfg, params, eng = _setup(num_slots=2, max_len=32)
+    assert eng.sync_every == 8
+    eng.submit(Request(uid=0, prompt=[3, 5, 7], max_new_tokens=2))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out) == 2
+    # 1 generated in prefill + 1 decode step; the old loop would have run 8
+    assert eng.stats["decode_steps"] == 1
+    # one prefill chunk + one decode window (not 8 step dispatches)
+    assert eng.stats["prefill_chunks"] == 1
+    assert eng.stats["dispatches"] == 2
+
+
+def test_interleave_scheduler_outputs_invariant():
+    """interleave > 0 alternates prefill chunks with bounded decode windows
+    (TTFT/throughput knob); without a codec rows are independent, so every
+    request's GREEDY tokens must be IDENTICAL at any interleave setting
+    (sampling would consume a different key schedule per setting)."""
+    cfg = reduced(get_config("deepseek-7b"), num_layers=2, d_model=128,
+                  d_ff=256, vocab_size=128, num_heads=4, num_kv_heads=2,
+                  head_dim=32)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(31)
+    lens = [2, 17, 5, 21, 3]                 # long prompts admitted mid-decode
+    reqs = [list(map(int, rng.randint(2, cfg.vocab_size, n))) for n in lens]
+    outs = []
+    for il in (0, 1, 3):
+        eng = BatchedEngine(params, cfg, num_slots=2, max_len=48, eos_id=1,
+                            chunk_size=4, sync_every=4, interleave=il)
+        for u, p in enumerate(reqs):
+            eng.submit(Request(uid=u, prompt=list(p), max_new_tokens=6))
+        outs.append({r.uid: r.out for r in eng.run()})
+        assert len(outs[-1]) == len(reqs)
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_requests_report_time_to_first_token():
+    cfg, params, eng = _setup(num_slots=2)
+    for u in range(3):
+        eng.submit(Request(uid=u, prompt=[2 + u, 3, 4], max_new_tokens=3))
+    done = eng.run()
+    for r in done:
+        assert r.t_first is not None and r.t_first >= r.t_submit > 0
 
 
 def test_staggered_positions_are_independent():

@@ -1,0 +1,84 @@
+"""Wire-stage byte accounting vs the runtime representation, for payloads of
+every rank — in particular the 3-D sequence-grouped layout
+(C, B/R, D) that chunked prefill ships through ``sequence_group_encode``.
+
+The audit these tests pin: a wire stage's "row" is everything but the
+trailing axis (scales and top-k masks are per trailing-axis row at runtime),
+so ``wire_bytes`` must count ``prod(shape[:-1])`` rows — for a prefill chunk
+that is C * B/R scales/masks, not the decode step's B/R.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import codecs
+from repro.codecs import Int8STEQuant, NoOpWire, TopKSparsify, build
+
+
+def test_int8_3d_accounting_matches_runtime():
+    shape = (5, 4, 64)                        # (chunk, groups, D)
+    stage = Int8STEQuant()
+    # 1 byte/value + one f32 scale per TRAILING-AXIS ROW: 5*4 rows, not 4
+    assert stage.wire_bytes(shape) == math.prod(shape) + 4 * (5 * 4)
+    # rank-invariant: the 3-D layout is a reshape of the flat 2-D payload
+    assert stage.wire_bytes(shape) == stage.wire_bytes((20, 64))
+    x = jax.random.normal(jax.random.PRNGKey(0), shape)
+    q3 = np.asarray(stage.apply(x))
+    q2 = np.asarray(stage.apply(x.reshape(20, 64)))
+    np.testing.assert_array_equal(q3.reshape(20, 64), q2)
+    # runtime really quantizes per trailing-axis row: every row hits the
+    # absmax grid point exactly (scale = absmax/127 -> |q| max == absmax)
+    np.testing.assert_allclose(np.abs(q3).max(-1), np.abs(np.asarray(x)).max(-1),
+                               rtol=1e-6)
+
+
+def test_topk_3d_accounting_matches_runtime():
+    shape = (3, 4, 64)
+    stage = TopKSparsify(k=8)
+    # per trailing-axis row: a D-bit mask + k f32 survivors, 3*4 rows
+    assert stage.wire_bytes(shape) == (3 * 4) * (64 // 8 + 4 * 8)
+    assert stage.wire_bytes(shape) == stage.wire_bytes((12, 64))
+    x = jax.random.normal(jax.random.PRNGKey(1), shape)
+    y = np.asarray(stage.apply(x))
+    nz = (y != 0).sum(-1)
+    assert nz.shape == (3, 4) and (nz == 8).all()   # exact-k per 3-D row
+    np.testing.assert_array_equal(
+        y.reshape(12, 64), np.asarray(stage.apply(x.reshape(12, 64))))
+
+
+def test_noop_3d_accounting():
+    assert NoOpWire().wire_bytes((5, 4, 64)) == 5 * 4 * 64 * 4
+
+
+def test_sequence_grouped_chain_payload_and_accounting():
+    """End to end: sequence_group_encode ships the 3-D layout through a
+    Chain; bytes follow the true row count and the math is bit-identical
+    to the flat path."""
+    C, B, D, R = 6, 8, 32, 4
+    codec = build(f"c3sl:R={R},D={D}|int8")
+    p = codec.init(jax.random.PRNGKey(0))
+    Z = jax.random.normal(jax.random.PRNGKey(1), (C, B, D))
+    payload = codecs.sequence_group_encode(codec, p, Z)
+    assert payload.shape == (C, B // R, D)
+    flat = codec.encode(p, Z.reshape(C * B, D))
+    np.testing.assert_array_equal(
+        np.asarray(payload).reshape(C * B // R, D), np.asarray(flat))
+    # per-chunk accounting: shape-based == per-position x decode-step bytes
+    chunk_bytes = codecs.payload_wire_bytes(codec, payload.shape)
+    assert chunk_bytes == C * codec.wire_bytes(B)
+    assert chunk_bytes == codec.wire_bytes(C * B)
+    # and decodes back to (C, B, D) identically to the flat round-trip
+    Zhat = codecs.sequence_group_decode(codec, p, payload, C, B)
+    np.testing.assert_array_equal(
+        np.asarray(Zhat), np.asarray(codec.decode(p, flat)).reshape(C, B, D))
+
+
+def test_payload_wire_bytes_bare_transform_is_f32():
+    codec = build("c3sl:R=4,D=32")
+    assert codecs.payload_wire_bytes(codec, (6, 2, 32)) == 6 * 2 * 32 * 4
+    # with a trailing topk stage the LAST stage owns the wire
+    chained = build("c3sl:R=4,D=32|topk:k=4")
+    assert codecs.payload_wire_bytes(chained, (6, 2, 32)) \
+        == (6 * 2) * (32 // 8 + 4 * 4)
