@@ -23,7 +23,8 @@ def main() -> None:
     sections = [
         ("table2_formulas", bench_table2.main),
         ("table1_columns", bench_table1.main),
-        ("comm_bytes", bench_comm.main),
+        # --fast shortens the adaptive-R sweep; both write BENCH_comm.json
+        ("comm_bytes", lambda: bench_comm.main(smoke=args.fast)),
         ("codec_latency", bench_codec_latency.main),
         # --fast runs the smoke variant (seconds); both write BENCH_serving.json
         ("serving_throughput", lambda: bench_serving.main(smoke=args.fast)),

@@ -1,0 +1,26 @@
+"""Test-session config: hypothesis settings profiles.
+
+The property suite (tests/test_hrr_properties.py, marked ``property``)
+reads its example budget from a profile instead of per-test ``@settings``,
+so the same tests run two ways:
+
+* ``dev`` (default) — small budget, randomized: keeps tier-1
+  (``pytest -x -q``) fast on laptops and in the main CI job.
+* ``ci`` — derandomized with a much higher example budget: the dedicated
+  property-test CI job runs ``HYPOTHESIS_PROFILE=ci`` and uploads junit
+  XML (see .github/workflows/ci.yml).
+
+hypothesis is an optional dependency everywhere (the property modules
+importorskip it), so this registration must be too.
+"""
+import os
+
+try:
+    from hypothesis import settings
+except ImportError:          # property tests importorskip; nothing to set up
+    pass
+else:
+    settings.register_profile("dev", max_examples=15, deadline=None)
+    settings.register_profile("ci", max_examples=150, deadline=None,
+                              derandomize=True, print_blob=True)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))

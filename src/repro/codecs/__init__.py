@@ -43,16 +43,26 @@ Registered wire stages:
     topk  — magnitude top-k, mask-encoded indices.  args: k | ratio
     noop  — f32 passthrough.
 
+An ``adaptive:`` prefix wraps the rest of the spec in the Adaptive-R
+scheduler (``repro.codecs.adaptive``): one pre-built inner codec per
+bucket of a {min_R, ..., R} ladder, switched host-side from an EMA of the
+measured retrieval SNR.  Adaptive args (``min_R``, ``target_snr``,
+``ema``, ``hysteresis``) ride in the first stage's arg list.
+
 Examples::
 
     build("c3sl:R=8,backend=fft|int8", D=4096)   # paper codec + int8 wire
     build("c3sl:R=4,D=256").spec()               # -> "c3sl:R=4,D=256"
     build("bnpp:R=4,C=64,H=8,W=8")               # BottleNet++ baseline
     build("c3sl:R=4|topk:ratio=0.1", D=4096)     # HRR + sparsified wire
+    build("adaptive:c3sl:R=16,min_R=2,target_snr=12|int8", D=4096)
 
 ``repro.core.codec`` and ``repro.core.bottlenet`` remain as thin
 re-export shims for pre-registry imports.
 """
+from repro.codecs.adaptive import (AdaptiveC3SL, build_adaptive,
+                                   build_program_table, chunk_payload_shape,
+                                   program_key)
 from repro.codecs.base import (Codec, CodecSpec, WireStage, apply_quant_bits,
                                available, build, clamp_R, parse_spec, register)
 from repro.codecs.bottleneck import BottleNetPPCodec, DenseBottleneckCodec
@@ -66,6 +76,8 @@ __all__ = [
     "Codec", "CodecSpec", "WireStage", "apply_quant_bits", "available",
     "build", "clamp_R", "parse_spec", "register",
     "IdentityCodec", "C3SLCodec", "DenseBottleneckCodec", "BottleNetPPCodec",
+    "AdaptiveC3SL", "build_adaptive", "build_program_table",
+    "chunk_payload_shape", "program_key",
     "Chain", "Int8STEQuant", "TopKSparsify", "NoOpWire", "payload_wire_bytes",
     "sequence_group_encode", "sequence_group_decode",
 ]

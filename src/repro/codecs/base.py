@@ -191,7 +191,16 @@ def build(spec: str, /, **defaults):
 
     ``defaults`` fill spec-omitted dataclass fields (runtime dims like ``D``);
     explicit spec args win, and defaults unknown to a stage are ignored.
+
+    An ``adaptive:`` prefix wraps the rest of the spec in the Adaptive-R
+    scheduler (see ``repro.codecs.adaptive``): the inner codec's spec grammar
+    is unchanged, and adaptive args (``min_R``/``target_snr``/...) ride in
+    the first stage's arg list.
     """
+    stripped = spec.strip()
+    if stripped == "adaptive" or stripped.startswith("adaptive:"):
+        from repro.codecs.adaptive import build_adaptive
+        return build_adaptive(stripped, **defaults)
     head, *rest = parse_spec(spec)
     codec = _construct(_TRANSFORMS, head, defaults, "transform codec")
     if rest:
@@ -245,10 +254,17 @@ class SpecMixin:
 def clamp_R(codec, max_R: int):
     """Return ``codec`` with its grouping factor R clamped to ``max_R``.
 
-    Works through ``Chain`` wrappers (re-building the inner transform) and is
-    a no-op for codecs without an R field.  NOTE: the caller must re-``init``
-    params if the codec changed — C3-SL keys have shape (R, D).
+    Works through ``Chain`` wrappers (re-building the inner transform), lets
+    codecs with their own clamping logic handle it (``with_max_R``, e.g. the
+    Adaptive-R wrapper trims its bucket ladder), and is a no-op for codecs
+    without an R field.  The returned codec's ``spec()`` always round-trips
+    through ``build`` (pinned in tests/test_codec_registry.py).  NOTE: the
+    caller must re-``init`` params if the codec changed — C3-SL keys have
+    shape (R, D).
     """
+    with_max = getattr(codec, "with_max_R", None)
+    if with_max is not None:
+        return with_max(max_R)
     R = getattr(codec, "R", 1)
     if R <= max_R:
         return codec

@@ -28,32 +28,50 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-def apply_codec(codec, params, Z):
+def apply_codec(codec, params, Z, *, with_snr=False):
     """Round-trip Z through a codec, preserving Z's shape.
 
     Dispatch is protocol-level via ``codec.feature_layout``: "nchw" codecs
     (BottleNet++) consume (B, C, H, W) natively; "flat" codecs work on
-    flattened (B, D).
+    flattened (B, D).  Wrapper codecs (e.g. the Adaptive-R scheduler) expose
+    the same attribute, so they dispatch identically.
+
+    ``with_snr=True`` additionally returns the retrieval SNR (dB) of the
+    round-trip — the Adaptive-R controller's feedback signal.
     """
     if getattr(codec, "feature_layout", "flat") == "nchw":
         payload = codec.encode(params, Z)
-        return codec.decode(params, payload)
-    shape = Z.shape
-    Zf = Z.reshape(shape[0], -1)
-    payload = codec.encode(params, Zf)
-    return codec.decode(params, payload).reshape(shape)
+        Zhat = codec.decode(params, payload)
+    else:
+        shape = Z.shape
+        Zf = Z.reshape(shape[0], -1)
+        payload = codec.encode(params, Zf)
+        Zhat = codec.decode(params, payload).reshape(shape)
+    if with_snr:
+        from repro.core.hrr import retrieval_snr
+        return Zhat, retrieval_snr(Z, Zhat)
+    return Zhat
 
 
 def make_split_loss_fn(front_apply: Callable, back_apply: Callable, codec,
-                       loss_fn: Callable) -> Callable:
+                       loss_fn: Callable, with_metrics: bool = False) -> Callable:
     """Logical split: loss(params, batch) with the codec at the cut layer.
 
     params = {"front": ..., "back": ..., "codec": ...}
     batch  = {"x": ..., "y": ...}
+
+    ``with_metrics=True`` makes the returned fn yield (loss, metrics) where
+    metrics["cut_snr"] is the cut-layer retrieval SNR in dB — pair it with
+    ``jax.value_and_grad(..., has_aux=True)`` to feed the Adaptive-R
+    scheduler without a second forward pass.
     """
 
     def loss(params, batch):
         Z = front_apply(params["front"], batch["x"])
+        if with_metrics:
+            Zhat, snr = apply_codec(codec, params["codec"], Z, with_snr=True)
+            logits = back_apply(params["back"], Zhat)
+            return loss_fn(logits, batch["y"]), {"cut_snr": snr}
         Zhat = apply_codec(codec, params["codec"], Z)
         logits = back_apply(params["back"], Zhat)
         return loss_fn(logits, batch["y"])

@@ -42,6 +42,10 @@ def _run_engine(cfg, params, args):
                         chunk_size=args.chunk_size, sync_every=args.sync_every,
                         kv_layout=args.kv_layout, page_size=args.page_size,
                         num_pages=args.num_pages, interleave=args.interleave)
+    if args.pin_R is not None:
+        if not isinstance(eng.codec, codecs.AdaptiveC3SL):
+            raise SystemExit("--pin-R needs an 'adaptive:...' --codec spec")
+        eng.codec.pin(args.pin_R)
     rng = jax.random.PRNGKey(args.seed + 1)
     prompts = jax.random.randint(rng, (args.requests, args.prompt_len), 0,
                                  cfg.vocab_size)
@@ -56,6 +60,14 @@ def _run_engine(cfg, params, args):
           f"slots={args.batch} chunk={eng.chunk_size} sync={eng.sync_every} "
           f"kv={args.kv_layout} interleave={eng.interleave} "
           f"codec={eng.codec.spec() if eng.codec is not None else 'none'}")
+    if eng.codec is not None:
+        line = (f"cut-layer wire: {eng.stats['payload_wire_bytes']:,d} B "
+                f"over {eng.stats['decode_steps']} decode steps + "
+                f"{eng.stats['prefill_chunks']} prefill chunks")
+        if eng.r_served:
+            hist = dict(sorted(eng.r_served.items()))
+            line += f"; served R schedule {hist} (decode steps + chunks)"
+        print(line)
     if eng.paged is not None:
         print(f"paged pool: {eng.paged.num_pages} pages x "
               f"{eng.paged.page_size} positions "
@@ -77,9 +89,14 @@ def main():
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--codec", default="none",
-                    help="registry spec, e.g. 'c3sl:R=4|int8' (see repro.codecs)")
+                    help="registry spec, e.g. 'c3sl:R=4|int8' or "
+                         "'adaptive:c3sl:R=8,min_R=2|int8' (see repro.codecs)")
     ap.add_argument("--R", type=int, default=4,
                     help="default R for specs that omit it")
+    ap.add_argument("--pin-R", type=int, default=None,
+                    help="pin an adaptive codec's schedule to one bucket "
+                         "(serving has no in-graph SNR probe; R is driven "
+                         "externally via engine.observe_snr or pinned)")
     ap.add_argument("--quant-kv", action="store_true",
                     help="int8 KV cache (2x less cache HBM)")
     ap.add_argument("--seed", type=int, default=0)
@@ -130,6 +147,11 @@ def main():
         codec = codecs.clamp_R(
             codecs.build(args.codec, D=cfg.d_model, R=args.R), args.batch)
         codec_params = codec.init(jax.random.PRNGKey(7))
+    adaptive = isinstance(codec, codecs.AdaptiveC3SL)
+    if args.pin_R is not None:
+        if not adaptive:
+            raise SystemExit("--pin-R needs an 'adaptive:...' --codec spec")
+        codec.pin(args.pin_R)
 
     fe = None
     if cfg.frontend:
@@ -137,22 +159,36 @@ def main():
     cache = lm_lib.init_decode_cache(params, cfg, args.batch, args.cache_len,
                                      frontend_emb=fe)
 
-    @jax.jit
-    def step(params, cache, tokens, pos, key):
-        logits, cache = lm_lib.decode_step(params, cache, tokens, pos, cfg,
-                                           codec=codec, codec_params=codec_params)
-        if args.greedy:
-            nxt = jnp.argmax(logits[:, -1], axis=-1)
-        else:
-            nxt = jax.random.categorical(key, logits[:, -1], axis=-1)
-        return nxt[:, None].astype(jnp.int32), cache
+    def make_step(step_codec, step_codec_params):
+        # one compiled branch per (bucket) codec; the Adaptive-R wrapper
+        # itself must never be closed over by jit (host-side switching)
+        @jax.jit
+        def step(params, cache, tokens, pos, key):
+            logits, cache = lm_lib.decode_step(params, cache, tokens, pos, cfg,
+                                               codec=step_codec,
+                                               codec_params=step_codec_params)
+            if args.greedy:
+                nxt = jnp.argmax(logits[:, -1], axis=-1)
+            else:
+                nxt = jax.random.categorical(key, logits[:, -1], axis=-1)
+            return nxt[:, None].astype(jnp.int32), cache
+
+        return step
+
+    step_fns = codecs.build_program_table(codec, codec_params, make_step)
 
     tokens = jax.random.randint(rng, (args.batch, 1), 0, cfg.vocab_size)
     t0 = time.time()
     outs = [tokens]
+    wire_total = 0
     for t in range(args.steps):
         rng, key = jax.random.split(rng)
-        tokens, cache = step(params, cache, tokens, jnp.int32(t), key)
+        R = codecs.program_key(codec)
+        tokens, cache = step_fns[R](params, cache, tokens, jnp.int32(t), key)
+        if codec is not None:
+            step_codec = codec.buckets[R] if adaptive else codec
+            wire_total += codecs.payload_wire_bytes(
+                step_codec, step_codec.payload_shape(args.batch))
         outs.append(tokens)
     dt = time.time() - t0
     seq = jnp.concatenate(outs, axis=1)
@@ -163,10 +199,9 @@ def main():
           f"({args.batch*args.steps/dt:.1f} tok/s total)")
     print("sample token ids:", seq[0, :16].tolist())
     if codec is not None:
-        wire = codec.wire_bytes(args.batch)
-        base = args.batch * cfg.d_model * 4
-        print(f"cut-layer wire bytes/step: {wire} vs vanilla {base} "
-              f"({base/wire:.1f}x compression)")
+        base = args.steps * args.batch * cfg.d_model * 4
+        print(f"cut-layer wire bytes: {wire_total} over {args.steps} steps "
+              f"vs vanilla {base} ({base/max(wire_total, 1):.1f}x compression)")
 
 
 if __name__ == "__main__":

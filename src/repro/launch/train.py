@@ -10,6 +10,11 @@ Examples:
     PYTHONPATH=src python -m repro.launch.train --reduced --steps 2 \
         --codec "c3sl:R=4|int8"
 
+    # Adaptive-R: SNR-driven schedule over a {2,4,8,16} bucket ladder; the
+    # loop logs per-step R + wire bytes and compiles one branch per bucket
+    PYTHONPATH=src python -m repro.launch.train --reduced --steps 50 \
+        --codec "adaptive:c3sl:R=16,min_R=2,target_snr=-6|int8"
+
     # 2-stage pod pipeline on a host mesh (needs >= 2 devices: set
     # XLA_FLAGS=--xla_force_host_platform_device_count=2)
     PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --reduced \
@@ -55,24 +60,39 @@ def run_standard(args, cfg):
     params = lm_lib.init_lm_params(rng, cfg)
     opt = adamw(args.lr)
     opt_state = opt.init(params)
+    # R clamps to the batch BEFORE init (matching serve.py): batch-wise
+    # grouping needs R | batch, and an adaptive ladder must not be able to
+    # ramp to a bucket that would fail the divisibility check mid-training
     codec, codec_params = make_codec(args.codec, args.seq * cfg.d_model,
                                      R=args.R, quant=args.quant,
-                                     unitary=args.unitary)
+                                     unitary=args.unitary, max_R=args.batch)
+    adaptive = isinstance(codec, codecs.AdaptiveC3SL)
 
-    @jax.jit
-    def step_fn(params, opt_state, batch):
-        def loss_fn(p):
-            return lm_lib.lm_loss(p, batch, cfg, codec=codec,
-                                  codec_params=codec_params)
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        grads, gn = clip_by_global_norm(grads, 1.0)
-        updates, opt_state2 = opt.update(grads, opt_state, params)
-        return apply_updates(params, updates), opt_state2, loss, gn
+    def make_step(step_codec, step_codec_params):
+        """One jitted train step closing over ONE static codec + params.
+        Under Adaptive-R this is called once per R bucket — each bucket is
+        its own compiled branch, so the host-side R switch never retraces."""
+        @jax.jit
+        def step_fn(params, opt_state, batch):
+            def loss_fn(p):
+                return lm_lib.lm_loss(p, batch, cfg, codec=step_codec,
+                                      codec_params=step_codec_params,
+                                      with_metrics=True)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            grads, gn = clip_by_global_norm(grads, 1.0)
+            updates, opt_state2 = opt.update(grads, opt_state, params)
+            return (apply_updates(params, updates), opt_state2, loss, gn,
+                    metrics.get("cut_snr"))
+        return step_fn
+
+    step_fns = codecs.build_program_table(codec, codec_params, make_step)
 
     data = SyntheticTokenDataset(cfg.vocab_size, args.seq, seed=args.seed)
     it = make_batch_iterator(data, args.batch)
     t0 = time.time()
     losses = []
+    wire_total = 0
     tokens_per_step = args.batch * args.seq
     # MFU denominator: this host's measured-equivalent peak (CPU has no
     # published peak; report model-FLOPs throughput instead)
@@ -82,14 +102,37 @@ def run_standard(args, cfg):
         if cfg.frontend:
             batch["frontend"] = jnp.zeros(
                 (args.batch, cfg.frontend_seq, cfg.frontend_dim))
-        params, opt_state, loss, gn = step_fn(params, opt_state, batch)
+        R = codecs.program_key(codec)
+        params, opt_state, loss, gn, snr = step_fns[R](params, opt_state,
+                                                       batch)
         losses.append(float(loss))
+        # actual bytes this step put on the boundary, both directions (the
+        # backward payload has the forward's compressed shape — see
+        # tests/test_codecs.py::test_codec_gradient_is_compressed_shape)
+        step_codec = codec.buckets[R] if adaptive else codec
+        step_wire = (2 * step_codec.wire_bytes(args.batch)
+                     if step_codec is not None else 0)
+        wire_total += step_wire
+        if adaptive:
+            codec.observe(float(snr))      # EMA + ladder walk for NEXT step
         if step % args.log_every == 0 or step == args.steps - 1:
             dt = time.time() - t0
             tps = tokens_per_step * (step + 1) / dt
-            print(f"step {step:5d} loss {float(loss):.4f} gnorm {float(gn):.3f} "
-                  f"| {tps:,.0f} tok/s, {step_flops*(step+1)/dt/1e9:.1f} "
+            sched = ""
+            if codec is not None:
+                sched = f" wire {step_wire:,d}B/step"
+                if adaptive:
+                    sched = (f" R={R} snr {float(snr):.1f}dB"
+                             f" (ema {codec.ema_snr:.1f})" + sched)
+                elif snr is not None:
+                    sched = f" snr {float(snr):.1f}dB" + sched
+            print(f"step {step:5d} loss {float(loss):.4f} gnorm {float(gn):.3f}"
+                  f"{sched} | {tps:,.0f} tok/s, "
+                  f"{step_flops*(step+1)/dt/1e9:.1f} "
                   f"GFLOP/s model-flops ({dt:.1f}s)", flush=True)
+    if codec is not None:
+        print(f"boundary traffic: {wire_total:,d} B total over {args.steps} "
+              f"steps (fwd+bwd)", flush=True)
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, args.steps, {"params": params},
                         {"arch": cfg.name, "loss": losses[-1]})
@@ -113,6 +156,15 @@ def run_pipeline(args, cfg):
     if codec is None:
         codec = codecs.build("identity", D=args.seq * cfg.d_model)
         codec_params = {}
+    if isinstance(codec, codecs.AdaptiveC3SL):
+        # the pipeline's scan/shard_map closes over ONE codec — run the
+        # adaptive wrapper's current bucket statically rather than silently
+        # baking whatever R was current at trace time
+        print(f"[pipeline] adaptive codec pinned to its current bucket "
+              f"R={codec.current_R} (per-step adaptation needs the "
+              f"single-program path)", flush=True)
+        codec_params = codec.params_for(codec_params)
+        codec = codec.current
 
     params = {
         "embed": {"embed": full["embed"]},
@@ -162,7 +214,9 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--codec", default="none",
-                    help="registry spec, e.g. 'c3sl:R=4|int8' (see repro.codecs)")
+                    help="registry spec, e.g. 'c3sl:R=4|int8' or "
+                         "'adaptive:c3sl:R=16,min_R=2,target_snr=-6|int8' "
+                         "(see repro.codecs)")
     ap.add_argument("--R", type=int, default=4,
                     help="default R for specs that omit it")
     ap.add_argument("--quant", type=int, default=None,

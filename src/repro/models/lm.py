@@ -102,10 +102,14 @@ def _split_stacked(stacked, n_front: int):
 
 
 def lm_forward(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None,
-               sliding_window=None, remat=True, last_only=False):
-    """Returns (logits (B,S,V), aux_loss).  last_only=True slices the final
-    position BEFORE the head matmul (serving prefill: never materializes the
-    (B, S, V) logits)."""
+               sliding_window=None, remat=True, last_only=False,
+               with_metrics=False):
+    """Returns (logits (B,S,V), aux_loss) — or (logits, aux_loss, metrics)
+    with ``with_metrics=True``, where metrics carries ``cut_snr`` (the
+    retrieval SNR in dB at the cut layer, the Adaptive-R controller's signal;
+    absent without a codec).  last_only=True slices the final position BEFORE
+    the head matmul (serving prefill: never materializes the (B, S, V)
+    logits)."""
     sliding_window = sliding_window if sliding_window is not None else cfg.sliding_window
     memory = None
     if cfg.is_encdec:
@@ -119,6 +123,7 @@ def lm_forward(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None
 
     run = functools.partial(stack_lib.apply_stack, cfg=cfg, positions=positions,
                             memory=memory, sliding_window=sliding_window, remat=remat)
+    metrics = {}
     if codec is None:
         h, a = run(params["stack"], h=h)
         aux = aux + a
@@ -129,7 +134,11 @@ def lm_forward(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None
         B, S, d = h.shape
         Zf = h.reshape(B, S * d)
         payload = codec.encode(codec_params, Zf)
-        h = codec.decode(codec_params, payload).reshape(B, S, d)
+        Zhat = codec.decode(codec_params, payload)
+        if with_metrics:
+            from repro.core import hrr
+            metrics["cut_snr"] = hrr.retrieval_snr(Zf, Zhat)
+        h = Zhat.reshape(B, S, d)
         h, a2 = run(back, h=h)
         aux = aux + a1 + a2
 
@@ -137,23 +146,32 @@ def lm_forward(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None
         h = h[:, -1:, :]
     h = _apply_norm(cfg, params["final_norm"], h)
     logits = h @ params["head"]
+    if with_metrics:
+        return logits, aux, metrics
     return logits, aux
 
 
 def lm_loss(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None,
-            sliding_window=None, remat=True):
+            sliding_window=None, remat=True, with_metrics=False):
     """Mean next-token CE (+ MoE aux).  labels == -1 are masked (vlm pads
-    frontend positions)."""
-    logits, aux = lm_forward(params, batch, cfg, codec=codec,
-                             codec_params=codec_params,
-                             sliding_window=sliding_window, remat=remat)
+    frontend positions).  ``with_metrics=True`` returns (loss, metrics) with
+    the cut-layer ``cut_snr`` (see lm_forward) — the signal the Adaptive-R
+    codec scheduler consumes in repro.launch.train."""
+    out = lm_forward(params, batch, cfg, codec=codec,
+                     codec_params=codec_params,
+                     sliding_window=sliding_window, remat=remat,
+                     with_metrics=with_metrics)
+    logits, aux = out[0], out[1]
     labels = batch["labels"]
     if cfg.frontend and not cfg.is_encdec:
         pad = jnp.full((labels.shape[0], cfg.frontend_seq), -1, labels.dtype)
         labels = jnp.concatenate([pad, labels], axis=1)
     mask = labels >= 0
     ce = softmax_cross_entropy(logits, jnp.maximum(labels, 0), mask)
-    return ce + cfg.aux_loss_weight * aux
+    loss = ce + cfg.aux_loss_weight * aux
+    if with_metrics:
+        return loss, out[2]
+    return loss
 
 
 # ---------------------------------------------------------------------------

@@ -49,6 +49,15 @@ inter-token latency; GREEDY outputs are unaffected without a codec
 RNG-key stream, so tokens differ), and the equivalence suite runs at
 interleave=0.
 
+Adaptive-R codecs (``codec="adaptive:c3sl:R=8,min_R=2|int8"``): the engine
+pre-compiles one program set per R bucket and picks the bucket HOST-SIDE
+at every dispatch, so the served R can change between windows/chunks with
+zero recompiles.  ``stats["payload_wire_bytes"]`` accumulates the ACTUAL
+cut-layer bytes shipped (scale/mask bytes included, sequence-grouped 3-D
+prefill payloads accounted at their true row count) and ``r_served``
+counts the served schedule per bucket; feed the controller between dispatches via
+``observe_snr`` or pin it (``engine.codec.pin(R)``).
+
 The C3-SL codec applies to each step's cut-layer features across the
 active slots; on the chunked path the features are grouped PER POSITION
 (`sequence_group_encode` layout), the same group shape as the decode
@@ -65,7 +74,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
+from collections import Counter, deque
 
 import jax
 import jax.numpy as jnp
@@ -179,7 +188,19 @@ class BatchedEngine:
         self.finished: list[Request] = []
         self._tokens_decoded = 0
         self._dirty = True            # force the first boundary to run
-        self.stats = {"dispatches": 0, "decode_steps": 0, "prefill_chunks": 0}
+        # payload_wire_bytes accumulates the ACTUAL cut-layer bytes shipped
+        # (per executed decode step / prefill chunk, scale+mask bytes
+        # included) — under an Adaptive-R codec this follows the R schedule
+        self.stats = {"dispatches": 0, "decode_steps": 0, "prefill_chunks": 0,
+                      "payload_wire_bytes": 0}
+        # the served R schedule under an adaptive codec, as {R: count} with
+        # one count per EXECUTED decode step + one per prefill chunk, so
+        # total() == decode_steps + prefill_chunks (not dispatches — a
+        # window dispatch adds up to sync_every counts).  A Counter, not a
+        # log: a long-lived engine serves millions of steps.  Kept out of
+        # stats so stats stay scalar-valued.
+        self.r_served: Counter[int] = Counter()
+        self._adaptive = isinstance(self.codec, codecs_lib.AdaptiveC3SL)
         self.state = self._init_state()
         self._build_programs()
 
@@ -203,10 +224,53 @@ class BatchedEngine:
         }
 
     def _build_programs(self):
-        cfg, codec, codec_params = self.cfg, self.codec, self.codec_params
-        greedy, eos_id, max_len = self.greedy, self.eos_id, self.max_len
+        """Compile the engine's programs.  With an Adaptive-R codec this
+        builds ONE program set per R bucket (each a separate compiled
+        branch over that bucket's static codec + params); dispatch picks the
+        bucket HOST-SIDE per window/chunk, so an R switch never retraces —
+        pinned by the compile-counter test in tests/test_adaptive_codec.py."""
         paged = self.paged
         self._window_len = max(self.sync_every, self.interleave, 1)
+        self._programs = codecs_lib.build_program_table(
+            self.codec, self.codec_params, self._make_programs)
+
+        def reset_fn(cache, mask):
+            """Layout-aware zeroing of the rows `mask` marks.  The cache
+            layout is known by KEY: "stack" leaves carry (num_superblocks,
+            B, ...), "first" leaves (B, ...), "memory" (encoder output) is
+            never per-slot state — no shape guessing against dims that
+            happen to equal num_slots (heads, cache length, ...).  Paged
+            pools (attn/mla leaves) are left alone: reads past a slot's
+            written positions are masked, so stale pages are invisible;
+            only per-slot recurrent state needs zeroing."""
+            def zero(subtree, axis):
+                def z(leaf):
+                    m = mask.reshape((1,) * axis + (-1,)
+                                     + (1,) * (leaf.ndim - axis - 1))
+                    return jnp.where(m, 0, leaf)
+                return jax.tree.map(z, subtree)
+
+            def zero_block(block, axis):
+                if paged is None:
+                    return zero(block, axis)
+                return {key: (sub if key.rsplit("_", 1)[-1] in ("attn", "mla")
+                              else zero(sub, axis))
+                        for key, sub in block.items()}
+
+            new = dict(cache)
+            new["stack"] = zero_block(cache["stack"], 1)
+            if "first" in cache:
+                new["first"] = zero_block(cache["first"], 0)
+            return new
+
+        self._reset = jax.jit(reset_fn, donate_argnums=(0,))
+
+    def _make_programs(self, codec, codec_params) -> dict:
+        """One codec's compiled program set: the fused decode window, the
+        chunked-prefill dispatch, and the legacy prefill-as-decode step."""
+        cfg = self.cfg
+        greedy, eos_id, max_len = self.greedy, self.eos_id, self.max_len
+        paged = self.paged
 
         def pick(logits, key):
             if greedy:
@@ -273,35 +337,6 @@ class BatchedEngine:
                            "active": state["active"] | completes,
                            "out_len": out_len, "out_buf": out_buf}
 
-        def reset_fn(cache, mask):
-            """Layout-aware zeroing of the rows `mask` marks.  The cache
-            layout is known by KEY: "stack" leaves carry (num_superblocks,
-            B, ...), "first" leaves (B, ...), "memory" (encoder output) is
-            never per-slot state — no shape guessing against dims that
-            happen to equal num_slots (heads, cache length, ...).  Paged
-            pools (attn/mla leaves) are left alone: reads past a slot's
-            written positions are masked, so stale pages are invisible;
-            only per-slot recurrent state needs zeroing."""
-            def zero(subtree, axis):
-                def z(leaf):
-                    m = mask.reshape((1,) * axis + (-1,)
-                                     + (1,) * (leaf.ndim - axis - 1))
-                    return jnp.where(m, 0, leaf)
-                return jax.tree.map(z, subtree)
-
-            def zero_block(block, axis):
-                if paged is None:
-                    return zero(block, axis)
-                return {key: (sub if key.rsplit("_", 1)[-1] in ("attn", "mla")
-                              else zero(sub, axis))
-                        for key, sub in block.items()}
-
-            new = dict(cache)
-            new["stack"] = zero_block(cache["stack"], 1)
-            if "first" in cache:
-                new["first"] = zero_block(cache["first"], 0)
-            return new
-
         def legacy_step_fn(params, cache, tokens, pos, key, live):
             logits, cache = lm_lib.decode_step(params, cache, tokens, pos, cfg,
                                                codec=codec,
@@ -309,10 +344,50 @@ class BatchedEngine:
                                                paged=paged, live=live)
             return pick(logits[:, -1], key), cache
 
-        self._window = jax.jit(window_fn, donate_argnums=(1, 2))
-        self._prefill = jax.jit(prefill_fn, donate_argnums=(1, 2))
-        self._reset = jax.jit(reset_fn, donate_argnums=(0,))
-        self._step_legacy = jax.jit(legacy_step_fn)
+        return {"window": jax.jit(window_fn, donate_argnums=(1, 2)),
+                "prefill": jax.jit(prefill_fn, donate_argnums=(1, 2)),
+                "legacy": jax.jit(legacy_step_fn)}
+
+    # ------------------------------------------------------------------
+    # codec-schedule dispatch + wire accounting
+    # ------------------------------------------------------------------
+
+    def _bucket(self):
+        """Host-side program-set key for this dispatch: the adaptive codec's
+        current R bucket, or None for a static (or absent) codec."""
+        return codecs_lib.program_key(self.codec)
+
+    def _current_codec(self):
+        """The codec actually applied by the next dispatch (the bucket codec
+        under Adaptive-R — never the wrapper, which must stay out of jit)."""
+        if self.codec is None:
+            return None
+        return self.codec.current if self._adaptive else self.codec
+
+    def observe_snr(self, snr_db, loss_slack=None):
+        """Feed the Adaptive-R controller between dispatches (no-op for
+        static codecs).  The serving path has no in-graph SNR probe, so the
+        signal comes from outside — the training side's schedule, an SLA
+        monitor, or a pinned R."""
+        if self._adaptive:
+            self.codec.observe(snr_db, loss_slack)
+
+    def _step_wire_bytes(self) -> int:
+        """Cut-layer bytes ONE decode step ships across the active batch."""
+        c = self._current_codec()
+        if c is None:
+            return 0
+        return codecs_lib.payload_wire_bytes(c, c.payload_shape(self.num_slots))
+
+    def _chunk_wire_bytes(self) -> int:
+        """Cut-layer bytes ONE prefill chunk ships (the sequence-grouped 3-D
+        payload: chunk_size positions x num_slots/R groups x D)."""
+        c = self._current_codec()
+        if c is None:
+            return 0
+        shape = codecs_lib.chunk_payload_shape(c, self.num_slots,
+                                               self.chunk_size)
+        return codecs_lib.payload_wire_bytes(c, shape)
 
     # ------------------------------------------------------------------
     # public API
@@ -392,11 +467,15 @@ class BatchedEngine:
         n = min(n, self._window_len)
         keys = jax.random.split(self.rng, self._window_len + 1)
         self.rng = keys[0]
-        i, self.cache, self.state = self._window(
+        bucket = self._bucket()
+        i, self.cache, self.state = self._programs[bucket]["window"](
             self.params, self.cache, self.state, keys[1:], jnp.int32(n))
         self.stats["dispatches"] += 1
         executed = int(i)
         self.stats["decode_steps"] += executed
+        self.stats["payload_wire_bytes"] += executed * self._step_wire_bytes()
+        if bucket is not None:
+            self.r_served[bucket] += executed
         if executed:
             self._dirty = True
         return executed
@@ -426,11 +505,15 @@ class BatchedEngine:
         if not any_rows:
             return
         self.rng, key = jax.random.split(self.rng)
-        self.cache, self.state = self._prefill(
+        bucket = self._bucket()
+        self.cache, self.state = self._programs[bucket]["prefill"](
             self.params, self.cache, self.state, jnp.asarray(tokens),
             jnp.asarray(valid), jnp.asarray(completes), key)
         self.stats["dispatches"] += 1
         self.stats["prefill_chunks"] += 1
+        self.stats["payload_wire_bytes"] += self._chunk_wire_bytes()
+        if bucket is not None:
+            self.r_served[bucket] += 1
         if completes.any():
             # the completing dispatch commits the row's first token: stamp
             # TTFT here, so the metric has per-chunk resolution at EVERY
@@ -568,13 +651,17 @@ class BatchedEngine:
         # zeroed strip, exactly the PR2 baseline the equivalence tests pin);
         # paged: empty rows hold no pages, so their writes MUST be masked
         live = jnp.asarray(occupied) if self.paged is not None else None
-        nxt, self.cache = self._step_legacy(self.params, self.cache,
-                                            jnp.asarray(tokens),
-                                            jnp.asarray(pos), key, live)
+        bucket = self._bucket()
+        nxt, self.cache = self._programs[bucket]["legacy"](
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(pos), key, live)
         self.stats["dispatches"] += 1
         # one fused batch step per dispatch — same unit as the chunked
         # path's decode_steps (NOT per-slot generated tokens)
         self.stats["decode_steps"] += 1
+        self.stats["payload_wire_bytes"] += self._step_wire_bytes()
+        if bucket is not None:
+            self.r_served[bucket] += 1
         nxt = np.asarray(nxt)
         for i, s in enumerate(self.slots):
             if s.req is None:

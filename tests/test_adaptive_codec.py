@@ -1,0 +1,270 @@
+"""Adaptive-R scheduler tests: spec round-trip, controller behavior, bucket
+equivalence, and the zero-recompile guarantee across R switches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import codecs
+from repro.codecs import AdaptiveC3SL, build, clamp_R
+from repro.core import split as split_lib
+
+
+# --------------------------------------------------------------------------
+# spec / ladder construction
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    "adaptive:c3sl:R=8,D=64,min_R=2",
+    "adaptive:c3sl:R=16,D=64,min_R=2,target_snr=12.0",
+    "adaptive:c3sl:R=4,D=64,min_R=2,ema=0.8,hysteresis=2.0",
+    "adaptive:c3sl:R=8,D=64,backend=direct,min_R=2|int8",
+    "adaptive:c3sl:R=8,D=256,min_R=2|topk:k=16|int8",
+    "adaptive:c3sl:R=4,D=64",                      # min_R defaults to 1
+])
+def test_adaptive_spec_roundtrip(spec):
+    c = build(spec)
+    assert c.spec() == spec
+    assert build(c.spec()).spec() == spec
+
+
+def test_adaptive_builds_bucket_ladder():
+    c = build("adaptive:c3sl:R=16,min_R=2,target_snr=12", D=128)
+    assert isinstance(c, AdaptiveC3SL)
+    assert c.ladder == (2, 4, 8, 16)
+    assert c.current_R == 2                        # starts conservative
+    assert c.target_snr == 12.0
+    # one pre-built inner codec per bucket, chained specs rebuilt via clamp_R
+    assert {R: b.spec() for R, b in c.buckets.items()} == {
+        R: f"c3sl:R={R},D=128" for R in (2, 4, 8, 16)}
+    chained = build("adaptive:c3sl:R=8,min_R=2|int8", D=64)
+    assert chained.buckets[4].spec() == "c3sl:R=4,D=64|int8"
+
+
+def test_adaptive_defaults_flow_to_inner_and_adaptive_args():
+    # runtime defaults fill the inner spec; adaptive args may come from
+    # defaults too, but explicit spec args always win
+    c = build("adaptive:c3sl:R=8", D=64, min_R=4, target_snr=-3.0)
+    assert c.min_R == 4 and c.target_snr == -3.0 and c.D == 64
+    c = build("adaptive:c3sl:R=8,min_R=2", D=64, min_R=4)
+    assert c.min_R == 2
+
+
+def test_adaptive_validation_errors():
+    with pytest.raises(ValueError, match="power of two"):
+        build("adaptive:c3sl:R=6,D=64,min_R=2")    # 6/2 = 3 buckets?? no
+    with pytest.raises(ValueError, match="min_R"):
+        build("adaptive:c3sl:R=4,D=64,min_R=8")
+    with pytest.raises(ValueError, match="inner codec spec"):
+        build("adaptive", D=64)
+    with pytest.raises(ValueError, match="ema"):
+        build("adaptive:c3sl:R=4,D=64,ema=1.0")
+    # R=1 transforms build the degenerate single-bucket wrapper (nothing to
+    # schedule, but clamp_R may legitimately collapse a ladder to this)
+    assert build("adaptive:identity:D=64").ladder == (1,)
+
+
+def test_clamp_R_trims_adaptive_ladder_and_roundtrips():
+    c = build("adaptive:c3sl:R=16,min_R=2,target_snr=5|int8", D=64)
+    t = clamp_R(c, 8)
+    assert t.ladder == (2, 4, 8) and t.max_R == 8
+    assert t.target_snr == 5.0                     # controller knobs survive
+    assert build(t.spec()).spec() == t.spec()
+    assert clamp_R(c, 16) is c                     # no-op keeps identity
+    # degenerate: clamp below min_R collapses to a single bucket
+    one = clamp_R(c, 1)
+    assert one.ladder == (1,)
+
+
+def test_clamp_R_drops_buckets_that_do_not_divide_the_batch():
+    """clamp_R's max_R is the runtime batch/slot count, and batch-wise
+    grouping needs batch % R == 0 — a bucket that merely FITS the batch but
+    does not divide it would let the controller ramp into a mid-training
+    shape error (batch 12 must drop R=8, keeping {2, 4})."""
+    c = build("adaptive:c3sl:R=8,min_R=2", D=64)
+    t = clamp_R(c, 12)
+    assert t.ladder == (2, 4)
+    assert build(t.spec()).spec() == t.spec()
+    # batch 6: only R=2 divides; batch 7: nothing does -> single R=7 bucket
+    assert clamp_R(c, 6).ladder == (2,)
+    assert clamp_R(c, 7).ladder == (7,)
+    # every surviving bucket's encode really fits the clamp target
+    import jax as _jax
+    t6 = clamp_R(c, 6)
+    p = t6.init(_jax.random.PRNGKey(0))
+    Z = _jax.random.normal(_jax.random.PRNGKey(1), (6, 64))
+    for R in t6.ladder:
+        t6.pin(R)
+        assert t6.encode(p, Z).shape == (6 // R, 64)
+
+
+# --------------------------------------------------------------------------
+# controller
+# --------------------------------------------------------------------------
+
+def test_controller_ladder_walk_with_hysteresis():
+    c = build("adaptive:c3sl:R=8,D=64,min_R=2,target_snr=0,ema=0.0,"
+              "hysteresis=1.0")
+    assert c.current_R == 2
+    assert c.observe(5.0) == 4                     # headroom -> ramp up
+    assert c.observe(5.0) == 8
+    assert c.observe(5.0) == 8                     # top of the ladder holds
+    # deadband: |snr - target| <= hysteresis changes nothing
+    assert c.observe(0.5) == 8
+    assert c.observe(-0.5) == 8
+    assert c.observe(-3.0) == 4                    # below target -> back off
+    assert c.observe(-3.0) == 2
+    assert c.observe(-3.0) == 2                    # floor holds
+
+
+def test_controller_ema_smooths_the_signal():
+    c = build("adaptive:c3sl:R=8,D=64,min_R=2,target_snr=0,ema=0.9")
+    c.observe(-10.0)                               # ema seeds at -10
+    assert c.ema_snr == -10.0
+    # one high outlier must not flip the decision through the EMA
+    assert c.observe(30.0) == 2
+    assert c.ema_snr == pytest.approx(-6.0)
+
+
+def test_controller_loss_slack_vetoes_and_forces():
+    c = build("adaptive:c3sl:R=8,D=64,min_R=2,target_snr=0,ema=0.0")
+    # SNR headroom but negative slack: forced DOWN (here: held at floor)
+    assert c.observe(10.0, loss_slack=-1.0) == 2
+    c.observe(10.0)
+    assert c.current_R == 4
+    assert c.observe(10.0, loss_slack=-1.0) == 2   # ramp-down beats SNR
+    # zero slack vetoes the ramp-up without forcing down
+    assert c.observe(10.0, loss_slack=0.0) == 2
+    assert c.observe(10.0, loss_slack=1.0) == 4    # positive slack allows it
+
+
+def test_pin_freezes_the_schedule():
+    c = build("adaptive:c3sl:R=8,D=64,min_R=2,target_snr=0,ema=0.0")
+    c.pin(4)
+    for snr in (30.0, 30.0, -30.0, -30.0):
+        assert c.observe(snr) == 4
+    assert c.ema_snr is not None                   # EMA still tracks
+    c.unpin()
+    assert c.observe(-30.0) == 2
+    with pytest.raises(ValueError, match="not in bucket ladder"):
+        c.pin(3)
+
+
+# --------------------------------------------------------------------------
+# protocol surface + bucket equivalence
+# --------------------------------------------------------------------------
+
+def test_adaptive_protocol_accounting_follows_current_bucket():
+    c = build("adaptive:c3sl:R=8,min_R=2|int8", D=64)
+    B = 16
+    for R in (2, 4, 8):
+        c.pin(R)
+        assert c.R == R
+        assert c.payload_shape(B) == (B // R, 64)
+        assert c.wire_bytes(B) == c.buckets[R].wire_bytes(B)
+        assert c.flops(B) == c.buckets[R].flops(B)
+    # resident params: every bucket's key table lives in memory at once
+    assert c.param_count() == sum(R * 64 for R in (2, 4, 8))
+    assert c.feature_layout == "flat"
+    # the stages surface exposes the chain through the wrapper, so
+    # payload_wire_bytes sees the int8 wire stage
+    assert codecs.payload_wire_bytes(c, (4, 64)) == 4 * 64 + 4 * 4
+
+
+def test_adaptive_pinned_is_bit_identical_to_static_bucket():
+    rng = jax.random.PRNGKey(7)
+    Z = jax.random.normal(jax.random.PRNGKey(1), (16, 64))
+    for spec, static_spec in [
+        ("adaptive:c3sl:R=8,min_R=2", "c3sl:R=4,D=64"),
+        ("adaptive:c3sl:R=8,min_R=2|int8", "c3sl:R=4,D=64|int8"),
+    ]:
+        a = build(spec, D=64).pin(4)
+        s = build(static_spec)
+        pa, ps = a.init(rng), s.init(rng)
+        np.testing.assert_array_equal(np.asarray(a.encode(pa, Z)),
+                                      np.asarray(s.encode(ps, Z)))
+        np.testing.assert_array_equal(
+            np.asarray(a.decode(pa, a.encode(pa, Z))),
+            np.asarray(s.decode(ps, s.encode(ps, Z))))
+
+
+# --------------------------------------------------------------------------
+# zero recompiles across R switches
+# --------------------------------------------------------------------------
+
+def test_zero_recompiles_across_R_switches():
+    """The jit-safety contract the whole design hangs on: one compiled
+    branch per bucket, switched host-side — an R schedule that bounces
+    across the ladder must trace each bucket EXACTLY once (the trace
+    counter increments only while tracing)."""
+    D_in, D_cut, n_cls, B = 8, 64, 4, 16
+    rng = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    net = {"front": {"w": jax.random.normal(k1, (D_in, D_cut)) * D_in ** -0.5},
+           "back": {"w": jax.random.normal(k2, (D_cut, n_cls)) * D_cut ** -0.5}}
+    codec = build("adaptive:c3sl:R=8,D=64,min_R=2,target_snr=0")
+    codec_params = codec.init(jax.random.PRNGKey(7))
+    traces = [0]
+
+    def make_step(bucket, bucket_params):
+        loss_fn = split_lib.make_split_loss_fn(
+            lambda p, x: jax.nn.relu(x @ p["w"]), lambda p, z: z @ p["w"],
+            bucket, lambda logits, y: jnp.mean((logits - y) ** 2),
+            with_metrics=True)
+
+        @jax.jit
+        def step(net, batch):
+            traces[0] += 1            # runs only while tracing
+            params = {**net, "codec": bucket_params}
+            (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                                     batch)
+            net2 = jax.tree.map(lambda a, b: a - 0.1 * b, net,
+                                {"front": g["front"], "back": g["back"]})
+            return net2, loss, m["cut_snr"]
+
+        return step
+
+    step_fns = {R: make_step(codec.buckets[R],
+                             codec.params_for(codec_params, R))
+                for R in codec.ladder}
+    batch = {"x": jax.random.normal(k3, (B, D_in)),
+             "y": jnp.zeros((B, n_cls))}
+    # warm every bucket, then drive a schedule that switches every step
+    for R in codec.ladder:
+        step_fns[R](net, batch)
+    assert traces[0] == len(codec.ladder)
+    for R in (2, 4, 8, 4, 2, 8, 2, 4, 8, 8, 2):
+        codec.pin(R)
+        net, loss, snr = step_fns[codec.current_R](net, batch)
+    assert traces[0] == len(codec.ladder), "R switch triggered a retrace"
+
+
+def test_engine_zero_recompiles_and_r_served_across_switches():
+    """Same contract at the serving layer: the engine pre-compiles one
+    program set per bucket; pinning a different R between run() calls
+    reuses the existing programs (jit cache misses would show up as new
+    traces of lm.decode_step — instead we assert the engine keeps exactly
+    one compiled window/prefill per bucket and the served schedule lands
+    in r_served)."""
+    from repro.configs.base import get_config, reduced
+    from repro.models import lm as lm_lib
+    from repro.serving.engine import BatchedEngine, Request
+    cfg = reduced(get_config("deepseek-7b"), num_layers=2, d_model=64,
+                  d_ff=128, vocab_size=64, num_heads=2, num_kv_heads=1,
+                  head_dim=32)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    eng = BatchedEngine(params, cfg, num_slots=4, max_len=16,
+                        codec="adaptive:c3sl:R=4,min_R=2|int8")
+    assert set(eng._programs) == {2, 4}
+    progs = {R: eng._programs[R] for R in (2, 4)}
+    for pin in (2, 4, 2):
+        eng.codec.pin(pin)
+        for u in range(2):
+            eng.submit(Request(uid=10 * pin + u, prompt=[1 + u, 2, 3],
+                               max_new_tokens=2))
+        eng.run(max_steps=64)
+    assert eng._programs is not None and all(
+        eng._programs[R] is progs[R] for R in (2, 4))  # never rebuilt
+    assert set(eng.r_served) == {2, 4}                 # both buckets served
+    assert eng.stats["payload_wire_bytes"] > 0
+    assert len(eng.finished) == 6

@@ -208,3 +208,45 @@ def test_engine_accepts_spec_strings():
     # "none" means codec off, matching the launch CLIs
     assert BatchedEngine(params, cfg, num_slots=2, max_len=16,
                          codec="none").codec is None
+
+
+@pytest.mark.parametrize("spec,max_R", [
+    ("c3sl:R=8,D=64", 2),
+    ("c3sl:R=8,D=64|int8", 2),
+    ("c3sl:R=8,D=64,backend=direct,unitary=true|topk:k=8|int8", 4),
+    ("dense:R=8,D=64", 4),
+    ("identity:D=64|noop", 1),
+    ("adaptive:c3sl:R=16,D=64,min_R=2", 4),
+    ("adaptive:c3sl:R=16,D=64,min_R=2,target_snr=-6.0|int8", 8),
+])
+def test_clamp_R_result_spec_reparses_through_build(spec, max_R):
+    """clamp_R on ANY spec-built codec — bare, Chain, adaptive — must return
+    a codec whose .spec() round-trips through build() to an equal spec (the
+    rebuilt string was previously never re-parse-tested)."""
+    clamped = codecs.clamp_R(build(spec), max_R)
+    s = clamped.spec()
+    rebuilt = build(s)
+    assert rebuilt.spec() == s
+    assert getattr(rebuilt, "R", 1) == getattr(clamped, "R", 1)
+    # and a clamp that changes nothing keeps the original spec verbatim
+    assert codecs.clamp_R(build(spec), 1024).spec() == build(spec).spec()
+
+
+def test_engine_accepts_adaptive_spec_strings():
+    from repro.configs.base import get_config, reduced
+    from repro.models import lm as lm_lib
+    from repro.serving.engine import BatchedEngine, Request
+    cfg = reduced(get_config("deepseek-7b"), num_layers=2, d_model=64,
+                  d_ff=128, vocab_size=64, num_heads=2, num_kv_heads=1,
+                  head_dim=32)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    # num_slots=2 clamps the ladder through the adaptive wrapper
+    eng = BatchedEngine(params, cfg, num_slots=2, max_len=16,
+                        codec="adaptive:c3sl:R=4,min_R=2|int8")
+    assert isinstance(eng.codec, codecs.AdaptiveC3SL)
+    assert eng.codec.spec() == "adaptive:c3sl:R=2,D=64,min_R=2|int8"
+    assert eng.codec.ladder == (2,)
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=2))
+    done = eng.run(max_steps=32)
+    assert len(done) == 1 and len(done[0].out) >= 1
+    assert eng.stats["payload_wire_bytes"] > 0

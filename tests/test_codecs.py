@@ -168,3 +168,72 @@ def test_codec_gradient_is_compressed_shape():
     S, vjp = jax.vjp(lambda s: c.decode(p, s), c.encode(p, Z))
     (dS,) = vjp(jnp.ones((B, D)))
     assert dS.shape == (B // R, D)  # gradient crosses the wire compressed
+
+
+def test_adaptive_pinned_train_step_bit_identical_to_static():
+    """AdaptiveC3SL pinned to a constant schedule must be BIT-identical to
+    the static c3sl:R=k codec through a full jitted train step (loss AND
+    grads), including the |int8 chain — the wrapper only ever delegates to
+    pre-built bucket codecs whose params init from the same rng."""
+    from repro import codecs as codecs_lib
+    D_in, D_cut, n_cls, B = 16, 64, 4, 32
+    rng = jax.random.PRNGKey(0)
+    k1, k2, k4 = jax.random.split(rng, 3)
+    net = {
+        "front": {"w": jax.random.normal(k1, (D_in, D_cut)) * D_in ** -0.5},
+        "back": {"w": jax.random.normal(k2, (D_cut, n_cls)) * D_cut ** -0.5},
+    }
+    x = jax.random.normal(k4, (B, D_in))
+    y = jax.random.randint(jax.random.PRNGKey(5), (B,), 0, n_cls)
+    batch = {"x": x, "y": y}
+
+    def front(p, x):
+        return jax.nn.relu(x @ p["w"])
+
+    def back(p, z):
+        return z @ p["w"]
+
+    def ce(logits, y):
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]), y])
+
+    for adaptive_spec, static_spec in [
+        ("adaptive:c3sl:R=8,D=64,min_R=2", "c3sl:R=4,D=64"),
+        ("adaptive:c3sl:R=8,D=64,min_R=2|int8", "c3sl:R=4,D=64|int8"),
+    ]:
+        a = codecs_lib.build(adaptive_spec).pin(4)
+        s = codecs_lib.build(static_spec)
+        pa = {**net, "codec": a.init(jax.random.PRNGKey(7))}
+        ps = {**net, "codec": s.init(jax.random.PRNGKey(7))}
+        step_a = jax.jit(jax.value_and_grad(
+            split_lib.make_split_loss_fn(front, back, a, ce), has_aux=False))
+        step_s = jax.jit(jax.value_and_grad(
+            split_lib.make_split_loss_fn(front, back, s, ce), has_aux=False))
+        la, ga = step_a(pa, batch)
+        ls, gs = step_s(ps, batch)
+        assert float(la) == float(ls), (adaptive_spec, float(la), float(ls))
+        for part in ("front", "back"):
+            for k in ga[part]:
+                np.testing.assert_array_equal(np.asarray(ga[part][k]),
+                                              np.asarray(gs[part][k]))
+
+
+def test_split_metrics_surface_cut_snr():
+    """with_metrics=True yields the cut-layer retrieval SNR alongside the
+    loss — the Adaptive-R controller's signal — and matches the standalone
+    apply_codec(with_snr=True) computation."""
+    from repro.core import hrr
+    codec = codec_lib.C3SLCodec(R=4, D=64)
+    p = codec.init(jax.random.PRNGKey(0))
+    Z = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    Zhat, snr = split_lib.apply_codec(codec, p, Z, with_snr=True)
+    np.testing.assert_array_equal(np.asarray(Zhat),
+                                  np.asarray(split_lib.apply_codec(codec, p, Z)))
+    assert float(snr) == float(hrr.retrieval_snr(Z, Zhat))
+
+    loss_fn = split_lib.make_split_loss_fn(
+        lambda p, x: x, lambda p, z: z.sum(-1, keepdims=True), codec,
+        lambda logits, y: jnp.mean(logits), with_metrics=True)
+    params = {"front": {}, "back": {}, "codec": p}
+    loss, metrics = loss_fn(params, {"x": Z, "y": None})
+    assert np.isfinite(float(loss))
+    assert np.isfinite(float(metrics["cut_snr"]))

@@ -215,3 +215,50 @@ def test_staggered_positions_are_independent():
                                jnp.asarray([i, 0], jnp.int32))
     got = np.asarray(logits2[0, -1])
     np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_adaptive_pinned_engine_matches_static_greedy_decode():
+    """AdaptiveC3SL pinned to a constant schedule through a BatchedEngine
+    greedy decode is bit-identical to the static codec — including the
+    |int8 chain: the engine's per-bucket programs close over the same
+    bucket codec + params the static engine compiles."""
+    cfg = reduced(get_config("deepseek-7b"), num_layers=2, d_model=128,
+                  d_ff=256, vocab_size=128, num_heads=4, num_kv_heads=2,
+                  head_dim=32)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    reqs = [([5, 17, 23, 2], 5), ([7, 7, 9], 4), ([3, 11], 3)]
+    for adaptive_spec, static_spec in [
+        ("adaptive:c3sl:R=4,min_R=2", "c3sl:R=2"),
+        ("adaptive:c3sl:R=4,min_R=2|int8", "c3sl:R=2|int8"),
+    ]:
+        outs = {}
+        for name, spec in (("static", static_spec), ("adaptive", adaptive_spec)):
+            eng = BatchedEngine(params, cfg, num_slots=2, max_len=32,
+                                codec=spec, greedy=True)
+            if name == "adaptive":
+                eng.codec.pin(2)
+            for u, (p, mn) in enumerate(reqs):
+                eng.submit(Request(uid=u, prompt=list(p), max_new_tokens=mn))
+            outs[name] = {r.uid: r.out for r in eng.run(max_steps=128)}
+            assert len(outs[name]) == len(reqs)
+        assert outs["adaptive"] == outs["static"], adaptive_spec
+
+
+def test_adaptive_engine_legacy_mode_matches_static_too():
+    """Same pinned-schedule equivalence on the prefill-as-decode baseline
+    path (the per-bucket legacy program)."""
+    cfg = reduced(get_config("deepseek-7b"), num_layers=2, d_model=128,
+                  d_ff=256, vocab_size=128, num_heads=4, num_kv_heads=2,
+                  head_dim=32)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    outs = {}
+    for name, spec in (("static", "c3sl:R=2"),
+                       ("adaptive", "adaptive:c3sl:R=4,min_R=2")):
+        eng = BatchedEngine(params, cfg, num_slots=2, max_len=32,
+                            codec=spec, greedy=True, prefill_mode="decode")
+        if name == "adaptive":
+            eng.codec.pin(2)
+        for u in range(3):
+            eng.submit(Request(uid=u, prompt=[1 + u, 2 + u, 3], max_new_tokens=3))
+        outs[name] = {r.uid: r.out for r in eng.run(max_steps=128)}
+    assert outs["adaptive"] == outs["static"]

@@ -82,3 +82,78 @@ def test_payload_wire_bytes_bare_transform_is_f32():
     chained = build("c3sl:R=4,D=32|topk:k=4")
     assert codecs.payload_wire_bytes(chained, (6, 2, 32)) \
         == (6 * 2) * (32 // 8 + 4 * 4)
+
+
+def test_per_step_bytes_follow_R_schedule_batch_and_sequence_grouped():
+    """Under an Adaptive-R schedule, per-step payload_wire_bytes must track
+    the bucket serving each step EXACTLY — int8 scale bytes included — for
+    both the decode path's batch-wise (B/R, D) payload and chunked
+    prefill's sequence-grouped (C, B/R, D) layout."""
+    B, C, D = 16, 5, 64
+    codec = codecs.build("adaptive:c3sl:R=8,min_R=2|int8", D=D)
+    p = codec.init(jax.random.PRNGKey(0))
+    for R in (2, 4, 8, 4, 2):                 # a schedule that walks around
+        codec.pin(R)
+        # batch-wise decode step: shape == runtime payload, bytes == 1/value
+        # + one f32 scale per row
+        payload = codec.encode(p, jax.random.normal(jax.random.PRNGKey(R),
+                                                    (B, D)))
+        assert payload.shape == (B // R, D) == codec.payload_shape(B)
+        step_bytes = codecs.payload_wire_bytes(codec, payload.shape)
+        assert step_bytes == (B // R) * D + 4 * (B // R)
+        assert step_bytes == codec.wire_bytes(B)
+        # sequence-grouped prefill chunk: rows multiply by C
+        shape3 = codecs.chunk_payload_shape(codec, B, C)
+        assert shape3 == (C, B // R, D)
+        chunk_bytes = codecs.payload_wire_bytes(codec, shape3)
+        assert chunk_bytes == C * step_bytes
+        # and the helper mirrors the runtime layout bit-for-bit
+        Z3 = jax.random.normal(jax.random.PRNGKey(R + 100), (C, B, D))
+        assert codecs.sequence_group_encode(codec.current, p[f"R{R}"],
+                                            Z3).shape == shape3
+
+
+def test_engine_wire_byte_stats_match_dispatch_counts():
+    """The engine's stats["payload_wire_bytes"] is exactly
+    decode_steps * step_bytes + prefill_chunks * chunk_bytes for a static
+    codec, and follows the served R schedule under an adaptive one."""
+    from repro.configs.base import get_config, reduced
+    from repro.models import lm as lm_lib
+    from repro.serving.engine import BatchedEngine, Request
+    cfg = reduced(get_config("deepseek-7b"), num_layers=2, d_model=64,
+                  d_ff=128, vocab_size=64, num_heads=2, num_kv_heads=1,
+                  head_dim=32)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+
+    def run(spec, pin=None):
+        eng = BatchedEngine(params, cfg, num_slots=4, max_len=16, codec=spec,
+                            chunk_size=4)
+        if pin is not None:
+            eng.codec.pin(pin)
+        for u in range(4):
+            eng.submit(Request(uid=u, prompt=[1 + u, 2, 3, 4, 5],
+                               max_new_tokens=3))
+        eng.run(max_steps=64)
+        return eng
+
+    eng = run("c3sl:R=4|int8")
+    step_b = codecs.payload_wire_bytes(eng.codec,
+                                       eng.codec.payload_shape(4))
+    chunk_b = codecs.payload_wire_bytes(
+        eng.codec, codecs.chunk_payload_shape(eng.codec, 4, eng.chunk_size))
+    assert eng.stats["payload_wire_bytes"] == (
+        eng.stats["decode_steps"] * step_b
+        + eng.stats["prefill_chunks"] * chunk_b)
+
+    eng = run("adaptive:c3sl:R=4,min_R=2|int8", pin=2)
+    bucket = eng.codec.buckets[2]
+    step_b = codecs.payload_wire_bytes(bucket, bucket.payload_shape(4))
+    chunk_b = codecs.payload_wire_bytes(
+        bucket, codecs.chunk_payload_shape(bucket, 4, eng.chunk_size))
+    # r_served counts one entry per executed decode step + prefill chunk
+    assert sum(eng.r_served.values()) == (eng.stats["decode_steps"]
+                                          + eng.stats["prefill_chunks"])
+    assert eng.stats["payload_wire_bytes"] == (
+        eng.stats["decode_steps"] * step_b
+        + eng.stats["prefill_chunks"] * chunk_b)
+    assert set(eng.r_served) == {2}
