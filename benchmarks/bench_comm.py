@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import codecs
+from repro import codecs, transport
 from repro.codecs import build
 from repro.configs.paper import RESNET50_CIFAR100, VGG16_CIFAR10
 from repro.core import split as split_lib
@@ -166,7 +166,7 @@ def _run_adaptive(adaptive_spec, w, steps, base_losses):
 
     traj = []
     total_bytes = 0
-    slack_ema = None
+    slack = _slack_budget(w, base_losses)
     for t, batch in enumerate(_batches(X, y, w["batch"], steps)):
         R = codec.current_R
         net, loss, snr = steps_by_R[R](net, batch)
@@ -174,15 +174,7 @@ def _run_adaptive(adaptive_spec, w, steps, base_losses):
         bucket = codec.buckets[R]
         step_bytes = 2 * bucket.wire_bytes(w["batch"])
         total_bytes += step_bytes
-        # loss slack vs the conservative baseline's trajectory, EMA-smoothed:
-        # per-step CE on a 32-sample batch is noisy enough to flip sign and
-        # ping-pong the ladder; the smoothed signal only vetoes ramp-ups
-        # (or forces ramp-downs) on a SUSTAINED loss gap
-        raw = (base_losses[t] + w["loss_margin"]) - loss
-        slack_ema = (raw if slack_ema is None
-                     else w["slack_ema"] * slack_ema
-                     + (1.0 - w["slack_ema"]) * raw)
-        codec.observe(float(snr), loss_slack=slack_ema)
+        codec.observe(float(snr), loss_slack=slack(t, loss))
         traj.append({"step": t, "R": R, "loss": round(loss, 4),
                      "snr_db": round(float(snr), 2), "bytes": step_bytes})
     return {"spec": adaptive_spec, "ladder": list(codec.ladder),
@@ -195,6 +187,140 @@ def _run_adaptive(adaptive_spec, w, steps, base_losses):
             "compiles": counter[0],
             "compiles_after_warmup": counter[0] - compiles_warmup,
             "trajectory": traj}
+
+
+def _slack_budget(w, base_losses):
+    """ONE definition of the loss-slack veto signal both the shared and
+    the directional runs feed their controllers: EMA-smoothed
+    ``(budget_trajectory[t] + margin) - loss`` (see benchmarks/README.md —
+    the smoothed signal only vetoes/forces on a SUSTAINED gap, per-step CE
+    on a 32-sample batch is noisy enough to flip sign)."""
+    state = {"ema": None}
+
+    def update(t, loss):
+        raw = (base_losses[t] + w["loss_margin"]) - loss
+        state["ema"] = (raw if state["ema"] is None
+                        else w["slack_ema"] * state["ema"]
+                        + (1.0 - w["slack_ema"]) * raw)
+        return state["ema"]
+
+    return update
+
+
+def _make_link_step(link, link_params, lr, compile_counter):
+    """One jitted SGD step for ONE static (R_fwd, R_bwd) link pair.  The
+    probe argument taps the measured gradient-retrieval SNR (the backward
+    controller's feedback) out of the same backward pass."""
+    loss_fn = transport.make_split_loss_fn(_front, _back, link, _ce,
+                                           with_metrics=True)
+
+    def raw(net, batch, probe):
+        compile_counter[0] += 1          # runs only while tracing
+        params = {**net, "codec": link_params}
+        (loss, m), (g, bwd_snr) = jax.value_and_grad(
+            loss_fn, argnums=(0, 2), has_aux=True)(params, batch, probe)
+        net2 = jax.tree.map(lambda a, b: a - lr * b,
+                            net, {"front": g["front"], "back": g["back"]})
+        return net2, loss, m["cut_snr"], bwd_snr
+
+    return jax.jit(raw)
+
+
+def _run_directional(link_spec, w, steps, base_losses):
+    """Per-direction adaptive run: one compiled step per (R_fwd, R_bwd)
+    bucket pair, both deadband controllers fed from the SAME step — the
+    forward one by the cut-layer retrieval SNR, the backward one by the
+    gradient-retrieval SNR measured at the custom-VJP seam — plus the
+    shared loss-slack veto vs the min-R baseline's trajectory."""
+    link = transport.build_link(link_spec, D=w["D_cut"])
+    link_params = link.init(jax.random.PRNGKey(7))
+    net, X, y = _workload(w)
+    counter = [0]
+    steps_by_key = transport.build_link_program_table(
+        link, link_params,
+        lambda sl, sp: _make_link_step(sl, sp, w["lr"], counter))
+    probe0 = jnp.float32(0.0)
+    warm = {"x": X[:w["batch"]], "y": y[:w["batch"]]}
+    for key in steps_by_key:
+        steps_by_key[key](net, warm, probe0)   # compile only
+    compiles_warmup = counter[0]
+
+    traj = []
+    total_fwd = total_bwd = 0
+    slack = _slack_budget(w, base_losses)
+    for t, batch in enumerate(_batches(X, y, w["batch"], steps)):
+        key = transport.link_program_key(link)
+        net, loss, snr, bwd_snr = steps_by_key[key](net, batch, probe0)
+        loss = float(loss)
+        wf = link.wire_bytes_fwd(w["batch"])
+        wb = link.wire_bytes_bwd(w["batch"])
+        total_fwd += wf
+        total_bwd += wb
+        link.observe(fwd_snr=float(snr), bwd_snr=float(bwd_snr),
+                     loss_slack=slack(t, loss))
+        traj.append({"step": t, "R_fwd": key[0], "R_bwd": key[1],
+                     "loss": round(loss, 4),
+                     "snr_db": round(float(snr), 2),
+                     "grad_snr_db": round(float(bwd_snr), 2),
+                     "bytes_fwd": wf, "bytes_bwd": wb})
+    return {"spec": link.spec(),
+            "ladder_fwd": list(link.fwd.codec.ladder),
+            "ladder_bwd": list(link.bwd.codec.ladder),
+            "mean_bytes_per_step": round((total_fwd + total_bwd) / steps, 1),
+            "total_bytes": total_fwd + total_bwd,
+            "total_bytes_fwd": total_fwd,
+            "total_bytes_bwd": total_bwd,
+            "final_loss": round(float(np.mean([p["loss"]
+                                               for p in traj[-20:]])), 4),
+            "final_R_fwd": link.fwd.current_R,
+            "final_R_bwd": link.bwd.current_R,
+            "compiles": counter[0],
+            "compiles_after_warmup": counter[0] - compiles_warmup,
+            "trajectory": traj}
+
+
+def directional_sweep(steps: int, shared: dict, base_losses, w=None) -> dict:
+    """Per-direction vs shared-R scheduling, same workload and batch order.
+
+    ``shared`` is the PR-4 shared-codec adaptive run (one R for both
+    directions, fwd+bwd bytes = 2x the bucket's wire bytes).  The
+    directional run reuses the SAME forward spec and adds an independent
+    gradient-side controller; the expectation recorded here: **independent
+    backward scheduling strictly reduces total wire bytes at equal-or-
+    better final loss, with zero post-warmup recompiles** across the
+    (R_fwd, R_bwd) program table.
+    """
+    w = dict(WORKLOAD if w is None else w)
+    link_spec = (f"{shared['spec'].split('>>')[0].strip()} >> "
+                 f"bwd:adaptive:c3sl:R=4,min_R=2,target_snr=-40")
+    print(f"\n# per-direction sweep: {link_spec}")
+    # both runs get the SAME loss-slack budget (the static min-R
+    # trajectory + margin) so the comparison isolates one variable:
+    # whether the backward direction schedules independently
+    directional = _run_directional(link_spec, w, steps, base_losses)
+    bytes_ratio = directional["total_bytes"] / shared["total_bytes"]
+    loss_ok = directional["final_loss"] <= shared["final_loss"]
+    print(f"directional {directional['spec']}")
+    print(f"         {directional['mean_bytes_per_step']:>7,.0f} B/step mean "
+          f"(fwd {directional['total_bytes_fwd']:,d} + "
+          f"bwd {directional['total_bytes_bwd']:,d} B total; "
+          f"{bytes_ratio:.2f}x the shared-R adaptive run)  final loss "
+          f"{directional['final_loss']:.4f} vs shared "
+          f"{shared['final_loss']:.4f} "
+          f"(R ends at {directional['final_R_fwd']}>>"
+          f"bwd:{directional['final_R_bwd']}; "
+          f"{directional['compiles_after_warmup']} recompiles after warmup)")
+    summary = {
+        "shared_spec": shared["spec"],
+        "bytes_vs_shared_adaptive": round(bytes_ratio, 3),
+        "final_loss_directional": directional["final_loss"],
+        "final_loss_shared": shared["final_loss"],
+        "meets_criteria": bool(bytes_ratio < 1.0 and loss_ok
+                               and directional["compiles_after_warmup"] == 0),
+    }
+    print(f"# summary: bytes {bytes_ratio:.2f}x shared adaptive, "
+          f"meets_criteria={summary['meets_criteria']}")
+    return {"directional": directional, "summary": summary}
 
 
 def adaptive_sweep(steps: int, w=None) -> dict:
@@ -245,7 +371,10 @@ def main(out: str = "BENCH_comm.json", sweep_steps: int = 200,
          smoke: bool = False):
     analytic = []
     analytic_table(analytic)
-    sweep = adaptive_sweep(40 if smoke else sweep_steps)
+    steps = 40 if smoke else sweep_steps
+    sweep = adaptive_sweep(steps)
+    directional = directional_sweep(steps, sweep["adaptive"],
+                                    sweep["static"][0]["loss_trajectory"])
     payload = {
         "protocol": {
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -256,6 +385,7 @@ def main(out: str = "BENCH_comm.json", sweep_steps: int = 200,
         },
         "analytic": analytic,
         "adaptive_sweep": sweep,
+        "directional_sweep": directional,
     }
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -1,11 +1,15 @@
 """The paper's topology at datacenter scale: 2-stage pod pipeline where the
-C3-SL codec compresses the inter-pod channel (ppermute) in BOTH directions.
+transport layer compresses the inter-pod channel (ppermute) in BOTH
+directions — each direction with its OWN codec (the backward gradient
+payload re-grouped by the ``bwd:`` channel), and the channel double-buffered
+(``async_depth=2``) so microbatch t's payload send overlaps microbatch
+t+1's front pass.
 
     PYTHONPATH=src python examples/pod_split_pipeline.py
 
 Runs on 8 simulated host devices as a (pod=2, data=2, model=2) mesh; prints
-the loss curve and the channel-bytes saving vs uncompressed.  This is the
-runnable small-scale twin of the production (2,16,16) dry-run.
+the loss curve and the per-direction channel-bytes saving vs uncompressed.
+This is the runnable small-scale twin of the production (2,16,16) dry-run.
 """
 import os, sys
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -14,15 +18,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.codecs import build
+from repro import transport
 from repro.configs.base import get_config, reduced
-from repro.core import split as split_lib
 from repro.launch import mesh as mesh_lib
 from repro.models import lm as lm_lib
 from repro.data.pipeline import SyntheticTokenDataset
 from repro.optim import adamw, apply_updates, clip_by_global_norm
 
 STEPS = int(os.environ.get("PIPELINE_STEPS", 30))
+ASYNC_DEPTH = int(os.environ.get("PIPELINE_ASYNC_DEPTH", 2))
 
 
 def main():
@@ -30,9 +34,12 @@ def main():
                   d_ff=256, vocab_size=128, num_heads=4, num_kv_heads=2,
                   head_dim=32)
     mesh = mesh_lib.make_host_mesh(data=2, model=2, pod=2)
-    B, S, M, R = 16, 32, 4, 4
-    mb = B // M
-    codec = build(f"c3sl:R={min(R, mb)}", D=S * cfg.d_model)
+    B, S, M, R = 32, 32, 4, 4     # mb=8: fwd R=4 leaves 2 gradient rows
+    mb = B // M                   # for the bwd channel's R=2 grouping
+    # forward: R=4 + int8 wire; backward: the gradient payload (mb/R rows)
+    # re-grouped by its own R=2 — the per-direction transport link
+    codec = transport.build_link(
+        f"c3sl:R={min(R, mb)}|int8 >> bwd:c3sl:R=2|int8", D=S * cfg.d_model)
 
     rng = jax.random.PRNGKey(0)
     full = lm_lib.init_lm_params(rng, cfg)
@@ -43,8 +50,9 @@ def main():
         "codec": codec.init(jax.random.PRNGKey(7)),
     }
     embed_fn, stage_fn, head_loss_fn = lm_lib.make_pipeline_fns(cfg)
-    loss_fn = split_lib.make_pod_pipeline_loss_fn(
-        embed_fn, stage_fn, head_loss_fn, codec, mesh, num_microbatches=M)
+    loss_fn = transport.make_pod_pipeline_loss_fn(
+        embed_fn, stage_fn, head_loss_fn, codec, mesh, num_microbatches=M,
+        async_depth=ASYNC_DEPTH)
 
     opt = adamw(3e-3)
     opt_state = opt.init(params)
@@ -58,7 +66,7 @@ def main():
 
     data = SyntheticTokenDataset(cfg.vocab_size, S, seed=0)
     losses = []
-    with jax.set_mesh(mesh):
+    with mesh_lib.set_mesh(mesh):
         for i in range(STEPS):
             b = data.batch(B, i)
             params, opt_state, loss = step(
@@ -67,11 +75,13 @@ def main():
             if i % 5 == 0:
                 print(f"step {i:3d} loss {losses[-1]:.4f}")
 
-    wire = codec.wire_bytes(mb)
+    wf = codec.wire_bytes_fwd(mb)
+    wb = codec.wire_bytes_bwd(mb)
     base = mb * S * cfg.d_model * 4
     print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f}")
-    print(f"inter-pod bytes per microbatch per direction: {wire:,} vs "
-          f"{base:,} uncompressed ({base/wire:.1f}x)")
+    print(f"inter-pod bytes per microbatch (async_depth={ASYNC_DEPTH}): "
+          f"fwd {wf:,} + bwd {wb:,} vs {2 * base:,} uncompressed "
+          f"({2 * base / (wf + wb):.1f}x)")
     assert losses[-1] < losses[0]
 
 

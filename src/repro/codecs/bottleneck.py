@@ -27,6 +27,10 @@ class DenseBottleneckCodec(SpecMixin):
     D: int
 
     feature_layout = "flat"
+    #: params take gradients in normal training (vs C3-SL's fixed keys) —
+    #: surfaces like the transport layer's gradient seam, which cannot
+    #: backprop into codec params, check this to fail loudly
+    trainable = True
 
     def __post_init__(self):
         if self.D % self.R:
@@ -92,6 +96,7 @@ class BottleNetPPCodec(SpecMixin):
     k: int = 2  # kernel size and stride, per C3-SL Sec. 4.1
 
     feature_layout = "nchw"
+    trainable = True  # see DenseBottleneckCodec
 
     def __post_init__(self):
         if (4 * self.C) % self.R:

@@ -1,173 +1,35 @@
-"""Split-learning step machinery.
+"""Thin re-export shim — the split-step machinery moved to ``repro.transport``.
 
-Two execution modes, one codec interface:
+The cut-layer exchange is now a first-class subsystem: per-direction codecs
+(``SplitLink``), the gradient-compression custom-VJP seam, and the
+double-buffered asynchronous pod-pipeline channel all live in
+``repro.transport`` (same shim pattern PR 1 used for ``repro.core.codec``).
+Pre-transport imports keep working::
 
-1. logical split (`make_split_loss_fn`) — front/back halves live in the same
-   program (single device or any mesh); the codec sits between them exactly
-   like the paper's Algorithm 1.  Used for the paper reproduction, CPU tests
-   and as the baseline single-program integration.
+    from repro.core import split as split_lib
+    split_lib.make_split_loss_fn(...)          # -> repro.transport.split
+    split_lib.make_pod_pipeline_loss_fn(...)   # -> repro.transport.pipeline
 
-2. pod pipeline (`make_pod_pipeline_loss_fn`) — the production mapping: the
-   mesh has a "pod" axis of size 2; stage 0 (the paper's *edge*) owns the
-   front blocks, stage 1 (*cloud*) owns the back blocks.  Both pods run the
-   same SPMD program (partial-manual `jax.shard_map` over the pod axis; data/
-   model axes stay auto-partitioned).  The cut-layer payload crosses pods via
-   `lax.ppermute`; because the whole step is differentiated, the backward
-   `ppermute` carries the codec-compressed *gradient* — the paper's
-   bidirectional communication saving falls out of the adjoint for free.
-   Microbatching gives the classic GPipe M/(M+1) utilization: at step t,
-   pod0 runs the front half on microbatch t while pod1 runs the back half on
-   microbatch t-1.
+Imports are lazy (module ``__getattr__``) because ``repro.core.__init__``
+loads this shim while ``repro.codecs`` — which the transport layer builds
+on — may itself be mid-import.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+_EXPORTS = {
+    "apply_codec": ("repro.transport.split", "apply_codec"),
+    "make_split_loss_fn": ("repro.transport.split", "make_split_loss_fn"),
+    "split_comm_bytes": ("repro.transport.split", "split_comm_bytes"),
+    "make_pod_pipeline_loss_fn": ("repro.transport.pipeline",
+                                  "make_pod_pipeline_loss_fn"),
+}
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-def apply_codec(codec, params, Z, *, with_snr=False):
-    """Round-trip Z through a codec, preserving Z's shape.
-
-    Dispatch is protocol-level via ``codec.feature_layout``: "nchw" codecs
-    (BottleNet++) consume (B, C, H, W) natively; "flat" codecs work on
-    flattened (B, D).  Wrapper codecs (e.g. the Adaptive-R scheduler) expose
-    the same attribute, so they dispatch identically.
-
-    ``with_snr=True`` additionally returns the retrieval SNR (dB) of the
-    round-trip — the Adaptive-R controller's feedback signal.
-    """
-    if getattr(codec, "feature_layout", "flat") == "nchw":
-        payload = codec.encode(params, Z)
-        Zhat = codec.decode(params, payload)
-    else:
-        shape = Z.shape
-        Zf = Z.reshape(shape[0], -1)
-        payload = codec.encode(params, Zf)
-        Zhat = codec.decode(params, payload).reshape(shape)
-    if with_snr:
-        from repro.core.hrr import retrieval_snr
-        return Zhat, retrieval_snr(Z, Zhat)
-    return Zhat
+__all__ = list(_EXPORTS)
 
 
-def make_split_loss_fn(front_apply: Callable, back_apply: Callable, codec,
-                       loss_fn: Callable, with_metrics: bool = False) -> Callable:
-    """Logical split: loss(params, batch) with the codec at the cut layer.
-
-    params = {"front": ..., "back": ..., "codec": ...}
-    batch  = {"x": ..., "y": ...}
-
-    ``with_metrics=True`` makes the returned fn yield (loss, metrics) where
-    metrics["cut_snr"] is the cut-layer retrieval SNR in dB — pair it with
-    ``jax.value_and_grad(..., has_aux=True)`` to feed the Adaptive-R
-    scheduler without a second forward pass.
-    """
-
-    def loss(params, batch):
-        Z = front_apply(params["front"], batch["x"])
-        if with_metrics:
-            Zhat, snr = apply_codec(codec, params["codec"], Z, with_snr=True)
-            logits = back_apply(params["back"], Zhat)
-            return loss_fn(logits, batch["y"]), {"cut_snr": snr}
-        Zhat = apply_codec(codec, params["codec"], Z)
-        logits = back_apply(params["back"], Zhat)
-        return loss_fn(logits, batch["y"])
-
-    return loss
-
-
-def split_comm_bytes(codec, B: int, directions: int = 2) -> int:
-    """Wire bytes per step (activations up + gradients down)."""
-    return directions * codec.wire_bytes(B)
-
-
-# --------------------------------------------------------------------------
-# Pod pipeline (2-stage GPipe over the "pod" mesh axis, compressed channel)
-# --------------------------------------------------------------------------
-
-def make_pod_pipeline_loss_fn(
-    embed_fn: Callable,        # (embed_params, x_mb) -> h (mb, S, E)
-    stage_fn: Callable,        # (stage_blocks, h) -> h  (one stage's blocks; same fn both stages)
-    head_loss_fn: Callable,    # (head_params, h, y_mb) -> scalar mean loss
-    codec,                     # flattened-feature codec (C3SL / Identity / Dense)
-    mesh,
-    num_microbatches: int = 1,
-) -> Callable:
-    """Returns loss(params, batch) implementing the 2-stage compressed pipeline.
-
-    params = {"embed", "blocks" (leading stage axis 2, sharded P("pod")),
-              "head", "codec"}.
-    batch  = {"x": (B, S) or (B, S, E_in), "y": (B, S)} — replicated over pod,
-             sharded over data on the batch dim by the caller.
-
-    Schedule (M = num_microbatches, steps t = 0..M):
-        pod0:  front(mb_t)        for t < M
-        pod1:  back(recv_{t-1})   for t >= 1
-    The in-flight payload is the lax.scan carry; ppermute(0->1) moves it.
-    """
-    M = num_microbatches
-
-    def loss(params, batch):
-        def inner(x, y, embed_p, blocks_local, head_p, codec_p):
-            stage = jax.lax.axis_index("pod")
-            # blocks_local: (1, L/2, ...) — this pod's stage blocks
-            my_blocks = jax.tree.map(lambda a: a[0], blocks_local)
-
-            B = x.shape[0]
-            assert B % M == 0, (B, M)
-            mb = B // M
-            x_mbs = x.reshape(M, mb, *x.shape[1:])
-            y_mbs = y.reshape(M, mb, *y.shape[1:])
-
-            h_probe = embed_fn(embed_p, x_mbs[0])
-            flat_shape = (mb, h_probe.shape[1] * h_probe.shape[2])
-
-            def payload_of(h):
-                payload = codec.encode(codec_p, h.reshape(flat_shape))
-                # shard the wire tensor over (data, model) BEFORE the pod
-                # hop: the FFT encode otherwise leaves D replicated and every
-                # model shard would redundantly send the full payload.
-                # (scatter is intra-pod ICI — cheap; the pod link is scarce)
-                from repro.sharding.constraints import constrain
-                return constrain(payload, ("data", "model"))
-
-            def step(carry, t):
-                payload_prev, loss_acc = carry
-                # input for my stage at step t
-                x_t = jax.lax.dynamic_index_in_dim(
-                    x_mbs, jnp.minimum(t, M - 1), axis=0, keepdims=False)
-                y_prev = jax.lax.dynamic_index_in_dim(
-                    y_mbs, jnp.clip(t - 1, 0, M - 1), axis=0, keepdims=False)
-                h_front_in = embed_fn(embed_p, x_t)
-                h_back_in = codec.decode(codec_p, payload_prev).reshape(h_front_in.shape)
-                h_in = jnp.where(stage == 0, h_front_in, h_back_in)
-                h_out = stage_fn(my_blocks, h_in)
-                payload = payload_of(h_out)
-                # channel: stage0 -> stage1 (stage1's payload goes back to 0
-                # and is ignored, closing the permutation ring)
-                recv = jax.lax.ppermute(payload, "pod", perm=[(0, 1), (1, 0)])
-                mb_loss = head_loss_fn(head_p, h_out, y_prev)
-                valid = jnp.logical_and(stage == 1, t >= 1)
-                loss_acc = loss_acc + jnp.where(valid, mb_loss, 0.0)
-                return (recv, loss_acc), None
-
-            payload0 = jnp.zeros_like(payload_of(h_probe))
-            (_, loss_sum), _ = jax.lax.scan(
-                step, (payload0, jnp.array(0.0, jnp.float32)), jnp.arange(M + 1))
-            # only pod1 accumulated loss; sum over pods and average microbatches
-            return jax.lax.psum(loss_sum, "pod") / M
-
-        return jax.shard_map(
-            inner,
-            mesh=mesh,
-            in_specs=(P(), P(), P(), P("pod"), P(), P()),
-            out_specs=P(),
-            axis_names={"pod"},
-            check_vma=False,
-        )(batch["x"], batch["y"], params["embed"], params["blocks"],
-          params["head"], params["codec"])
-
-    return loss
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+        mod, attr = _EXPORTS[name]
+        return getattr(importlib.import_module(mod), attr)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

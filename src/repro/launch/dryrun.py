@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import codecs
+from repro import codecs, transport
 from repro.configs.base import ModelConfig, get_config
 from repro.data.pipeline import SHAPES, input_specs
 from repro.launch import mesh as mesh_lib
@@ -50,7 +50,8 @@ def shape_adjusted_config(arch: str, shape_name: str) -> ModelConfig | None:
 
 def make_codec(cfg: ModelConfig, shape_name: str, codec_spec: str, R: int,
                quant_bits=None, unitary=False):
-    """Build the cut-layer codec from a registry spec string ("none" = off)."""
+    """Build the cut-layer codec (or per-direction ``SplitLink`` from a
+    ``... >> bwd:...`` spec) from a registry spec string ("none" = off)."""
     if codec_spec in (None, "", "none"):
         return None, None
     shape = SHAPES[shape_name]
@@ -60,10 +61,10 @@ def make_codec(cfg: ModelConfig, shape_name: str, codec_spec: str, R: int,
     else:
         # cut-layer feature per sample = (S_total, d_model) flattened
         D = shape["seq_len"] * cfg.d_model
-    codec_spec = codecs.apply_quant_bits(codec_spec, quant_bits)
-    c = codecs.clamp_R(
-        codecs.build(codec_spec, R=R, D=D, backend="fft", unitary=unitary),
-        B if B >= 2 else 1)
+    c = transport.build_link_or_codec(codec_spec, quant_bits=quant_bits,
+                                      R=R, D=D, backend="fft",
+                                      unitary=unitary)
+    c = codecs.clamp_R(c, B if B >= 2 else 1)
     return c, jax.eval_shape(lambda: c.init(jax.random.PRNGKey(0)))
 
 
@@ -178,7 +179,7 @@ def _lower_and_compile(cfg, shape_name, mesh, codec, codec_params,
     batch_sh = sh.batch_shardings(batch, mesh)
     repl = NamedSharding(mesh, P())
 
-    with jax.set_mesh(mesh):
+    with mesh_lib.set_mesh(mesh):
         if spec["kind"] == "train":
             opt, train_step = build_train_step(cfg, codec, codec_params,
                                                num_microbatches)
@@ -274,6 +275,12 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str, *, codec_kind="none",
     stats = hloparse.analyze(compiled.as_text())
     coll = dict(stats["coll_by_op"])
     coll["total"] = stats["coll_bytes"]
+    # mask-aware wire accounting: sparsified (topk) payload bytes MEASURED
+    # from the compiled HLO — rows/k/D read off the lowered top-k ops
+    # (trip-count aware) instead of trusting the analytic formula; the
+    # cross-check against payload_wire_bytes is pinned in
+    # tests/test_hloparse.py
+    topk_wire = stats["topk_wire_bytes"]
     flops = stats["dot_flops"]
     hbm_bytes = stats["hbm_bytes"]
     mf = model_flops(cfg, shape_name)
@@ -296,6 +303,7 @@ def dryrun_one(arch: str, shape_name: str, mesh_kind: str, *, codec_kind="none",
         "hlo_flops_per_device": flops,
         "hlo_bytes_per_device": hbm_bytes,
         "collective_bytes_per_device": coll,
+        "topk_wire_bytes_hlo": topk_wire,
         "model_flops_global": mf,
         "model_flops_per_device": mf / n_chips,
         "useful_flops_ratio": (mf / n_chips) / flops if flops else None,
@@ -336,10 +344,13 @@ def _pod_permute_bytes(hlo: str) -> float:
 def pipeline_dryrun(arch: str, *, R: int = 4, quant_bits=None, unitary=False,
                     num_microbatches: int = 4, shape_name: str = "train_4k",
                     tag: str = "pipeline", save: bool = True,
-                    codec_kind: str = "c3sl"):
+                    codec_kind: str = "c3sl", async_depth: int = 1):
     """Dry-run the 2-stage pod pipeline (paper topology at scale): lower the
     pipelined train loss on the multi-pod mesh and report the inter-pod
-    collective-permute bytes — the wire the C3-SL codec compresses."""
+    collective-permute bytes — the wire the C3-SL codec compresses.
+    ``codec_kind`` may be a ``... >> bwd:...`` link spec (per-direction
+    gradient compression); ``async_depth=2`` lowers the double-buffered
+    channel schedule."""
     from repro.core import split as split_lib
     from repro.launch import hloparse
 
@@ -354,10 +365,10 @@ def pipeline_dryrun(arch: str, *, R: int = 4, quant_bits=None, unitary=False,
         codec = codecs.build("identity", D=D_flat)
         codec_params = {}
     else:
-        spec = codecs.apply_quant_bits(codec_kind, quant_bits)
         codec = codecs.clamp_R(
-            codecs.build(spec, R=R, D=D_flat, backend="fft", unitary=unitary),
-            mb)
+            transport.build_link_or_codec(codec_kind, quant_bits=quant_bits,
+                                          R=R, D=D_flat, backend="fft",
+                                          unitary=unitary), mb)
         codec_params = jax.eval_shape(lambda: codec.init(jax.random.PRNGKey(0)))
 
     # f32 params: XLA:CPU's AllReducePromotion pass crashes on the bf16
@@ -373,7 +384,7 @@ def pipeline_dryrun(arch: str, *, R: int = 4, quant_bits=None, unitary=False,
     embed_fn, stage_fn, head_loss_fn = lm_lib.make_pipeline_fns(cfg)
     loss_fn = split_lib.make_pod_pipeline_loss_fn(
         embed_fn, stage_fn, head_loss_fn, codec, mesh,
-        num_microbatches=num_microbatches)
+        num_microbatches=num_microbatches, async_depth=async_depth)
 
     from jax.sharding import NamedSharding
     param_sh = jax.tree.map(
@@ -392,7 +403,7 @@ def pipeline_dryrun(arch: str, *, R: int = 4, quant_bits=None, unitary=False,
     def grad_step(params, batch):
         return jax.value_and_grad(loss_fn)(params, batch)
 
-    with jax.set_mesh(mesh):
+    with mesh_lib.set_mesh(mesh):
         lowered = jax.jit(grad_step, in_shardings=(param_sh, batch_sh)).lower(
             params, batch)
         compiled = lowered.compile()
@@ -403,11 +414,16 @@ def pipeline_dryrun(arch: str, *, R: int = 4, quant_bits=None, unitary=False,
     result = {
         "arch": arch, "shape": shape_name, "mesh": "multi-pipeline",
         "tag": tag, "codec": codec_kind if codec_kind != "none" else "identity",
-        "R": getattr(codec, "R", 1), "quant": quant_bits,
-        "num_microbatches": num_microbatches, "status": "ok",
+        # links report the FORWARD channel's R (SplitLink carries no bare R)
+        "R": getattr(codec.fwd.current if isinstance(codec, transport.SplitLink)
+                     else codec, "R", 1),
+        "quant": quant_bits,
+        "num_microbatches": num_microbatches, "async_depth": async_depth,
+        "status": "ok",
         "collective_bytes_per_device": dict(stats["coll_by_op"],
                                             total=stats["coll_bytes"]),
         "interpod_permute_bytes": _pod_permute_bytes(hlo),
+        "topk_wire_bytes_hlo": stats["topk_wire_bytes"],
         "hlo_flops_per_device": stats["dot_flops"],
         "per_device": {"peak_bytes":
                        (getattr(mem, "argument_size_in_bytes", 0) or 0)

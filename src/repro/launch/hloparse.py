@@ -54,9 +54,77 @@ class CompStats:
     dot_flops: float = 0.0
     coll_bytes: float = 0.0
     hbm_bytes: float = 0.0  # sum of top-level op output bytes (write side)
+    topk_wire_bytes: float = 0.0  # measured mask-encoded top-k payload bytes
     coll_by_op: dict = dataclasses.field(default_factory=lambda: collections.Counter())
     # (child computation, trip count, structural?) edges
     children: list = dataclasses.field(default_factory=list)
+
+
+# TopK lowerings this parser recognizes: the XLA custom-call (CPU/GPU) and
+# the first-class `topk(...)` HLO op (newer XLA).  Both produce a
+# (values[rows, k], indices[rows, k]) tuple from an operand [rows, D].
+_TOPK_RE = re.compile(r'custom_call_target="TopK"|\btopk\(')
+
+
+def _is_magnitude_topk(opname: str, defs: dict, comps: dict | None) -> bool:
+    """True when the top-k's operand is |x| — the wire-stage signature.
+
+    ``repro.codecs.wire.TopKSparsify`` always ranks MAGNITUDES (top_k of
+    ``abs``); other top-ks in the program (the MoE router ranks raw logits)
+    are not sparsified payloads and must not count as wire bytes.  The abs
+    may be a standalone op or swallowed into a fusion, so resolve one level
+    of ``calls=`` indirection."""
+    d = defs.get(opname, "")
+    if " abs(" in d or "= abs(" in d:
+        return True
+    if "fusion(" in d and comps is not None:
+        cm = re.search(r"calls=%?([\w.\-]+)", d)
+        if cm:
+            return any("abs(" in body_ln for body_ln in comps.get(cm.group(1), []))
+    return False
+
+
+def _topk_wire_bytes_for_line(ln: str, defs: dict | None = None,
+                              comps: dict | None = None) -> float:
+    """MEASURED wire bytes of one top-k op's mask-encoded payload.
+
+    ``repro.codecs.wire.TopKSparsify`` ships a D-bit mask + k f32 survivors
+    per row; the analytic formula trusts the codec's payload_shape.  Here
+    the SAME quantity is derived from the compiled program instead: the
+    top-k op's VALUES output [rows..., k] gives the true row count and k,
+    its operand [rows..., D] gives the mask width — so sparsified payload
+    bytes can be audited post-SPMD (loop trips are applied by the caller's
+    walk, like every other per-computation stat).  Only MAGNITUDE top-ks
+    (operand resolving to ``abs``, see :func:`_is_magnitude_topk`) count
+    when ``defs`` is given — a router's top-k over raw logits is program
+    control flow, not payload.  Operands print with inline types or as
+    bare names depending on the HLO printer version (same dialect split
+    ``_dot_flops`` handles); ``defs`` doubles as the shape fallback.
+    """
+    if not _TOPK_RE.search(ln):
+        return 0.0
+    call = "custom-call(" if "custom-call(" in ln else "topk("
+    left, _, right = ln.partition(call)
+    outs = _SHAPE_RE.findall(left)
+    opnd = _SHAPE_RE.search(right)
+    nm = re.match(r"\s*(?:\w+\[[\d,]*\]\S*\s+)?%?([\w.\-]+)", right)
+    if defs is not None:
+        if nm is None or not _is_magnitude_topk(nm.group(1), defs, comps):
+            return 0.0
+        if opnd is None:
+            opnd = _SHAPE_RE.search(defs.get(nm.group(1), ""))
+    if not outs or not opnd:
+        return 0.0
+    val_dims = [int(d) for d in outs[0][1].split(",") if d.strip()]
+    op_dims = [int(d) for d in opnd.group(2).split(",") if d.strip()]
+    if len(val_dims) < 2 or len(op_dims) < 2:
+        return 0.0
+    k = val_dims[-1]
+    rows = 1
+    for d in val_dims[:-1]:
+        rows *= d
+    D = op_dims[-1]
+    return rows * ((D + 7) // 8 + 4 * k)
 
 
 _HBM_SKIP_OPS = ("parameter(", "get-tuple-element(", "tuple(", "constant(",
@@ -167,10 +235,13 @@ def _build_shape_map(comps) -> dict[str, str]:
 
 
 def _dot_flops(line: str, out_shape_text: str, shapes: dict[str, str]) -> float:
-    m = re.search(r"dot\(\s*%?([\w.\-]+)", line)
+    # operand lists print either bare names ("dot(%a, %b)") or with inline
+    # types ("dot(f32[64,128]{1,0} %a, ...)") depending on the HLO printer
+    # version — take the inline shape when present, else look the name up
+    m = re.search(r"dot\(\s*(?:(\w+\[[\d,]*\]\S*)\s+)?%?([\w.\-]+)", line)
     if not m:
         return 0.0
-    lhs = shapes.get(m.group(1), "")
+    lhs = m.group(1) or shapes.get(m.group(2), "")
     lhs_m = _SHAPE_RE.search(lhs)
     out_m = _SHAPE_RE.search(out_shape_text)
     if not lhs_m or not out_m:
@@ -255,6 +326,7 @@ def analyze(hlo: str):
             out_shape = dm.group(2) if dm else ln
             if " dot(" in ln or re.search(r"=\s*\S+\s+dot\(", ln):
                 cs.dot_flops += _dot_flops(ln, out_shape, shapes)
+            cs.topk_wire_bytes += _topk_wire_bytes_for_line(ln, defs, comps)
             if not any(skip in ln for skip in _HBM_SKIP_OPS):
                 head = out_shape.split(" ")[0]
                 cs.hbm_bytes += _hbm_bytes_for_line(ln, head, shapes)
@@ -294,7 +366,7 @@ def analyze(hlo: str):
         entry = next(iter(comps))
 
     totals = {"dot_flops": 0.0, "coll_bytes": 0.0, "hbm_bytes": 0.0,
-              "coll_by_op": collections.Counter()}
+              "topk_wire_bytes": 0.0, "coll_by_op": collections.Counter()}
     seen_stack = []
 
     def walk(name: str, mult: float, structural: bool):
@@ -304,6 +376,7 @@ def analyze(hlo: str):
         cs = stats[name]
         totals["dot_flops"] += mult * cs.dot_flops
         totals["coll_bytes"] += mult * cs.coll_bytes
+        totals["topk_wire_bytes"] += mult * cs.topk_wire_bytes
         if structural:
             # fusion internals never touch HBM; only structural computations
             # (entry / while bodies / branches) write buffers.  x2 = read+write.

@@ -33,6 +33,15 @@ def make_host_mesh(data: int = 1, model: int = 1, pod: int | None = None):
     return _mesh((data, model), ("data", "model"))
 
 
+def set_mesh(mesh):
+    """Context manager activating ``mesh``: ``jax.set_mesh`` on current jax,
+    the ``Mesh`` object's own context on older releases (which predate
+    ``jax.set_mesh`` but activate the mesh the same way for jit/shard_map)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 # TPU v5e hardware constants for the roofline model (per chip)
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # B/s

@@ -20,9 +20,24 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import codecs
+from repro import codecs, transport
 from repro.configs.base import get_config, reduced
 from repro.models import lm as lm_lib
+
+
+def _serving_codec(spec: str, D: int, R: int, batch: int):
+    """Build the serving-side codec from a spec.  Per-direction link specs
+    (``... >> bwd:...``) resolve to the FORWARD channel — serving ships no
+    gradient, so the backward codec has nothing to compress (accounted as
+    wire_bytes_bwd == 0 in the engine stats)."""
+    if transport.is_link_spec(spec):
+        link = transport.build_link(spec, D=D, R=R)
+        print(f"[serve] link spec {link.spec()!r}: forward channel serves "
+              f"(no gradient crosses the cut at inference)", flush=True)
+        spec_codec = link.fwd.codec
+    else:
+        spec_codec = codecs.build(spec, D=D, R=R)
+    return codecs.clamp_R(spec_codec, batch)
 
 
 def _run_engine(cfg, params, args):
@@ -31,8 +46,7 @@ def _run_engine(cfg, params, args):
     codec = None
     if args.codec != "none":
         # same spec defaults as the lockstep path: --R fills specs omitting R
-        codec = codecs.clamp_R(
-            codecs.build(args.codec, D=cfg.d_model, R=args.R), args.batch)
+        codec = _serving_codec(args.codec, cfg.d_model, args.R, args.batch)
     eng = BatchedEngine(params, cfg, num_slots=args.batch,
                         max_len=args.cache_len, codec=codec,
                         codec_params=(codec.init(jax.random.PRNGKey(7))
@@ -61,7 +75,8 @@ def _run_engine(cfg, params, args):
           f"kv={args.kv_layout} interleave={eng.interleave} "
           f"codec={eng.codec.spec() if eng.codec is not None else 'none'}")
     if eng.codec is not None:
-        line = (f"cut-layer wire: {eng.stats['payload_wire_bytes']:,d} B "
+        line = (f"cut-layer wire: fwd {eng.stats['wire_bytes_fwd']:,d} B + "
+                f"bwd {eng.stats['wire_bytes_bwd']:,d} B "
                 f"over {eng.stats['decode_steps']} decode steps + "
                 f"{eng.stats['prefill_chunks']} prefill chunks")
         if eng.r_served:
@@ -89,8 +104,10 @@ def main():
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=256)
     ap.add_argument("--codec", default="none",
-                    help="registry spec, e.g. 'c3sl:R=4|int8' or "
-                         "'adaptive:c3sl:R=8,min_R=2|int8' (see repro.codecs)")
+                    help="registry spec, e.g. 'c3sl:R=4|int8', "
+                         "'adaptive:c3sl:R=8,min_R=2|int8', or a link spec "
+                         "'c3sl:R=4|int8 >> bwd:c3sl:R=2' (serving uses the "
+                         "forward channel; see repro.transport)")
     ap.add_argument("--R", type=int, default=4,
                     help="default R for specs that omit it")
     ap.add_argument("--pin-R", type=int, default=None,
@@ -144,8 +161,7 @@ def main():
 
     codec = codec_params = None
     if args.codec != "none":
-        codec = codecs.clamp_R(
-            codecs.build(args.codec, D=cfg.d_model, R=args.R), args.batch)
+        codec = _serving_codec(args.codec, cfg.d_model, args.R, args.batch)
         codec_params = codec.init(jax.random.PRNGKey(7))
     adaptive = isinstance(codec, codecs.AdaptiveC3SL)
     if args.pin_R is not None:

@@ -28,28 +28,30 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import codecs
+from repro import codecs, transport
 from repro.checkpoint import save_checkpoint
 from repro.configs.base import get_config, reduced
-from repro.core import split as split_lib
 from repro.data.pipeline import SyntheticTokenDataset, make_batch_iterator
 from repro.launch import mesh as mesh_lib
 from repro.models import lm as lm_lib
 from repro.optim import adamw, apply_updates, clip_by_global_norm
+from repro.transport import pipeline as pipeline_lib
 
 
 def make_codec(spec: str, D: int, *, R: int = 4, quant=None, unitary=False,
                max_R: int | None = None):
-    """Build (codec, params) from a registry spec string.
+    """Build (codec-or-link, params) from a registry spec string.
 
-    ``spec == "none"`` means no codec at all.  The legacy --R/--quant/
+    ``spec == "none"`` means no codec at all.  A ``... >> bwd:...`` spec
+    builds a per-direction ``repro.transport.SplitLink`` (the backward
+    gradient payload gets its own codec/R).  The legacy --R/--quant/
     --unitary flags act as defaults for spec-omitted fields (explicit spec
-    args win; --quant 8 appends the int8 wire stage).
+    args win; --quant 8 appends the int8 wire stage to plain specs).
     """
     if spec in (None, "", "none"):
         return None, None
-    spec = codecs.apply_quant_bits(spec, quant)
-    codec = codecs.build(spec, D=D, R=R, unitary=unitary)
+    codec = transport.build_link_or_codec(spec, quant_bits=quant, D=D, R=R,
+                                          unitary=unitary)
     if max_R is not None:
         codec = codecs.clamp_R(codec, max_R)
     return codec, codec.init(jax.random.PRNGKey(7))
@@ -66,33 +68,41 @@ def run_standard(args, cfg):
     codec, codec_params = make_codec(args.codec, args.seq * cfg.d_model,
                                      R=args.R, quant=args.quant,
                                      unitary=args.unitary, max_R=args.batch)
+    # make_codec returns a SplitLink only for ' >> bwd:' specs, which are
+    # always asymmetric — mirrored behavior is just the bare-codec path
+    link = codec if isinstance(codec, transport.SplitLink) else None
     adaptive = isinstance(codec, codecs.AdaptiveC3SL)
+    adaptive_bwd = link is not None and link.bwd.adaptive
 
     def make_step(step_codec, step_codec_params):
-        """One jitted train step closing over ONE static codec + params.
-        Under Adaptive-R this is called once per R bucket — each bucket is
-        its own compiled branch, so the host-side R switch never retraces."""
+        """One jitted train step closing over ONE static codec/link + its
+        params.  Under Adaptive-R this is called once per (R_fwd, R_bwd)
+        bucket pair — each pair is its own compiled branch, so host-side
+        schedule switches never retrace.  The probe argument taps the
+        gradient-retrieval SNR (asymmetric links; zero otherwise)."""
         @jax.jit
-        def step_fn(params, opt_state, batch):
-            def loss_fn(p):
+        def step_fn(params, opt_state, batch, probe):
+            def loss_fn(p, pr):
                 return lm_lib.lm_loss(p, batch, cfg, codec=step_codec,
                                       codec_params=step_codec_params,
-                                      with_metrics=True)
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params)
+                                      with_metrics=True, bwd_probe=pr)
+            (loss, metrics), (grads, bwd_snr) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(params, probe)
             grads, gn = clip_by_global_norm(grads, 1.0)
             updates, opt_state2 = opt.update(grads, opt_state, params)
             return (apply_updates(params, updates), opt_state2, loss, gn,
-                    metrics.get("cut_snr"))
+                    metrics.get("cut_snr"), bwd_snr)
         return step_fn
 
-    step_fns = codecs.build_program_table(codec, codec_params, make_step)
+    step_fns = transport.build_link_program_table(codec, codec_params,
+                                                  make_step)
 
     data = SyntheticTokenDataset(cfg.vocab_size, args.seq, seed=args.seed)
     it = make_batch_iterator(data, args.batch)
     t0 = time.time()
     losses = []
-    wire_total = 0
+    wire_fwd_total = wire_bwd_total = 0
+    probe0 = jnp.float32(0.0)
     tokens_per_step = args.batch * args.seq
     # MFU denominator: this host's measured-equivalent peak (CPU has no
     # published peak; report model-FLOPs throughput instead)
@@ -102,28 +112,47 @@ def run_standard(args, cfg):
         if cfg.frontend:
             batch["frontend"] = jnp.zeros(
                 (args.batch, cfg.frontend_seq, cfg.frontend_dim))
-        R = codecs.program_key(codec)
-        params, opt_state, loss, gn, snr = step_fns[R](params, opt_state,
-                                                       batch)
+        key = transport.link_program_key(codec)
+        params, opt_state, loss, gn, snr, bwd_snr = step_fns[key](
+            params, opt_state, batch, probe0)
         losses.append(float(loss))
-        # actual bytes this step put on the boundary, both directions (the
-        # backward payload has the forward's compressed shape — see
-        # tests/test_codecs.py::test_codec_gradient_is_compressed_shape)
-        step_codec = codec.buckets[R] if adaptive else codec
-        step_wire = (2 * step_codec.wire_bytes(args.batch)
-                     if step_codec is not None else 0)
-        wire_total += step_wire
-        if adaptive:
+        # actual bytes this step put on the boundary, per direction: the
+        # backward payload has the forward's compressed shape (mirrored /
+        # bare codecs) or its own channel's wire format (asymmetric links)
+        if codec is None:
+            wf = wb = 0
+        elif link is not None:
+            wf = link.wire_bytes_fwd(args.batch)
+            wb = link.wire_bytes_bwd(args.batch)
+        else:
+            step_codec = codec.buckets[key] if adaptive else codec
+            wf = wb = step_codec.wire_bytes(args.batch)
+        wire_fwd_total += wf
+        wire_bwd_total += wb
+        if link is not None:
+            link.observe(fwd_snr=float(snr) if snr is not None else None,
+                         bwd_snr=(float(bwd_snr) if adaptive_bwd else None))
+        elif adaptive:
             codec.observe(float(snr))      # EMA + ladder walk for NEXT step
         if step % args.log_every == 0 or step == args.steps - 1:
             dt = time.time() - t0
             tps = tokens_per_step * (step + 1) / dt
             sched = ""
             if codec is not None:
-                sched = f" wire {step_wire:,d}B/step"
-                if adaptive:
-                    sched = (f" R={R} snr {float(snr):.1f}dB"
-                             f" (ema {codec.ema_snr:.1f})" + sched)
+                sched = f" wire fwd {wf:,d}B + bwd {wb:,d}B /step"
+                if link is not None:
+                    # static channels keep a constant R; adaptive ones show
+                    # the bucket that SERVED this step (the dispatch key)
+                    rf = key[0] if key[0] is not None \
+                        else getattr(link.fwd.codec, "R", 1)
+                    rb = key[1] if key[1] is not None \
+                        else getattr(link.bwd.codec, "R", 1)
+                    sched = (f" R={rf}>>bwd:{rb}"
+                             f" snr {float(snr):.1f}dB"
+                             f" grad-snr {float(bwd_snr):.1f}dB" + sched)
+                elif adaptive:
+                    sched = (f" R={key} snr {float(snr):.1f}dB "
+                             f"(ema {codec.ema_snr:.1f})" + sched)
                 elif snr is not None:
                     sched = f" snr {float(snr):.1f}dB" + sched
             print(f"step {step:5d} loss {float(loss):.4f} gnorm {float(gn):.3f}"
@@ -131,8 +160,10 @@ def run_standard(args, cfg):
                   f"{step_flops*(step+1)/dt/1e9:.1f} "
                   f"GFLOP/s model-flops ({dt:.1f}s)", flush=True)
     if codec is not None:
-        print(f"boundary traffic: {wire_total:,d} B total over {args.steps} "
-              f"steps (fwd+bwd)", flush=True)
+        print(f"boundary traffic: {wire_fwd_total:,d} B fwd + "
+              f"{wire_bwd_total:,d} B bwd = "
+              f"{wire_fwd_total + wire_bwd_total:,d} B total over "
+              f"{args.steps} steps", flush=True)
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, args.steps, {"params": params},
                         {"arch": cfg.name, "loss": losses[-1]})
@@ -156,10 +187,19 @@ def run_pipeline(args, cfg):
     if codec is None:
         codec = codecs.build("identity", D=args.seq * cfg.d_model)
         codec_params = {}
-    if isinstance(codec, codecs.AdaptiveC3SL):
-        # the pipeline's scan/shard_map closes over ONE codec — run the
-        # adaptive wrapper's current bucket statically rather than silently
-        # baking whatever R was current at trace time
+    if isinstance(codec, transport.SplitLink):
+        if codec.fwd.adaptive or codec.bwd.adaptive:
+            # the pipeline's scan/shard_map closes over ONE codec pair —
+            # pin both channels at their current buckets rather than
+            # silently baking whatever was current at trace time
+            print(f"[pipeline] adaptive link pinned at "
+                  f"R={codec.fwd.current_R}>>bwd:{codec.bwd.current_R} "
+                  f"(per-step adaptation needs the single-program path)",
+                  flush=True)
+            codec_params = transport.slice_link_params(codec, codec_params)
+            codec = transport.pin_link(codec)
+    elif isinstance(codec, codecs.AdaptiveC3SL):
+        # same contract for a bare adaptive codec (PR-4 behavior)
         print(f"[pipeline] adaptive codec pinned to its current bucket "
               f"R={codec.current_R} (per-step adaptation needs the "
               f"single-program path)", flush=True)
@@ -173,10 +213,10 @@ def run_pipeline(args, cfg):
         "codec": codec_params,
     }
     embed_fn, stage_fn, head_loss_fn = lm_lib.make_pipeline_fns(cfg)
-    loss_fn = split_lib.make_pod_pipeline_loss_fn(
+    loss_fn = pipeline_lib.make_pod_pipeline_loss_fn(
         lambda p, x: embed_fn(p, x), stage_fn,
         lambda p, h, y: head_loss_fn(p, h, y), codec, mesh,
-        num_microbatches=args.microbatches)
+        num_microbatches=args.microbatches, async_depth=args.async_depth)
 
     opt = adamw(args.lr)
     opt_state = opt.init(params)
@@ -192,7 +232,7 @@ def run_pipeline(args, cfg):
     it = make_batch_iterator(data, args.batch)
     losses = []
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_lib.set_mesh(mesh):
         for step in range(args.steps):
             b = next(it)
             batch = {"x": b["tokens"], "y": b["labels"]}
@@ -201,6 +241,10 @@ def run_pipeline(args, cfg):
             if step % args.log_every == 0 or step == args.steps - 1:
                 print(f"[pipeline] step {step:5d} loss {float(loss):.4f} "
                       f"({time.time()-t0:.1f}s)", flush=True)
+    wf = transport.split_comm_bytes(codec, mb, directions=1)
+    wb = transport.split_comm_bytes(codec, mb) - wf
+    print(f"[pipeline] channel: async_depth={args.async_depth}, per-microbatch "
+          f"wire fwd {wf:,d} B + bwd {wb:,d} B", flush=True)
     return losses
 
 
@@ -214,9 +258,11 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--codec", default="none",
-                    help="registry spec, e.g. 'c3sl:R=4|int8' or "
-                         "'adaptive:c3sl:R=16,min_R=2,target_snr=-6|int8' "
-                         "(see repro.codecs)")
+                    help="registry spec, e.g. 'c3sl:R=4|int8', "
+                         "'adaptive:c3sl:R=16,min_R=2,target_snr=-6|int8', "
+                         "or a per-direction link "
+                         "'c3sl:R=8|int8 >> bwd:c3sl:R=4|int8' "
+                         "(see repro.codecs / repro.transport)")
     ap.add_argument("--R", type=int, default=4,
                     help="default R for specs that omit it")
     ap.add_argument("--quant", type=int, default=None,
@@ -224,6 +270,11 @@ def main():
     ap.add_argument("--unitary", action="store_true")
     ap.add_argument("--pipeline", action="store_true")
     ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--async-depth", type=int, default=1,
+                    help="in-flight payload buffers on the pod channel: 1 = "
+                         "synchronous (send serializes with the next "
+                         "microbatch), 2 = the ppermute overlaps the next "
+                         "front pass (one extra bubble step)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()

@@ -103,13 +103,19 @@ def _split_stacked(stacked, n_front: int):
 
 def lm_forward(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None,
                sliding_window=None, remat=True, last_only=False,
-               with_metrics=False):
+               with_metrics=False, bwd_probe=None):
     """Returns (logits (B,S,V), aux_loss) — or (logits, aux_loss, metrics)
     with ``with_metrics=True``, where metrics carries ``cut_snr`` (the
     retrieval SNR in dB at the cut layer, the Adaptive-R controller's signal;
     absent without a codec).  last_only=True slices the final position BEFORE
     the head matmul (serving prefill: never materializes the (B, S, V)
-    logits)."""
+    logits).
+
+    ``codec`` may be a static codec or a static ``repro.transport.SplitLink``
+    (per-direction cut-layer codecs); for an asymmetric link, ``bwd_probe``
+    is the gradient-SNR tap — differentiate the loss w.r.t. it and the
+    resulting "gradient" is the measured server→client gradient-retrieval
+    SNR in dB (see ``repro.transport.channel.grad_roundtrip``)."""
     sliding_window = sliding_window if sliding_window is not None else cfg.sliding_window
     memory = None
     if cfg.is_encdec:
@@ -133,11 +139,13 @@ def lm_forward(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None
         h, a1 = run(front, h=h)
         B, S, d = h.shape
         Zf = h.reshape(B, S * d)
-        payload = codec.encode(codec_params, Zf)
-        Zhat = codec.decode(codec_params, payload)
+        from repro.transport.link import roundtrip
         if with_metrics:
-            from repro.core import hrr
-            metrics["cut_snr"] = hrr.retrieval_snr(Zf, Zhat)
+            Zhat, snr = roundtrip(codec, codec_params, Zf, with_snr=True,
+                                  bwd_probe=bwd_probe)
+            metrics["cut_snr"] = snr
+        else:
+            Zhat = roundtrip(codec, codec_params, Zf, bwd_probe=bwd_probe)
         h = Zhat.reshape(B, S, d)
         h, a2 = run(back, h=h)
         aux = aux + a1 + a2
@@ -152,15 +160,18 @@ def lm_forward(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None
 
 
 def lm_loss(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None,
-            sliding_window=None, remat=True, with_metrics=False):
+            sliding_window=None, remat=True, with_metrics=False,
+            bwd_probe=None):
     """Mean next-token CE (+ MoE aux).  labels == -1 are masked (vlm pads
     frontend positions).  ``with_metrics=True`` returns (loss, metrics) with
     the cut-layer ``cut_snr`` (see lm_forward) — the signal the Adaptive-R
-    codec scheduler consumes in repro.launch.train."""
+    codec scheduler consumes in repro.launch.train.  ``codec`` may be a
+    static ``SplitLink``; ``bwd_probe`` taps the gradient-retrieval SNR
+    (see lm_forward)."""
     out = lm_forward(params, batch, cfg, codec=codec,
                      codec_params=codec_params,
                      sliding_window=sliding_window, remat=remat,
-                     with_metrics=with_metrics)
+                     with_metrics=with_metrics, bwd_probe=bwd_probe)
     logits, aux = out[0], out[1]
     labels = batch["labels"]
     if cfg.frontend and not cfg.is_encdec:

@@ -58,6 +58,18 @@ prefill payloads accounted at their true row count) and ``r_served``
 counts the served schedule per bucket; feed the controller between dispatches via
 ``observe_snr`` or pin it (``engine.codec.pin(R)``).
 
+Per-direction link specs (``codec="c3sl:R=8|int8 >> bwd:c3sl:R=4"``, see
+``repro.transport``) resolve to the FORWARD channel — no gradient crosses
+the cut at inference — with the per-direction stats keys
+(``wire_bytes_fwd`` == ``payload_wire_bytes``, ``wire_bytes_bwd`` == 0)
+kept aligned with the train-side protocol.
+
+Paged-pool utilization: when the page pool is starving the head of the
+queue, decode windows exit device-side the moment ANY slot finishes
+(``stats["eos_early_exits"]``), so the boundary frees that slot's page
+reservation immediately instead of holding it for the rest of the window;
+``pool_accounting()`` exposes the free/in-use split the tests pin.
+
 The C3-SL codec applies to each step's cut-layer features across the
 active slots; on the chunked path the features are grouped PER POSITION
 (`sequence_group_encode` layout), the same group shape as the decode
@@ -115,18 +127,40 @@ class BatchedEngine:
                  chunk_size: int = 16, sync_every: int = 8,
                  kv_layout: str = "contiguous", page_size: int = 16,
                  num_pages: int | None = None, interleave: int = 0):
-        # `codec` may be a ready codec object or a registry spec string
-        # (e.g. "c3sl:R=4|int8"); specs are built against the decode cut
+        # `codec` may be a ready codec object, a registry spec string
+        # (e.g. "c3sl:R=4|int8"), or a per-direction link spec/SplitLink
+        # ("c3sl:R=8|int8 >> bwd:c3sl:R=4").  Serving is forward-only —
+        # no gradient crosses the cut — so the engine compresses with the
+        # link's FORWARD channel and accounts the backward direction as 0
+        # (stats["wire_bytes_bwd"]).  Specs are built against the decode cut
         # layer (D = d_model) and clamped to the slot count.  "none" means
         # codec off, matching the launch CLIs.
+        from repro import transport
+        self.link_spec = None
         if isinstance(codec, str):
             if codec == "none":
                 codec = codec_params = None
             else:
+                if transport.is_link_spec(codec):
+                    link = transport.build_link(codec, D=cfg.d_model)
+                    self.link_spec = link.spec()
+                    if codec_params is not None:
+                        # caller-supplied params follow the LINK's tree;
+                        # the engine serves the forward channel only
+                        codec_params = link.fwd_params(codec_params)
+                    codec = link.fwd.codec
                 codec = codecs_lib.clamp_R(
-                    codecs_lib.build(codec, D=cfg.d_model), num_slots)
+                    codecs_lib.build(codec, D=cfg.d_model)
+                    if isinstance(codec, str) else codec, num_slots)
                 if codec_params is None:
                     codec_params = codec.init(jax.random.PRNGKey(seed))
+        elif isinstance(codec, transport.SplitLink):
+            # link OBJECT: caller owns clamping/init (as for codec objects);
+            # slice the forward channel's params out of the link tree
+            self.link_spec = codec.spec()
+            if codec_params is not None:
+                codec_params = codec.fwd_params(codec_params)
+            codec = codec.fwd.codec
         if prefill_mode not in ("chunked", "decode"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r} "
                              "(expected 'chunked' | 'decode')")
@@ -190,9 +224,17 @@ class BatchedEngine:
         self._dirty = True            # force the first boundary to run
         # payload_wire_bytes accumulates the ACTUAL cut-layer bytes shipped
         # (per executed decode step / prefill chunk, scale+mask bytes
-        # included) — under an Adaptive-R codec this follows the R schedule
+        # included) — under an Adaptive-R codec this follows the R schedule.
+        # Per-direction accounting (repro.transport): serving is forward-
+        # only, so wire_bytes_fwd == payload_wire_bytes and wire_bytes_bwd
+        # stays 0 — the keys exist so engine stats line up with the train
+        # logs' fwd/bwd protocol.  eos_early_exits counts decode windows cut
+        # short because a slot finished while the page pool was starved
+        # (the boundary then frees its pages immediately instead of holding
+        # them for the rest of the window).
         self.stats = {"dispatches": 0, "decode_steps": 0, "prefill_chunks": 0,
-                      "payload_wire_bytes": 0}
+                      "payload_wire_bytes": 0, "wire_bytes_fwd": 0,
+                      "wire_bytes_bwd": 0, "eos_early_exits": 0}
         # the served R schedule under an adaptive codec, as {R: count} with
         # one count per EXECUTED decode step + one per prefill chunk, so
         # total() == decode_steps + prefill_chunks (not dispatches — a
@@ -302,13 +344,21 @@ class BatchedEngine:
             return cache, {**state, "pos": pos, "last_tok": nxt, "done": done,
                            "out_len": out_len, "out_buf": out_buf}
 
-        def window_fn(params, cache, state, keys, n):
+        def window_fn(params, cache, state, keys, n, stop_on_done):
             """Up to n (<= W) fused decode steps in ONE dispatch; exits
             device-side as soon as no slot is live, so a drained batch
-            pays nothing for the rest of its window."""
+            pays nothing for the rest of its window.  ``stop_on_done``
+            (traced bool — no retrace when it flips) additionally exits the
+            moment ANY slot finishes: the host sets it while the page pool
+            is starving a queued request, so the finished slot's pages are
+            freed at the next boundary instead of being held for the rest
+            of the window (boundaries retire every done slot, so entry
+            state always has done == False)."""
             def cond(carry):
                 i, _, state = carry
-                return (i < n) & jnp.any(state["active"] & ~state["done"])
+                live = jnp.any(state["active"] & ~state["done"])
+                eos_cut = stop_on_done & jnp.any(state["done"])
+                return (i < n) & live & ~eos_cut
 
             def body(carry):
                 i, cache, state = carry
@@ -371,6 +421,13 @@ class BatchedEngine:
         monitor, or a pinned R."""
         if self._adaptive:
             self.codec.observe(snr_db, loss_slack)
+
+    def _account_fwd_bytes(self, nbytes: int):
+        """The ONE place cut-layer bytes enter the stats: serving ships the
+        forward direction only, so the legacy total and the per-direction
+        fwd counter advance together by definition."""
+        self.stats["payload_wire_bytes"] += nbytes
+        self.stats["wire_bytes_fwd"] += nbytes
 
     def _step_wire_bytes(self) -> int:
         """Cut-layer bytes ONE decode step ships across the active batch."""
@@ -468,17 +525,47 @@ class BatchedEngine:
         keys = jax.random.split(self.rng, self._window_len + 1)
         self.rng = keys[0]
         bucket = self._bucket()
+        stop_on_done = self._pool_starved()
         i, self.cache, self.state = self._programs[bucket]["window"](
-            self.params, self.cache, self.state, keys[1:], jnp.int32(n))
+            self.params, self.cache, self.state, keys[1:], jnp.int32(n),
+            jnp.bool_(stop_on_done))
         self.stats["dispatches"] += 1
         executed = int(i)
         self.stats["decode_steps"] += executed
-        self.stats["payload_wire_bytes"] += executed * self._step_wire_bytes()
+        self._account_fwd_bytes(executed * self._step_wire_bytes())
+        if stop_on_done and executed < n and bool(np.any(np.asarray(
+                jax.device_get(self.state["active"]))
+                & ~np.asarray(jax.device_get(self.state["done"])))):
+            # a slot's EOS cut the window short while others were still
+            # live; the boundary that follows frees its pages immediately
+            # (instead of after n - executed more steps) so the starved
+            # head-of-queue request can admit.  The extra host sync only
+            # happens on the already-rare starved-pool early exit.
+            self.stats["eos_early_exits"] += 1
         if bucket is not None:
             self.r_served[bucket] += executed
         if executed:
             self._dirty = True
         return executed
+
+    def _pool_starved(self) -> bool:
+        """True when the head-of-queue request is blocked on pages — the
+        condition under which a mid-window EOS is worth exiting early for."""
+        if self.paged is None or not self._linear_backed or not self.queue:
+            return False
+        head = self.queue[0]
+        need = self.paged.pages_for(len(head.prompt) + head.max_new_tokens)
+        return need > self.allocator.free_pages
+
+    def pool_accounting(self) -> dict:
+        """Page-pool occupancy snapshot: every page is either on the free
+        list or owned by exactly one slot (the invariant the EOS-free test
+        pins).  Zeros for the contiguous layout."""
+        if self.paged is None:
+            return {"free": 0, "in_use": 0, "total": 0}
+        in_use = sum(len(s.pages) for s in self.slots)
+        return {"free": self.allocator.free_pages, "in_use": in_use,
+                "total": self.paged.num_pages}
 
     def _pending_prefill(self) -> bool:
         return any(s.req is not None and s.ingested < len(s.req.prompt)
@@ -511,7 +598,7 @@ class BatchedEngine:
             jnp.asarray(valid), jnp.asarray(completes), key)
         self.stats["dispatches"] += 1
         self.stats["prefill_chunks"] += 1
-        self.stats["payload_wire_bytes"] += self._chunk_wire_bytes()
+        self._account_fwd_bytes(self._chunk_wire_bytes())
         if bucket is not None:
             self.r_served[bucket] += 1
         if completes.any():
@@ -659,7 +746,7 @@ class BatchedEngine:
         # one fused batch step per dispatch — same unit as the chunked
         # path's decode_steps (NOT per-slot generated tokens)
         self.stats["decode_steps"] += 1
-        self.stats["payload_wire_bytes"] += self._step_wire_bytes()
+        self._account_fwd_bytes(self._step_wire_bytes())
         if bucket is not None:
             self.r_served[bucket] += 1
         nxt = np.asarray(nxt)

@@ -1,0 +1,48 @@
+"""repro.transport — the directional cut-layer transport subsystem.
+
+The split-learning exchange has two directions with different payloads:
+client→server activations (``fwd``) and server→client gradients (``bwd``).
+This package models each as a :class:`Channel` (codec + adaptive controller
++ exact wire accounting) and composes them into a :class:`SplitLink`,
+buildable from a spec string::
+
+    build_link("c3sl:R=16|int8 >> bwd:c3sl:R=8", D=4096)
+
+No ``bwd:`` stage → a MIRRORED link: both directions share one codec, the
+gradient payload has the forward's compressed shape, and every call site
+behaves bit-identically to the pre-transport shared-codec path.  An explicit
+``bwd:`` codec inserts a custom-VJP seam on the payload that re-compresses
+the gradient with the backward channel's own codec/R and measures the
+gradient-retrieval SNR in the same backward pass (probe cotangent) — the
+feedback for an independent backward ``AdaptiveC3SL`` controller.
+
+Loss builders:
+
+* :func:`make_split_loss_fn` — logical split (front/back in one program).
+* :func:`make_pod_pipeline_loss_fn` — the 2-stage pod pipeline, now with an
+  asynchronous double-buffered channel (``async_depth``): the ppermute of
+  microbatch t's payload overlaps the front pass of t+1; depth=1 is the
+  synchronous schedule bit-identically.
+
+``repro.core.split`` remains a thin re-export shim for pre-transport
+imports (same pattern PR 1 used for ``repro.core.codec``).
+"""
+from repro.transport.channel import Channel, grad_roundtrip
+from repro.transport.link import (SplitLink, as_link, build_link,
+                                  build_link_or_codec,
+                                  build_link_program_table, is_link_spec,
+                                  link_program_key, parse_link_spec, pin_link,
+                                  roundtrip, slice_link_params)
+from repro.transport.pipeline import make_pod_pipeline_loss_fn
+from repro.transport.split import (apply_codec, make_split_loss_fn,
+                                   split_comm_bytes)
+
+__all__ = [
+    "Channel", "SplitLink", "grad_roundtrip", "roundtrip",
+    "as_link", "build_link", "build_link_or_codec", "is_link_spec",
+    "parse_link_spec",
+    "build_link_program_table", "link_program_key", "pin_link",
+    "slice_link_params",
+    "apply_codec", "make_split_loss_fn", "split_comm_bytes",
+    "make_pod_pipeline_loss_fn",
+]

@@ -1,0 +1,135 @@
+"""One direction of the split-learning wire: codec + controller + accounting.
+
+A ``Channel`` owns everything one direction of the cut-layer exchange needs:
+
+* the codec that re-represents the payload on the wire (a static codec or
+  an ``AdaptiveC3SL`` wrapper scheduling R from measured SNR),
+* the controller feedback entry point (``observe``) when it is adaptive,
+* exact wire-byte accounting for an already-shaped payload
+  (``wire_bytes`` — scale/mask bytes of chained wire stages included).
+
+Two channels compose into a ``SplitLink`` (repro.transport.link): ``fwd``
+carries the client→server activation payload, ``bwd`` the server→client
+gradient payload.  The backward channel is realized as a custom-VJP seam
+(:func:`grad_roundtrip`): identity in the forward pass, and in the backward
+pass the cotangent — the gradient payload that would cross the wire — is
+round-tripped through the backward codec (its own R / wire stages), with the
+measured gradient-retrieval SNR surfaced through a probe argument's
+cotangent so a second deadband controller can schedule the backward R
+without a second pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.codecs import AdaptiveC3SL, payload_wire_bytes, program_key
+from repro.core import hrr
+
+
+@functools.lru_cache(maxsize=None)
+def _grad_seam(bwd_codec):
+    """The backward channel's custom-VJP seam, specialized to ONE static
+    codec (codecs are frozen dataclasses, so the cache key is the codec).
+
+    Forward: identity on the payload.  Backward: the cotangent ``g`` (the
+    gradient payload crossing server→client) is grouped row-wise and
+    round-tripped through ``bwd_codec`` — its own R and wire stages — and
+    the probe argument's cotangent carries ``retrieval_snr(g, ghat)``, the
+    gradient-side controller's feedback signal.
+    """
+
+    @jax.custom_vjp
+    def seam(payload, bwd_params, probe):
+        del bwd_params, probe
+        return payload
+
+    def fwd(payload, bwd_params, probe):
+        del probe
+        return payload, (bwd_params,)
+
+    def bwd(res, g):
+        (bwd_params,) = res
+        D = g.shape[-1]
+        g2 = g.reshape(-1, D)
+        ghat = bwd_codec.decode(bwd_params, bwd_codec.encode(bwd_params, g2))
+        snr = hrr.retrieval_snr(g2, ghat)
+        zeros = jax.tree.map(jnp.zeros_like, bwd_params)
+        return ghat.reshape(g.shape), zeros, snr
+
+    seam.defvjp(fwd, bwd)
+    return seam
+
+
+def grad_roundtrip(bwd_codec, payload, bwd_params, probe=None):
+    """Identity on ``payload``; compresses its GRADIENT through ``bwd_codec``.
+
+    ``probe`` (scalar f32) is a gradient tap: differentiate the surrounding
+    loss w.r.t. it (``jax.grad(..., argnums=...)``) and the "gradient" you
+    get back is the measured gradient-retrieval SNR in dB — the backward
+    ``AdaptiveC3SL`` controller's feedback, measured in the same backward
+    pass that ships the payload.  ``bwd_codec`` must be a STATIC codec (an
+    adaptive wrapper's bucket), same jit-safety contract as everywhere else.
+    """
+    if probe is None:
+        probe = jnp.float32(0.0)
+    return _grad_seam(bwd_codec)(payload, bwd_params, probe)
+
+
+@dataclasses.dataclass
+class Channel:
+    """One direction of the split link: a codec plus its schedule state.
+
+    ``codec`` is either a static codec (possibly a ``Chain``) or an
+    ``AdaptiveC3SL`` wrapper; the channel is the one place that knows which,
+    so callers talk directions ("the forward channel's current bucket")
+    instead of isinstance checks.
+    """
+    direction: str                 # "fwd" | "bwd" (display/accounting tag)
+    codec: object
+
+    @property
+    def adaptive(self) -> bool:
+        return isinstance(self.codec, AdaptiveC3SL)
+
+    @property
+    def current(self):
+        """The static codec serving the next dispatch (the adaptive
+        wrapper's current bucket, or the codec itself)."""
+        return self.codec.current if self.adaptive else self.codec
+
+    @property
+    def current_R(self) -> int:
+        return getattr(self.current, "R", 1)
+
+    def program_key(self):
+        """Host-side compiled-program key: current bucket R, None if static."""
+        return program_key(self.codec)
+
+    def observe(self, snr_db=None, loss_slack=None) -> int:
+        """Feed this direction's controller one step's signals (no-op for a
+        static codec); returns the R serving the NEXT dispatch."""
+        if self.adaptive:
+            return self.codec.observe(snr_db, loss_slack)
+        return self.current_R
+
+    def params_for(self, params, key=None):
+        """Slice one bucket's params (identity for a static codec)."""
+        if self.adaptive:
+            return self.codec.params_for(params, key)
+        return params
+
+    def wire_bytes(self, rows: int) -> int:
+        """Exact bytes this direction ships for ``rows`` feature rows —
+        the current bucket's payload shape fed to its last wire stage."""
+        c = self.current
+        return payload_wire_bytes(c, c.payload_shape(rows))
+
+    def spec(self) -> str:
+        return self.codec.spec()
+
+    def __repr__(self) -> str:
+        return f"Channel({self.direction!r}, {self.spec()!r})"

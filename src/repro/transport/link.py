@@ -1,0 +1,330 @@
+"""SplitLink: the bidirectional cut-layer exchange as a pair of Channels.
+
+Spec grammar (extends the codec grammar in ``repro.codecs``)::
+
+    LINK := CODEC_SPEC [" >> bwd:" CODEC_SPEC]
+
+The part before ``>>`` is the forward (client→server activation) codec; the
+``bwd:``-prefixed part is the backward (server→client gradient) codec.  With
+no ``bwd:`` stage the link is MIRRORED: both directions share ONE codec and
+the backward payload simply has the forward's compressed shape — exactly the
+shared-codec behavior every pre-transport call site had, bit-identical
+(pinned in tests/test_transport.py).
+
+    build_link("c3sl:R=16|int8 >> bwd:c3sl:R=8", D=4096)
+    build_link("adaptive:c3sl:R=8,min_R=2|int8 >> "
+               "bwd:adaptive:c3sl:R=4,min_R=2|int8", D=256)
+
+An asymmetric link inserts :func:`repro.transport.channel.grad_roundtrip` on
+the payload: the forward pass is unchanged (the seam is identity), and the
+backward pass round-trips the gradient payload — shape ``(B/R_fwd, D)`` —
+through the backward codec, so the wire carries ``(B/(R_fwd·R_bwd), D)``
+gradient rows in the backward codec's wire format.  The gradient-retrieval
+SNR is measured in the same backward pass and surfaced through a probe
+cotangent, feeding a SECOND deadband controller (the backward channel's own
+``AdaptiveC3SL``) that schedules R_bwd independently of R_fwd.
+
+jit-safety is the same contract as ``repro.codecs.adaptive``: adaptive
+channels are resolved to static bucket pairs via
+:func:`build_link_program_table` — one compiled program per (R_fwd, R_bwd)
+pair, switched host-side, zero recompiles on schedule changes.
+"""
+from __future__ import annotations
+
+from repro import codecs
+from repro.codecs import AdaptiveC3SL, clamp_R
+from repro.core import hrr
+from repro.transport.channel import Channel, grad_roundtrip
+
+LINK_SEP = ">>"
+BWD_PREFIX = "bwd:"
+
+
+def is_link_spec(spec: str) -> bool:
+    """True for per-direction specs (``... >> bwd:...``)."""
+    return isinstance(spec, str) and LINK_SEP in spec
+
+
+def parse_link_spec(spec: str) -> tuple[str, str | None]:
+    """Split a link spec into (fwd_spec, bwd_spec-or-None)."""
+    if not is_link_spec(spec):
+        return spec.strip(), None
+    fwd_text, sep, bwd_text = spec.partition(LINK_SEP)
+    bwd_text = bwd_text.strip()
+    if LINK_SEP in bwd_text:
+        raise ValueError(f"more than one '{LINK_SEP}' in link spec {spec!r}")
+    if not bwd_text.startswith(BWD_PREFIX):
+        raise ValueError(
+            f"the stage after '{LINK_SEP}' must be tagged '{BWD_PREFIX}', "
+            f"got {bwd_text!r} in {spec!r}")
+    bwd_spec = bwd_text[len(BWD_PREFIX):].strip()
+    if not bwd_spec:
+        raise ValueError(f"empty backward codec spec in {spec!r}")
+    return fwd_text.strip(), bwd_spec
+
+
+def _has_trainable_params(codec) -> bool:
+    """True when any stage of ``codec`` declares ``trainable = True``
+    (dense/bnpp autoencoders), unwrapping Chain transforms and adaptive
+    buckets.  C3-SL's key tables are fixed (stop_gradient), so c3sl chains
+    report False."""
+    if isinstance(codec, AdaptiveC3SL):
+        return any(_has_trainable_params(b) for b in codec.buckets.values())
+    inner = getattr(codec, "transform", None)
+    if inner is not None:                      # Chain: the transform stage
+        return _has_trainable_params(inner)
+    return bool(getattr(codec, "trainable", False))
+
+
+class SplitLink:
+    """(fwd: Channel, bwd: Channel) — the cut-layer exchange, both ways.
+
+    ``bwd_codec=None`` builds a MIRRORED link: the backward channel aliases
+    the forward codec (one codec object, one params tree, the pre-transport
+    behavior).  An explicit backward codec makes the link asymmetric: its
+    params tree becomes ``{"fwd": ..., "bwd": ...}`` and the gradient seam
+    is inserted at the payload.
+    """
+
+    def __init__(self, fwd_codec, bwd_codec=None):
+        if bwd_codec is not None:
+            for tag, c in (("fwd", fwd_codec), ("bwd", bwd_codec)):
+                if getattr(c, "feature_layout", "flat") != "flat":
+                    raise ValueError(
+                        f"per-direction links support flat codecs only; the "
+                        f"{tag} codec has feature_layout="
+                        f"{getattr(c, 'feature_layout', None)!r}")
+            if _has_trainable_params(bwd_codec):
+                # the gradient seam applies the bwd codec INSIDE a VJP rule
+                # and returns zero cotangents for its params — a trainable
+                # bwd codec would silently stay at init while corrupting
+                # every gradient.  Fail loudly instead.
+                raise ValueError(
+                    f"the backward channel cannot train codec params "
+                    f"({bwd_codec.spec()}): the gradient seam runs in the "
+                    f"backward pass, where codec params receive no "
+                    f"gradient — use a fixed-key codec (c3sl/identity) or "
+                    f"wire stages on the bwd: side")
+        self.fwd = Channel("fwd", fwd_codec)
+        self.bwd = Channel("bwd", bwd_codec if bwd_codec is not None
+                           else fwd_codec)
+        self.mirrored = bwd_codec is None
+
+    # ---- codec-protocol-ish surface (forward channel's view) -------------
+
+    @property
+    def feature_layout(self) -> str:
+        return getattr(self.fwd.codec, "feature_layout", "flat")
+
+    @property
+    def D(self) -> int:
+        return self.fwd.codec.D
+
+    def init(self, rng=None):
+        """Codec params.  Mirrored: exactly the forward codec's params (the
+        pre-transport tree, so existing checkpoints/tests line up).
+        Asymmetric: ``{"fwd": ..., "bwd": ...}``, both from the SAME rng so
+        equal fwd/bwd specs get bit-identical key tables."""
+        if self.mirrored:
+            return self.fwd.codec.init(rng)
+        return {"fwd": self.fwd.codec.init(rng),
+                "bwd": self.bwd.codec.init(rng)}
+
+    def fwd_params(self, params):
+        return params if self.mirrored else params["fwd"]
+
+    def bwd_params(self, params):
+        return params if self.mirrored else params["bwd"]
+
+    def spec(self) -> str:
+        if self.mirrored:
+            return self.fwd.spec()
+        return f"{self.fwd.spec()} {LINK_SEP} {BWD_PREFIX}{self.bwd.spec()}"
+
+    def __repr__(self) -> str:
+        return f"SplitLink({self.spec()!r}{', mirrored' if self.mirrored else ''})"
+
+    # ---- controllers -----------------------------------------------------
+
+    def observe(self, fwd_snr=None, bwd_snr=None, loss_slack=None):
+        """Feed both direction controllers one step's signals; returns the
+        (R_fwd, R_bwd) pair serving the NEXT dispatch.  Mirrored links have
+        ONE controller — ``fwd_snr`` drives it and ``bwd_snr`` is ignored."""
+        rf = self.fwd.observe(fwd_snr, loss_slack)
+        if self.mirrored:
+            return rf, rf
+        return rf, self.bwd.observe(bwd_snr, loss_slack)
+
+    # ---- accounting ------------------------------------------------------
+
+    def wire_bytes_fwd(self, B: int) -> int:
+        """Bytes the forward payload ships for a B-row cut activation."""
+        return self.fwd.wire_bytes(B)
+
+    def wire_bytes_bwd(self, B: int) -> int:
+        """Bytes the backward (gradient) payload ships.  Mirrored: the
+        gradient has the forward's compressed shape (the adjoint of a linear
+        codec), so it equals the forward bytes.  Asymmetric: the gradient
+        payload's ``B/R_fwd`` rows re-grouped through the backward codec."""
+        if self.mirrored:
+            return self.fwd.wire_bytes(B)
+        rows = B // self.fwd.current_R
+        return self.bwd.wire_bytes(rows)
+
+    def total_wire_bytes(self, B: int) -> int:
+        return self.wire_bytes_fwd(B) + self.wire_bytes_bwd(B)
+
+    # ---- clamp_R integration --------------------------------------------
+
+    def with_max_R(self, max_R: int) -> "SplitLink":
+        """``clamp_R`` entry point: clamp the forward channel to the batch,
+        then the backward channel to the SMALLEST gradient-payload row count
+        any forward bucket can produce (``max_R / max_R_fwd`` rows per
+        forward group) — so no (R_fwd, R_bwd) pair can hit a divisibility
+        error mid-schedule."""
+        f2 = clamp_R(self.fwd.codec, max_R)
+        if self.mirrored:
+            return SplitLink(f2)
+        max_R_f = getattr(f2, "max_R", getattr(f2, "R", 1))
+        b2 = clamp_R(self.bwd.codec, max(max_R // max(max_R_f, 1), 1))
+        return SplitLink(f2, b2)
+
+
+def as_link(codec_or_link) -> SplitLink:
+    """Wrap a bare codec into a mirrored link (links pass through)."""
+    if isinstance(codec_or_link, SplitLink):
+        return codec_or_link
+    return SplitLink(codec_or_link)
+
+
+def build_link(spec: str, /, **defaults) -> SplitLink:
+    """Build a ``SplitLink`` from a link spec (both halves share the keyword
+    ``defaults``, e.g. the runtime ``D``)."""
+    fwd_spec, bwd_spec = parse_link_spec(spec)
+    fwd_codec = codecs.build(fwd_spec, **defaults)
+    if bwd_spec is None:
+        return SplitLink(fwd_codec)
+    return SplitLink(fwd_codec, codecs.build(bwd_spec, **defaults))
+
+
+def build_link_or_codec(spec: str, /, *, quant_bits=None, **defaults):
+    """The one spec dispatcher the CLIs share: a ``... >> bwd:...`` spec
+    builds a ``SplitLink``, anything else a plain codec through the
+    registry.  The legacy ``quant_bits=8`` flag appends the int8 wire stage
+    to plain specs only — a link spec must name its wire stages per
+    direction, so combining the two is rejected with one canonical error.
+    """
+    if is_link_spec(spec):
+        if quant_bits is not None:
+            raise ValueError(
+                "the quant flag composes only with single-codec specs; put "
+                "the wire stage in the link spec itself, e.g. "
+                "'c3sl:R=8|int8 >> bwd:c3sl:R=4|int8'")
+        return build_link(spec, **defaults)
+    return codecs.build(codecs.apply_quant_bits(spec, quant_bits), **defaults)
+
+
+# --------------------------------------------------------------------------
+# the round-trip seam (shared by the loss builders and repro.models.lm)
+# --------------------------------------------------------------------------
+
+def roundtrip(codec, params, Zf, *, with_snr: bool = False, bwd_probe=None):
+    """Round-trip flat (B, D) cut features through a STATIC codec or a
+    STATIC ``SplitLink`` (adaptive channels must already be resolved to
+    buckets — same contract as every jitted call site).
+
+    Bare codecs and mirrored links take the exact pre-transport path
+    (encode → decode); an asymmetric link inserts the gradient seam on the
+    payload, so the forward numbers are IDENTICAL to mirrored and only the
+    backward pass changes.  ``with_snr`` adds the forward retrieval SNR;
+    ``bwd_probe`` is the gradient-SNR tap (see ``grad_roundtrip``).
+    """
+    if isinstance(codec, SplitLink):
+        fwd_c = codec.fwd.codec
+        fwd_p = codec.fwd_params(params)
+        payload = fwd_c.encode(fwd_p, Zf)
+        if not codec.mirrored:
+            payload = grad_roundtrip(codec.bwd.codec, payload,
+                                     codec.bwd_params(params), bwd_probe)
+        Zhat = fwd_c.decode(fwd_p, payload)
+    else:
+        payload = codec.encode(params, Zf)
+        Zhat = codec.decode(params, payload)
+    if with_snr:
+        return Zhat, hrr.retrieval_snr(Zf, Zhat)
+    return Zhat
+
+
+# --------------------------------------------------------------------------
+# per-direction program tables (zero-recompile schedule switching)
+# --------------------------------------------------------------------------
+
+def link_program_key(codec_or_link):
+    """Host-side dispatch key for the next compiled program.  Links key by
+    the (fwd, bwd) bucket pair — ``(R_fwd, None)`` when mirrored or the
+    backward channel is static; bare codecs keep the PR-4 scalar key."""
+    if isinstance(codec_or_link, SplitLink):
+        link = codec_or_link
+        bwd_key = None if link.mirrored else link.bwd.program_key()
+        return (link.fwd.program_key(), bwd_key)
+    return codecs.program_key(codec_or_link)
+
+
+def _static_pair(link: SplitLink, params, kf, kb):
+    """Resolve one (fwd bucket, bwd bucket) pair to a static link+params."""
+    fwd_c = link.fwd.codec.buckets[kf] if kf is not None else link.fwd.codec
+    if link.mirrored:
+        static = SplitLink(fwd_c)
+        p = None if params is None else link.fwd.params_for(params, kf)
+        return static, p
+    bwd_c = link.bwd.codec.buckets[kb] if kb is not None else link.bwd.codec
+    static = SplitLink(fwd_c, bwd_c)
+    if params is None:
+        return static, None
+    return static, {"fwd": link.fwd.params_for(params["fwd"], kf),
+                    "bwd": link.bwd.params_for(params["bwd"], kb)}
+
+
+def build_link_program_table(codec_or_link, params, make):
+    """One compiled-program entry per schedulable (R_fwd, R_bwd) pair.
+
+    ``make(static_codec_or_link, static_params)`` builds the caller's
+    compiled program for ONE static configuration.  Bare codecs defer to
+    ``repro.codecs.build_program_table`` (identical keys/semantics to PR 4);
+    links build the cross product of the two channels' ladders — each pair
+    its own compiled branch, indexed by :func:`link_program_key` at dispatch
+    time, so independent per-direction R switches never retrace.
+    """
+    if not isinstance(codec_or_link, SplitLink):
+        return codecs.build_program_table(codec_or_link, params, make)
+    link = codec_or_link
+    fwd_keys = (link.fwd.codec.ladder
+                if isinstance(link.fwd.codec, AdaptiveC3SL) else (None,))
+    bwd_keys = ((None,) if link.mirrored else
+                (link.bwd.codec.ladder
+                 if isinstance(link.bwd.codec, AdaptiveC3SL) else (None,)))
+    table = {}
+    for kf in fwd_keys:
+        for kb in bwd_keys:
+            static, p = _static_pair(link, params, kf, kb)
+            table[(kf, kb)] = make(static, p)
+    return table
+
+
+def pin_link(link: SplitLink) -> SplitLink:
+    """Freeze both channels at their CURRENT buckets; returns the static
+    link (pair with :func:`slice_link_params` for the matching params).
+    For single-program callers (the pod pipeline) that cannot switch
+    host-side — the per-step schedule needs the program-table path."""
+    kf = link.fwd.program_key()
+    kb = None if link.mirrored else link.bwd.program_key()
+    static, _ = _static_pair(link, None, kf, kb)
+    return static
+
+
+def slice_link_params(link: SplitLink, params):
+    """Current-bucket params matching :func:`pin_link`'s static link."""
+    if link.mirrored:
+        return link.fwd.params_for(params)
+    return {"fwd": link.fwd.params_for(params["fwd"]),
+            "bwd": link.bwd.params_for(params["bwd"])}

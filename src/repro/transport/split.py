@@ -1,0 +1,91 @@
+"""Split-learning step machinery over the transport layer.
+
+Moved here from ``repro.core.split`` (which remains a thin re-export shim):
+the logical-split loss builder and the codec round-trip dispatch, now
+link-aware — a ``SplitLink`` at the cut layer compresses the two directions
+independently (see ``repro.transport.link``), while bare codecs take the
+exact pre-transport code path.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.transport.link import SplitLink, roundtrip
+
+
+def apply_codec(codec, params, Z, *, with_snr=False, bwd_probe=None):
+    """Round-trip Z through a codec or SplitLink, preserving Z's shape.
+
+    Dispatch is protocol-level via ``codec.feature_layout``: "nchw" codecs
+    (BottleNet++) consume (B, C, H, W) natively; "flat" codecs work on
+    flattened (B, D).  Wrapper codecs (the Adaptive-R scheduler, SplitLink)
+    expose the same attribute, so they dispatch identically.
+
+    ``with_snr=True`` additionally returns the retrieval SNR (dB) of the
+    round-trip — the forward Adaptive-R controller's feedback signal.
+    ``bwd_probe`` is the asymmetric link's gradient-SNR tap (see
+    ``repro.transport.channel.grad_roundtrip``); ignored otherwise.
+    """
+    if getattr(codec, "feature_layout", "flat") == "nchw":
+        if isinstance(codec, SplitLink):
+            # only mirrored links can be nchw (asymmetric is rejected at
+            # construction); unwrap to the one shared codec
+            params = codec.fwd_params(params)
+            codec = codec.fwd.codec
+        payload = codec.encode(params, Z)
+        Zhat = codec.decode(params, payload)
+        if with_snr:
+            from repro.core.hrr import retrieval_snr
+            return Zhat, retrieval_snr(Z, Zhat)
+        return Zhat
+    shape = Z.shape
+    Zf = Z.reshape(shape[0], -1)
+    out = roundtrip(codec, params, Zf, with_snr=with_snr, bwd_probe=bwd_probe)
+    if with_snr:
+        Zhat, snr = out
+        return Zhat.reshape(shape), snr
+    return out.reshape(shape)
+
+
+def make_split_loss_fn(front_apply: Callable, back_apply: Callable, codec,
+                       loss_fn: Callable, with_metrics: bool = False) -> Callable:
+    """Logical split: loss(params, batch) with the codec at the cut layer.
+
+    params = {"front": ..., "back": ..., "codec": ...}
+    batch  = {"x": ..., "y": ...}
+
+    ``codec`` may be a static codec or a static ``SplitLink``.  The returned
+    fn also accepts an optional third argument, the backward-SNR probe:
+    ``loss(params, batch, probe)`` with ``jax.value_and_grad(loss,
+    argnums=(0, 2))`` yields the measured gradient-retrieval SNR as the
+    probe's "gradient" — zero when the link is mirrored or a bare codec.
+
+    ``with_metrics=True`` makes the returned fn yield (loss, metrics) where
+    metrics["cut_snr"] is the cut-layer retrieval SNR in dB — pair it with
+    ``jax.value_and_grad(..., has_aux=True)`` to feed the Adaptive-R
+    scheduler without a second forward pass.
+    """
+
+    def loss(params, batch, bwd_probe=None):
+        Z = front_apply(params["front"], batch["x"])
+        if with_metrics:
+            Zhat, snr = apply_codec(codec, params["codec"], Z, with_snr=True,
+                                    bwd_probe=bwd_probe)
+            logits = back_apply(params["back"], Zhat)
+            return loss_fn(logits, batch["y"]), {"cut_snr": snr}
+        Zhat = apply_codec(codec, params["codec"], Z, bwd_probe=bwd_probe)
+        logits = back_apply(params["back"], Zhat)
+        return loss_fn(logits, batch["y"])
+
+    return loss
+
+
+def split_comm_bytes(codec, B: int, directions: int = 2) -> int:
+    """Wire bytes per step (activations up + gradients down).  A SplitLink
+    accounts each direction with its own channel's codec/bucket."""
+    if isinstance(codec, SplitLink):
+        total = codec.wire_bytes_fwd(B)
+        if directions >= 2:
+            total += codec.wire_bytes_bwd(B)
+        return total
+    return directions * codec.wire_bytes(B)

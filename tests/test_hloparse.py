@@ -60,3 +60,79 @@ def test_collective_bytes_counts_tuple_shapes():
 def test_header_param_order_handles_tuples():
     hdr = "%c (a: (s32[], f32[2,2]), b: f32[4]) -> pred[] {"
     assert hloparse._header_param_order(hdr) == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# mask-aware (measured) top-k wire accounting
+# ---------------------------------------------------------------------------
+
+def test_topk_wire_bytes_from_custom_call_line():
+    ln = ('%custom-call = (f32[20,8]{1,0}, s32[20,8]{1,0}) '
+          'custom-call(f32[20,64]{1,0} %abs.40), custom_call_target="TopK"')
+    defs = {"abs.40": "%abs.40 = f32[20,64]{1,0} abs(f32[20,64]{1,0} %x)"}
+    # 20 rows x (64-bit mask -> 8 bytes + 8 f32 survivors -> 32 bytes)
+    assert hloparse._topk_wire_bytes_for_line(ln, defs) == 20 * (64 // 8 + 4 * 8)
+    # bare-name operand dialect: shape resolved through the defs map
+    bare = ('%custom-call = (f32[20,8]{1,0}, s32[20,8]{1,0}) '
+            'custom-call(%abs.40), custom_call_target="TopK"')
+    assert hloparse._topk_wire_bytes_for_line(bare, defs) \
+        == 20 * (64 // 8 + 4 * 8)
+    # non-topk custom calls measure nothing
+    assert hloparse._topk_wire_bytes_for_line(
+        '%cc = f32[4]{0} custom-call(f32[4]{0} %x), '
+        'custom_call_target="Other"', defs) == 0.0
+
+
+def test_topk_wire_bytes_excludes_router_topk():
+    """Only MAGNITUDE top-ks (the wire stage ranks |payload|) count as
+    sparsified payload — a MoE router's top-k over raw logits is program
+    control flow and must not pollute the measured codec bytes."""
+    import jax
+    import jax.numpy as jnp
+
+    txt = jax.jit(lambda z: jax.lax.top_k(z, 2)).lower(
+        jnp.zeros((64, 16))).compile().as_text()
+    assert "TopK" in txt or "topk(" in txt          # the op IS there
+    assert hloparse.analyze(txt)["topk_wire_bytes"] == 0.0
+
+
+def test_topk_wire_bytes_measured_from_compiled_hlo():
+    """Cross-check the ROADMAP item end-to-end: wire bytes of a sparsified
+    payload MEASURED from the lowered program equal the analytic
+    ``payload_wire_bytes`` — rows/k/D all read off the real top-k op."""
+    import jax
+    import jax.numpy as jnp
+    from repro import codecs
+    from repro.codecs import build
+
+    codec = build("c3sl:R=4,D=64|topk:k=8")
+    p = codec.init(jax.random.PRNGKey(0))
+    z = jnp.zeros((80, 64))
+    txt = jax.jit(lambda z: codec.encode(p, z)).lower(z).compile().as_text()
+    measured = hloparse.analyze(txt)["topk_wire_bytes"]
+    analytic = codecs.payload_wire_bytes(codec, codec.payload_shape(80))
+    assert measured == analytic == (80 // 4) * (64 // 8 + 4 * 8)
+
+
+def test_topk_wire_bytes_trip_count_aware():
+    """A top-k inside a scan body multiplies by the loop trip count, like
+    every other per-computation stat (the encode must be loop-variant or
+    XLA hoists it — which the measurement would faithfully report as 1x)."""
+    import jax
+    import jax.numpy as jnp
+    from repro import codecs
+    from repro.codecs import build
+
+    codec = build("c3sl:R=4,D=64|topk:k=8")
+    p = codec.init(jax.random.PRNGKey(0))
+    z = jnp.zeros((80, 64))
+
+    def scanned(z):
+        def body(c, i):
+            return c + 1.0, codec.encode(p, z + i)
+        _, ys = jax.lax.scan(body, 0.0, jnp.arange(5.0))
+        return ys
+
+    txt = jax.jit(scanned).lower(z).compile().as_text()
+    analytic = codecs.payload_wire_bytes(codec, codec.payload_shape(80))
+    assert hloparse.analyze(txt)["topk_wire_bytes"] == 5 * analytic

@@ -323,6 +323,46 @@ def test_paged_swa_only_model_skips_linear_reservation():
     assert all(not s.pages for s in paged.slots)   # nothing ever reserved
 
 
+def test_eos_frees_pages_early_under_pool_starvation():
+    """PR-3 preemption follow-up: a slot that finishes mid-window must not
+    hold its page reservation for the rest of the window while the queue is
+    starved.  With the pool starved, the decode window exits the moment a
+    slot finishes (stats["eos_early_exits"]), the boundary frees its pages
+    immediately, and the queued request admits — and every page is always
+    either free or owned by exactly one slot (pool_accounting)."""
+    cfg = _cfg(num_layers=2, d_model=64, d_ff=128, vocab_size=64,
+               num_heads=2, num_kv_heads=1, head_dim=32)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+
+    def run(num_pages):
+        eng = BatchedEngine(params, cfg, num_slots=2, max_len=64,
+                            kv_layout="paged", page_size=4,
+                            num_pages=num_pages, sync_every=32, chunk_size=8)
+        # A: big reservation (3 pages), finishes after 2 tokens
+        eng.submit(Request(uid=0, prompt=[1] * 8, max_new_tokens=2))
+        # C: keeps decoding for the whole window (7 pages)
+        eng.submit(Request(uid=1, prompt=[2] * 4, max_new_tokens=24))
+        # B: queued; needs 12 pages -> starved until A frees
+        eng.submit(Request(uid=2, prompt=[3] * 8, max_new_tokens=40))
+        done = eng.run(max_steps=200)
+        acct = eng.pool_accounting()
+        assert acct["free"] + acct["in_use"] == acct["total"]
+        assert acct["in_use"] == 0               # everything retired
+        assert sorted(r.uid for r in done) == [0, 1, 2]
+        return eng
+
+    # pool 14: A(3) + C(7) resident, B needs 12 > 4 free -> starved, so A's
+    # EOS must cut the window short to free its 3 pages for B
+    starved = run(14)
+    assert starved.stats["eos_early_exits"] >= 1
+    # fully provisioned pool: B admits straight away, no window is ever cut
+    roomy = run(2 * 16)
+    assert roomy.stats["eos_early_exits"] == 0
+    # identical token streams either way (scheduling must not change math)
+    assert {r.uid: r.out for r in starved.finished} \
+        == {r.uid: r.out for r in roomy.finished}
+
+
 def test_paged_submit_rejects_requests_larger_than_pool():
     import pytest as _pytest
     cfg = _cfg()

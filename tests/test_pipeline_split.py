@@ -55,7 +55,7 @@ PIPELINE_PROG = textwrap.dedent("""
 
     tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
     batch = {{"x": tokens, "y": tokens}}
-    with jax.set_mesh(mesh):
+    with mesh_lib.set_mesh(mesh):
         loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params, batch)
         gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
 
@@ -98,8 +98,8 @@ TRAIN_PROG = textwrap.dedent("""
     import argparse
     args = argparse.Namespace(arch="deepseek-7b", reduced=True, steps=8,
         batch=8, seq=16, lr=1e-3, seed=0, codec="c3sl", R=2, quant=None,
-        unitary=False, pipeline=True, microbatches=2, log_every=100,
-        ckpt_dir=None)
+        unitary=False, pipeline=True, microbatches=2, async_depth=2,
+        log_every=100, ckpt_dir=None)
     from repro.configs.base import get_config, reduced
     cfg = reduced(get_config(args.arch), num_layers=2, d_model=128, d_ff=256,
                   vocab_size=128, num_heads=4, num_kv_heads=2, head_dim=32)

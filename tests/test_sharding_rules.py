@@ -69,8 +69,8 @@ def test_norms_replicated():
 
 def test_cache_rules():
     import jax.numpy as jnp
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_host_mesh(data=1, model=1)
     cache = {"stack": {"l0_0_attn": {"k": jnp.zeros((2, 4, 8, 2, 16)),
                                      "v": jnp.zeros((2, 4, 8, 2, 16))}}}
     sh = rules.cache_shardings(cache, mesh)

@@ -1,0 +1,339 @@
+"""Directional transport layer tests: link specs, mirrored bit-identity vs
+the shared-codec path, the gradient-compression seam, per-direction wire
+accounting, and the zero-recompile guarantee across (R_fwd, R_bwd) bucket
+ladders."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import codecs, transport
+from repro.codecs import build
+from repro.core import hrr
+from repro.transport import SplitLink, build_link, grad_roundtrip
+
+
+# --------------------------------------------------------------------------
+# link spec grammar
+# --------------------------------------------------------------------------
+
+def test_is_link_spec_and_parse():
+    assert transport.is_link_spec("c3sl:R=8 >> bwd:c3sl:R=4")
+    assert not transport.is_link_spec("c3sl:R=8|int8")
+    assert transport.parse_link_spec("c3sl:R=8|int8 >> bwd:c3sl:R=4") == \
+        ("c3sl:R=8|int8", "c3sl:R=4")
+    assert transport.parse_link_spec("c3sl:R=8") == ("c3sl:R=8", None)
+
+
+def test_link_spec_errors():
+    with pytest.raises(ValueError, match="bwd:"):
+        transport.parse_link_spec("c3sl:R=8 >> c3sl:R=4")
+    with pytest.raises(ValueError, match="more than one"):
+        transport.parse_link_spec("a >> bwd:b >> bwd:c")
+    with pytest.raises(ValueError, match="empty backward"):
+        transport.parse_link_spec("c3sl:R=8 >> bwd:")
+    with pytest.raises(ValueError, match="flat"):
+        SplitLink(build("bnpp:R=4,C=8,H=4,W=4"), build("c3sl:R=2,D=64"))
+
+
+def test_trainable_bwd_codec_rejected():
+    """The gradient seam returns zero cotangents for the backward codec's
+    params, so a trainable bwd codec would silently stay at init while
+    corrupting every gradient — construction must fail loudly (fwd stays
+    free to train; c3sl's fixed keys are fine on either side)."""
+    with pytest.raises(ValueError, match="cannot train"):
+        build_link("c3sl:R=4,D=64 >> bwd:dense:R=4,D=64")
+    with pytest.raises(ValueError, match="cannot train"):
+        build_link("c3sl:R=4,D=64 >> bwd:dense:R=4,D=64|int8")
+    # trainable FORWARD codecs are fine (their params backprop normally)
+    assert not build_link("dense:R=4,D=64 >> bwd:c3sl:R=2,D=64").mirrored
+
+
+@pytest.mark.parametrize("spec", [
+    "c3sl:R=8,D=64 >> bwd:c3sl:R=4,D=64",
+    "c3sl:R=16,D=64|int8 >> bwd:c3sl:R=8,D=64",
+    "c3sl:R=8,D=64|int8 >> bwd:c3sl:R=2,D=64|int8",
+    "adaptive:c3sl:R=8,D=64,min_R=2 >> bwd:adaptive:c3sl:R=4,D=64,min_R=2",
+    "adaptive:c3sl:R=8,D=256,min_R=2|topk:k=16 >> bwd:c3sl:R=2,D=256|int8",
+])
+def test_asymmetric_spec_roundtrips(spec):
+    link = build_link(spec)
+    assert link.spec() == spec
+    assert build_link(link.spec()).spec() == spec
+    assert not link.mirrored
+
+
+def test_mirrored_spec_is_plain_codec_spec():
+    link = build_link("c3sl:R=4,D=64|int8")
+    assert link.mirrored
+    assert link.spec() == "c3sl:R=4,D=64|int8"
+    # mirrored params ARE the forward codec's params (pre-transport tree)
+    p = link.init(jax.random.PRNGKey(0))
+    ps = build("c3sl:R=4,D=64|int8").init(jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(p["keys"]), np.asarray(ps["keys"]))
+
+
+# --------------------------------------------------------------------------
+# mirrored link == shared-codec path, bit-identically
+# --------------------------------------------------------------------------
+
+def _split_mlp(D_in=8, D_cut=64, n_cls=4, B=16, seed=0):
+    rng = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    net = {"front": {"w": jax.random.normal(k1, (D_in, D_cut)) * D_in ** -0.5},
+           "back": {"w": jax.random.normal(k2, (D_cut, n_cls)) * D_cut ** -0.5}}
+    batch = {"x": jax.random.normal(k3, (B, D_in)),
+             "y": jax.random.normal(k4, (B, n_cls))}
+    return net, batch
+
+
+def _front(p, x):
+    return jax.nn.relu(x @ p["w"])
+
+
+def _back(p, z):
+    return z @ p["w"]
+
+
+def _mse(logits, y):
+    return jnp.mean((logits - y) ** 2)
+
+
+@pytest.mark.parametrize("spec", ["c3sl:R=4,D=64", "c3sl:R=4,D=64|int8"])
+def test_mirrored_link_bit_identical_loss_and_grads(spec):
+    """The PR-4 equivalence the refactor must preserve: a mirrored link
+    (bwd == fwd, no ``bwd:`` stage) produces bit-identical loss AND grads
+    to the shared-codec path, including through the int8 wire stage."""
+    net, batch = _split_mlp()
+    codec = build(spec)
+    link = transport.as_link(codec)
+    rng = jax.random.PRNGKey(7)
+
+    def run(c):
+        loss_fn = transport.make_split_loss_fn(_front, _back, c, _mse,
+                                               with_metrics=True)
+        params = {**net, "codec": c.init(rng)}
+        (loss, m), g = jax.jit(jax.value_and_grad(
+            loss_fn, has_aux=True))(params, batch)
+        return loss, m["cut_snr"], g
+
+    l_codec, snr_codec, g_codec = run(codec)
+    l_link, snr_link, g_link = run(link)
+    np.testing.assert_array_equal(np.asarray(l_codec), np.asarray(l_link))
+    np.testing.assert_array_equal(np.asarray(snr_codec), np.asarray(snr_link))
+    for a, b in zip(jax.tree.leaves(g_codec), jax.tree.leaves(g_link)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_engine_greedy_decode_bit_identical_with_link_spec():
+    """Serving: a link spec's forward channel drives the engine, so greedy
+    outputs are bit-identical to the plain codec spec (incl. |int8)."""
+    from repro.configs.base import get_config, reduced
+    from repro.models import lm as lm_lib
+    from repro.serving.engine import BatchedEngine, Request
+    cfg = reduced(get_config("deepseek-7b"), num_layers=2, d_model=64,
+                  d_ff=128, vocab_size=64, num_heads=2, num_kv_heads=1,
+                  head_dim=32)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+
+    def run(spec):
+        eng = BatchedEngine(params, cfg, num_slots=4, max_len=16, codec=spec,
+                            chunk_size=4)
+        for u in range(4):
+            eng.submit(Request(uid=u, prompt=[1 + u, 2, 3], max_new_tokens=4))
+        eng.run(max_steps=64)
+        return eng
+
+    plain = run("c3sl:R=4|int8")
+    linked = run("c3sl:R=4|int8 >> bwd:c3sl:R=2|int8")
+    assert linked.link_spec is not None
+    assert [r.out for r in sorted(linked.finished, key=lambda r: r.uid)] == \
+        [r.out for r in sorted(plain.finished, key=lambda r: r.uid)]
+    # serving is forward-only: bwd accounted as zero, fwd == total
+    assert linked.stats["wire_bytes_bwd"] == 0
+    assert linked.stats["wire_bytes_fwd"] == \
+        linked.stats["payload_wire_bytes"] == plain.stats["payload_wire_bytes"]
+
+
+# --------------------------------------------------------------------------
+# the gradient seam
+# --------------------------------------------------------------------------
+
+def test_grad_roundtrip_forward_is_identity_backward_compresses():
+    bwd = build("c3sl:R=2,D=64")
+    bp = bwd.init(jax.random.PRNGKey(3))
+    payload = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    W = jax.random.normal(jax.random.PRNGKey(2), (8, 64))
+    out = grad_roundtrip(bwd, payload, bp)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(payload))
+
+    # d/d_payload of sum(seam(payload) * W) must be the bwd ROUND-TRIP of W
+    g = jax.grad(lambda p: (grad_roundtrip(bwd, p, bp) * W).sum())(payload)
+    expect = bwd.decode(bp, bwd.encode(bp, W))
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(expect))
+
+
+def test_grad_probe_measures_gradient_retrieval_snr():
+    bwd = build("c3sl:R=2,D=64")
+    bp = bwd.init(jax.random.PRNGKey(3))
+    payload = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    W = jax.random.normal(jax.random.PRNGKey(2), (8, 64))
+
+    def f(p, probe):
+        return (grad_roundtrip(bwd, p, bp, probe) * W).sum()
+
+    _, snr = jax.grad(f, argnums=(0, 1))(payload, jnp.float32(0.0))
+    expect = hrr.retrieval_snr(W, bwd.decode(bp, bwd.encode(bp, W)))
+    np.testing.assert_allclose(float(snr), float(expect), rtol=1e-6)
+
+
+def test_asymmetric_link_forward_identical_grads_differ():
+    """The seam is identity in the forward pass — loss (and cut SNR) match
+    the mirrored link bit-for-bit; only the backward pass changes."""
+    net, batch = _split_mlp()
+    rng = jax.random.PRNGKey(7)
+    asym = build_link("c3sl:R=4,D=64 >> bwd:c3sl:R=2,D=64")
+    mirr = transport.as_link(build("c3sl:R=4,D=64"))
+    pa, pm = asym.init(rng), mirr.init(rng)
+
+    def run(link, cp):
+        loss_fn = transport.make_split_loss_fn(_front, _back, link, _mse)
+        params = {**net, "codec": cp}
+        probe = jnp.float32(0.0)
+        loss, (g, gsnr) = jax.jit(jax.value_and_grad(
+            loss_fn, argnums=(0, 2)))(params, batch, probe)
+        return loss, g, gsnr
+
+    l_a, g_a, snr_a = run(asym, pa)
+    l_m, g_m, snr_m = run(mirr, pm)
+    np.testing.assert_array_equal(np.asarray(l_a), np.asarray(l_m))
+    # mirrored links have no seam: the probe's gradient is exactly zero;
+    # the asymmetric link measures a real (finite, nonzero) gradient SNR
+    assert float(snr_m) == 0.0
+    assert np.isfinite(float(snr_a)) and float(snr_a) != 0.0
+    diff = sum(float(jnp.abs(a - b).sum())
+               for a, b in zip(jax.tree.leaves(g_a["front"]),
+                               jax.tree.leaves(g_m["front"])))
+    assert diff > 0, "bwd codec did not touch the gradient"
+    # the back half's grads live AFTER the seam: untouched
+    for a, b in zip(jax.tree.leaves(g_a["back"]), jax.tree.leaves(g_m["back"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_equal_bwd_spec_roundtrips_and_shares_keys():
+    """An explicit ``bwd:`` equal to the fwd spec inits both channels from
+    the same rng — bit-identical key tables (the 'bwd == fwd' pin for the
+    asymmetric params tree)."""
+    link = build_link("c3sl:R=4,D=64 >> bwd:c3sl:R=4,D=64")
+    p = link.init(jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(p["fwd"]["keys"]),
+                                  np.asarray(p["bwd"]["keys"]))
+    assert build_link(link.spec()).spec() == link.spec()
+
+
+# --------------------------------------------------------------------------
+# per-direction accounting
+# --------------------------------------------------------------------------
+
+def test_wire_bytes_per_direction():
+    B = 16
+    # mirrored: bwd == fwd (the gradient has the fwd compressed shape)
+    m = transport.as_link(build("c3sl:R=4,D=64|int8"))
+    assert m.wire_bytes_fwd(B) == (B // 4) * 64 + 4 * (B // 4)
+    assert m.wire_bytes_bwd(B) == m.wire_bytes_fwd(B)
+    # asymmetric: the gradient payload's B/R_fwd rows re-grouped by R_bwd
+    a = build_link("c3sl:R=4,D=64|int8 >> bwd:c3sl:R=2,D=64")
+    assert a.wire_bytes_fwd(B) == (B // 4) * 64 + 4 * (B // 4)
+    assert a.wire_bytes_bwd(B) == (B // 4 // 2) * 64 * 4        # f32 wire
+    assert a.total_wire_bytes(B) == a.wire_bytes_fwd(B) + a.wire_bytes_bwd(B)
+    assert transport.split_comm_bytes(a, B) == a.total_wire_bytes(B)
+    assert transport.split_comm_bytes(a, B, directions=1) == \
+        a.wire_bytes_fwd(B)
+
+
+def test_adaptive_link_accounting_follows_both_buckets():
+    link = build_link(
+        "adaptive:c3sl:R=8,min_R=2|int8 >> bwd:adaptive:c3sl:R=4,min_R=2",
+        D=64)
+    B = 32
+    for rf in (2, 4, 8):
+        for rb in (2, 4):
+            link.fwd.codec.pin(rf)
+            link.bwd.codec.pin(rb)
+            assert link.wire_bytes_fwd(B) == (B // rf) * 64 + 4 * (B // rf)
+            assert link.wire_bytes_bwd(B) == (B // rf // rb) * 64 * 4
+            assert transport.link_program_key(link) == (rf, rb)
+
+
+def test_link_clamp_trims_both_ladders():
+    link = build_link(
+        "adaptive:c3sl:R=8,min_R=2 >> bwd:adaptive:c3sl:R=8,min_R=2", D=64)
+    c = codecs.clamp_R(link, 16)     # dispatches through SplitLink.with_max_R
+    assert c.fwd.codec.ladder == (2, 4, 8)
+    # fwd can ramp to 8 -> gradient payload can shrink to 16/8 = 2 rows, so
+    # the bwd ladder must divide 2
+    assert c.bwd.codec.ladder == (2,)
+    assert build_link(c.spec()).spec() == c.spec()
+
+
+# --------------------------------------------------------------------------
+# zero recompiles across per-direction bucket ladders
+# --------------------------------------------------------------------------
+
+def test_zero_recompiles_across_directional_R_switches():
+    """PR-4's trace-counter contract extended to the per-direction table:
+    one compiled branch per (R_fwd, R_bwd) pair, switched host-side — a
+    schedule bouncing both ladders independently must trace each pair
+    EXACTLY once."""
+    net, batch = _split_mlp(B=32)
+    link = build_link(
+        "adaptive:c3sl:R=8,min_R=2 >> bwd:adaptive:c3sl:R=4,min_R=2", D=64)
+    link_params = link.init(jax.random.PRNGKey(7))
+    traces = [0]
+
+    def make_step(static_link, static_params):
+        loss_fn = transport.make_split_loss_fn(_front, _back, static_link,
+                                               _mse, with_metrics=True)
+
+        @jax.jit
+        def step(net, batch, probe):
+            traces[0] += 1            # runs only while tracing
+            params = {**net, "codec": static_params}
+            (loss, m), (g, gsnr) = jax.value_and_grad(
+                loss_fn, argnums=(0, 2), has_aux=True)(params, batch, probe)
+            net2 = jax.tree.map(lambda a, b: a - 0.01 * b, net,
+                                {"front": g["front"], "back": g["back"]})
+            return net2, loss, m["cut_snr"], gsnr
+
+        return step
+
+    table = transport.build_link_program_table(link, link_params, make_step)
+    assert sorted(table) == [(rf, rb) for rf in (2, 4, 8) for rb in (2, 4)]
+    probe = jnp.float32(0.0)
+    for key in table:
+        net, *_ = table[key](net, batch, probe)
+    assert traces[0] == 6
+    schedule = [(2, 2), (8, 4), (2, 4), (4, 2), (8, 2), (4, 4), (2, 2),
+                (8, 4), (8, 4), (2, 4)]
+    for rf, rb in schedule:
+        link.fwd.codec.pin(rf)
+        link.bwd.codec.pin(rb)
+        key = transport.link_program_key(link)
+        assert key == (rf, rb)
+        net, loss, snr, gsnr = table[key](net, batch, probe)
+        assert np.isfinite(float(loss))
+    assert traces[0] == 6, "a per-direction R switch triggered a retrace"
+
+
+def test_bare_codec_table_matches_pr4_semantics():
+    """Bare codecs (and their scalar program keys) flow through the link
+    table helpers unchanged — the PR-4 call sites keep working."""
+    codec = build("adaptive:c3sl:R=4,min_R=2", D=64)
+    p = codec.init(jax.random.PRNGKey(0))
+    table = transport.build_link_program_table(codec, p,
+                                               lambda c, cp: c.spec())
+    assert sorted(table) == [2, 4]
+    assert transport.link_program_key(codec) == codecs.program_key(codec)
+    static = build("c3sl:R=4,D=64")
+    table = transport.build_link_program_table(static, {}, lambda c, cp: 1)
+    assert list(table) == [None]
