@@ -8,6 +8,12 @@ have a recorded trajectory to beat.  A third, mixed long/short-prompt
 workload compares the paged KV cache (oversubscribed page pool) against
 the contiguous per-slot strips on tokens/s, mean/max time-to-first-token,
 and peak cache bytes — with and without prefill/decode interleaving.
+A fourth, multi-tenant Poisson workload (a standard tenant's short
+priority-0 stream plus a premium tenant's long priority-1 requests over
+an oversubscribed page pool) compares slot preemption against FIFO
+blocking on per-tenant TTFT p50/p99 and time-weighted pool utilization.
+All timed sections run identically-seeded repeats and report the
+min/mean/max tokens/s spread (full mode: 3 repeats; smoke: 1).
 See benchmarks/README.md for the protocol and the JSON schema.
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--out PATH]
@@ -41,6 +47,45 @@ SMOKE_CODECS = ["none", "c3sl:R=2"]
 MIXED = {"long": (96, 16), "short": (8, 16), "n_each": 4}
 SMOKE_MIXED = {"long": (12, 2), "short": (3, 2), "n_each": 2}
 
+# Multi-tenant Poisson workload: a "standard" tenant streams short
+# priority-0 requests while a "premium" tenant occasionally submits a
+# long priority-1 request whose page footprint doesn't fit the
+# oversubscribed pool alongside a full complement of standard slots.
+# Under FIFO the premium head blocks admission while the pool drains;
+# with preemption it evicts standard slots and is admitted immediately.
+# Arrival times are in TICK units (deterministic given the seed), not
+# wall-clock: per tenant, inter-arrival gaps ~ Exp(mean_gap) ticks.
+# max_new spans several sync_every decode windows so requests stay
+# resident across ticks — a request that finishes inside one tick can
+# neither be observed occupying the pool nor be preempted.
+MULTI_TENANT = {
+    "standard": {"prompt_len": 8, "max_new": 32, "n": 16, "mean_gap": 3.0,
+                 "priority": 0},
+    "premium": {"prompt_len": 96, "max_new": 24, "n": 3, "mean_gap": 25.0,
+                "priority": 1},
+}
+SMOKE_MULTI_TENANT = {
+    "standard": {"prompt_len": 4, "max_new": 12, "n": 4, "mean_gap": 2.0,
+                 "priority": 0},
+    "premium": {"prompt_len": 20, "max_new": 8, "n": 1, "mean_gap": 8.0,
+                "priority": 1},
+}
+
+
+def _agg_reps(rows: list[dict]) -> dict:
+    """Collapse repeated runs (identical pinned seeds -> identical token
+    streams) into one row: mean wall/throughput plus min/max spread."""
+    tok = {r["generated_tokens"] for r in rows}
+    assert len(tok) == 1, f"pinned seeds but divergent outputs: {tok}"
+    tps = [r["tokens_per_s"] for r in rows]
+    out = dict(rows[0])
+    out["wall_s"] = round(sum(r["wall_s"] for r in rows) / len(rows), 4)
+    out["tokens_per_s"] = round(sum(tps) / len(tps), 1)
+    out["tokens_per_s_min"] = min(tps)
+    out["tokens_per_s_max"] = max(tps)
+    out["repeats"] = len(rows)
+    return out
+
 
 def _build(smoke: bool):
     from repro.configs.base import get_config, reduced
@@ -53,44 +98,51 @@ def _build(smoke: bool):
 
 
 def _run_once(cfg, params, *, mode, codec, prompt_len, max_new, requests,
-              num_slots, max_len, chunk_size, sync_every, seed=0):
+              num_slots, max_len, chunk_size, sync_every, seed=0, reps=1):
     from repro.serving.engine import BatchedEngine, Request
     eng = BatchedEngine(params, cfg, num_slots=num_slots, max_len=max_len,
                         codec=codec, greedy=True, seed=seed,
                         prefill_mode=mode, chunk_size=chunk_size,
                         sync_every=sync_every)
-    rng = np.random.RandomState(seed + 1)
 
-    def batch(n, uid0):
+    def batch(n, uid0, rng):
         return [Request(uid=uid0 + i,
                         prompt=list(map(int, rng.randint(1, cfg.vocab_size,
                                                          prompt_len))),
                         max_new_tokens=max_new) for i in range(n)]
 
     # warmup: compile every program (prefill, fused step, reset) off the clock
-    for r in batch(min(2, requests), 10_000):
+    for r in batch(min(2, requests), 10_000, np.random.RandomState(seed + 99)):
         eng.submit(r)
     eng.run()
     eng.finished.clear()
 
-    reqs = batch(requests, 0)
-    for r in reqs:
-        eng.submit(r)
-    t0 = time.time()
-    done = eng.run()
-    wall = time.time() - t0
-    assert len(done) == requests, (len(done), requests)
-    generated = sum(len(r.out) for r in done)
-    total = generated + requests * prompt_len
-    return {"wall_s": round(wall, 4),
-            "prompt_tokens": requests * prompt_len,
-            "generated_tokens": generated,
-            "tokens_per_s": round(total / wall, 1)}
+    rows = []
+    for rep in range(reps):
+        # identical pinned seed every rep: same prompts, same token streams
+        reqs = batch(requests, rep * 100_000,
+                     np.random.RandomState(seed + 1))
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.time()
+        done = list(eng.run())      # copy: run() returns eng.finished itself
+        wall = time.time() - t0
+        assert len(done) == requests, (len(done), requests)
+        eng.finished.clear()
+        generated = sum(len(r.out) for r in done)
+        total = generated + requests * prompt_len
+        rows.append({"wall_s": round(wall, 4),
+                     "prompt_tokens": requests * prompt_len,
+                     "generated_tokens": generated,
+                     "tokens_per_s": round(total / wall, 1)})
+    return _agg_reps(rows)
 
 
 def _run_mixed(cfg, params, *, kv_layout, interleave, mixed, num_slots,
-               max_len, page_size, num_pages, chunk_size, sync_every, seed=0):
-    """One mixed long/short run; returns throughput, TTFT, and cache bytes."""
+               max_len, page_size, num_pages, chunk_size, sync_every, seed=0,
+               reps=1):
+    """Mixed long/short runs; returns throughput, TTFT, and cache bytes
+    aggregated over ``reps`` identically-seeded repeats."""
     from repro.serving.engine import BatchedEngine, Request
     eng = BatchedEngine(params, cfg, num_slots=num_slots, max_len=max_len,
                         greedy=True, seed=seed, prefill_mode="chunked",
@@ -98,10 +150,9 @@ def _run_mixed(cfg, params, *, kv_layout, interleave, mixed, num_slots,
                         kv_layout=kv_layout, page_size=page_size,
                         num_pages=num_pages if kv_layout == "paged" else None,
                         interleave=interleave)
-    rng = np.random.RandomState(seed + 1)
     (llen, lnew), (slen, snew) = mixed["long"], mixed["short"]
 
-    def batch(uid0):
+    def batch(uid0, rng):
         reqs = []
         for i in range(mixed["n_each"]):
             for ln, mn in ((llen, lnew), (slen, snew)):
@@ -111,33 +162,181 @@ def _run_mixed(cfg, params, *, kv_layout, interleave, mixed, num_slots,
                     max_new_tokens=mn))
         return reqs
 
-    for r in batch(10_000)[:2]:          # warmup: compile off the clock
+    # warmup: compile off the clock
+    for r in batch(10_000, np.random.RandomState(seed + 99))[:2]:
         eng.submit(r)
     eng.run()
     eng.finished.clear()
-    eng.stats = {k: 0 for k in eng.stats}    # count the timed run only
 
-    reqs = batch(0)
-    t0 = time.time()
-    for r in reqs:
-        eng.submit(r)
-    done = eng.run()
-    wall = time.time() - t0
-    assert len(done) == len(reqs), (len(done), len(reqs))
-    generated = sum(len(r.out) for r in done)
-    prompt_tokens = sum(len(r.prompt) for r in reqs)
-    ttfts = [r.t_first - r.t_submit for r in done if r.t_first is not None]
+    rows = []
+    for rep in range(reps):
+        eng.stats = {k: 0 for k in eng.stats}    # count this rep only
+        reqs = batch(rep * 100_000, np.random.RandomState(seed + 1))
+        t0 = time.time()
+        for r in reqs:
+            eng.submit(r)
+        done = list(eng.run())      # copy: run() returns eng.finished itself
+        wall = time.time() - t0
+        assert len(done) == len(reqs), (len(done), len(reqs))
+        eng.finished.clear()
+        generated = sum(len(r.out) for r in done)
+        prompt_tokens = sum(len(r.prompt) for r in reqs)
+        ttfts = [r.t_first - r.t_submit for r in done
+                 if r.t_first is not None]
+        rows.append({"wall_s": round(wall, 4),
+                     "prompt_tokens": prompt_tokens,
+                     "generated_tokens": generated,
+                     "tokens_per_s": round((prompt_tokens + generated) / wall,
+                                           1),
+                     "ttft_mean_s": round(sum(ttfts) / len(ttfts), 4),
+                     "ttft_max_s": round(max(ttfts), 4),
+                     "peak_cache_bytes": eng.cache_bytes,
+                     "dispatches": eng.stats["dispatches"]})
+    out = _agg_reps(rows)
+    out["ttft_mean_s"] = round(
+        sum(r["ttft_mean_s"] for r in rows) / len(rows), 4)
+    out["ttft_max_s"] = round(max(r["ttft_max_s"] for r in rows), 4)
+    return out
+
+
+def _run_multi_tenant(cfg, params, *, tenants, preemption, num_slots,
+                      max_len, page_size, num_pages, chunk_size, sync_every,
+                      seed=0):
+    """Drive the engine tick-by-tick under a Poisson (per-tenant) arrival
+    schedule; returns per-tenant TTFT percentiles and the time-weighted
+    page-pool utilization.  The arrival schedule is identical for every
+    ``preemption`` setting (same seed -> same ticks, prompts, priorities)."""
+    from repro.serving.engine import BatchedEngine, Request
+    eng = BatchedEngine(params, cfg, num_slots=num_slots, max_len=max_len,
+                        greedy=True, seed=seed, prefill_mode="chunked",
+                        chunk_size=chunk_size, sync_every=sync_every,
+                        kv_layout="paged", page_size=page_size,
+                        num_pages=num_pages, preemption=preemption)
+
+    rng = np.random.RandomState(seed + 1)
+    schedule = []        # (arrival_tick, tenant, prompt, max_new, priority)
+    for name in sorted(tenants):
+        t = tenants[name]
+        ticks = np.cumsum(rng.exponential(t["mean_gap"], t["n"]))
+        for at in ticks:
+            prompt = list(map(int, rng.randint(1, cfg.vocab_size,
+                                               t["prompt_len"])))
+            schedule.append((float(at), name, prompt, t["max_new"],
+                             t["priority"]))
+    schedule.sort(key=lambda s: s[0])
+
+    # warmup: compile prefill/decode/reset programs off the clock (one
+    # request per tenant shape; the preemption path reuses the same
+    # programs, so nothing compiles mid-measurement)
+    for uid, name in enumerate(sorted(tenants)):
+        t = tenants[name]
+        eng.submit(Request(uid=10_000 + uid,
+                           prompt=[1] * t["prompt_len"],
+                           max_new_tokens=t["max_new"]))
+    eng.run()
+    eng.finished.clear()
+    eng.stats = {k: 0 for k in eng.stats}
+
+    tenant_of = {}
+    pending = [(at, name, Request(uid=uid, prompt=prompt, max_new_tokens=mn,
+                                  priority=pr))
+               for uid, (at, name, prompt, mn, pr) in enumerate(schedule)]
+    for _, name, req in pending:
+        tenant_of[req.uid] = name
+    total = eng.paged.num_pages
+    util_num = util_den = 0.0
+    tick = done = 0
+    t_start = time.time()
+    while pending or eng.queue or eng.active:
+        while pending and pending[0][0] <= tick:
+            eng.submit(pending.pop(0)[2])
+        t0 = time.time()
+        moved = eng.tick()
+        dt = time.time() - t0
+        if moved:
+            # time-weighted occupancy: what fraction of the page pool did
+            # useful work while the engine was busy this tick
+            util_num += dt * eng.pool_accounting()["in_use"] / total
+            util_den += dt
+        tick += 1
+    wall = time.time() - t_start
+    finished, eng.finished = list(eng.finished), []
+    assert len(finished) == len(schedule), (len(finished), len(schedule))
+
+    per_tenant = {}
+    for req in finished:
+        per_tenant.setdefault(tenant_of[req.uid], []).append(req)
+    tenant_rows = {}
+    for name, reqs in sorted(per_tenant.items()):
+        ttfts = [r.t_first - r.t_submit for r in reqs
+                 if r.t_first is not None]
+        tenant_rows[name] = {
+            "requests": len(reqs),
+            "priority": tenants[name]["priority"],
+            "generated_tokens": sum(len(r.out) for r in reqs),
+            "evictions": sum(r.evictions for r in reqs),
+            "ttft_p50_s": round(float(np.percentile(ttfts, 50)), 4),
+            "ttft_p99_s": round(float(np.percentile(ttfts, 99)), 4),
+            "ttft_max_s": round(max(ttfts), 4)}
+    generated = sum(len(r.out) for r in finished)
+    prompt_tokens = sum(len(r.prompt) for r in finished)
     return {"wall_s": round(wall, 4),
             "prompt_tokens": prompt_tokens,
             "generated_tokens": generated,
             "tokens_per_s": round((prompt_tokens + generated) / wall, 1),
-            "ttft_mean_s": round(sum(ttfts) / len(ttfts), 4),
-            "ttft_max_s": round(max(ttfts), 4),
-            "peak_cache_bytes": eng.cache_bytes,
-            "dispatches": eng.stats["dispatches"]}
+            "pool_utilization": round(util_num / max(util_den, 1e-9), 3),
+            "evictions": eng.stats["evictions"],
+            "eos_early_exits": eng.stats["eos_early_exits"],
+            "ticks": tick,
+            "tenants": tenant_rows}
 
 
-def bench_mixed(cfg, params, smoke, chunk_size, sync_every, results):
+def bench_multi_tenant(cfg, params, smoke, chunk_size, sync_every, results):
+    """Preemption on vs off under the oversubscribed multi-tenant mix."""
+    tenants = SMOKE_MULTI_TENANT if smoke else MULTI_TENANT
+    num_slots = 2 if smoke else 4
+    max_len = 32 if smoke else 128
+    page_size = 8 if smoke else 16
+    # pool sized so a full complement of standard slots + one premium
+    # request oversubscribes it: premium needs pages the standards hold
+    num_pages = 4 if smoke else 10
+    base = None
+    for preemption in (False, True):
+        r = _run_multi_tenant(cfg, params, tenants=tenants,
+                              preemption=preemption, num_slots=num_slots,
+                              max_len=max_len, page_size=page_size,
+                              num_pages=num_pages, chunk_size=chunk_size,
+                              sync_every=sync_every)
+        row = {"mix": "multi_tenant", "codec": "none", "mode": "chunked",
+               "kv_layout": "paged", "preemption": preemption,
+               "page_size": page_size, "num_pages": num_pages,
+               "chunk_size": chunk_size, "sync_every": sync_every,
+               "requests": sum(t["n"] for t in tenants.values()),
+               "num_slots": num_slots, **r}
+        if base is None:
+            base = r
+        else:
+            row["utilization_vs_fifo"] = round(
+                r["pool_utilization"] / max(base["pool_utilization"], 1e-9),
+                2)
+            prem = [n for n, t in tenants.items() if t["priority"] > 0][0]
+            row["premium_ttft_p99_vs_fifo"] = round(
+                r["tenants"][prem]["ttft_p99_s"]
+                / max(base["tenants"][prem]["ttft_p99_s"], 1e-9), 3)
+        results.append(row)
+        for name, t in r["tenants"].items():
+            print(f"multi_tenant preempt={str(preemption):5s} "
+                  f"{name:9s} ttft p50 {t['ttft_p50_s']*1e3:8.1f}ms "
+                  f"p99 {t['ttft_p99_s']*1e3:8.1f}ms "
+                  f"evictions {t['evictions']}", flush=True)
+        print(f"multi_tenant preempt={str(preemption):5s} pool util "
+              f"{r['pool_utilization']:.3f} "
+              f"({r['tokens_per_s']:.1f} tok/s, "
+              f"{r['evictions']} evictions)", flush=True)
+    return results
+
+
+def bench_mixed(cfg, params, smoke, chunk_size, sync_every, results, reps=1):
     """Paged vs contiguous (and the interleave knob) on the mixed workload."""
     mixed = SMOKE_MIXED if smoke else MIXED
     num_slots = 2 if smoke else 4
@@ -150,15 +349,15 @@ def bench_mixed(cfg, params, smoke, chunk_size, sync_every, results):
     base = None
     for kv_layout, interleave in (("contiguous", 0), ("paged", 0),
                                   ("paged", 2)):
-        # best of 2 reps (full mode): wall-clock on shared CPU runners is
-        # noisy and the layouts execute identical token streams
-        reps = [_run_mixed(cfg, params, kv_layout=kv_layout,
-                           interleave=interleave, mixed=mixed,
-                           num_slots=num_slots, max_len=max_len,
-                           page_size=page_size, num_pages=num_pages,
-                           chunk_size=chunk_size, sync_every=sync_every)
-                for _ in range(1 if smoke else 2)]
-        r = max(reps, key=lambda x: x["tokens_per_s"])
+        # identically-seeded repeats (full mode): wall-clock on shared CPU
+        # runners is noisy and the layouts execute identical token streams,
+        # so report the spread (min/mean/max), not a lucky best-of
+        r = _run_mixed(cfg, params, kv_layout=kv_layout,
+                       interleave=interleave, mixed=mixed,
+                       num_slots=num_slots, max_len=max_len,
+                       page_size=page_size, num_pages=num_pages,
+                       chunk_size=chunk_size, sync_every=sync_every,
+                       reps=reps)
         row = {"mix": "mixed_long_short", "codec": "none", "mode": "chunked",
                "kv_layout": kv_layout, "interleave": interleave,
                "page_size": page_size if kv_layout == "paged" else None,
@@ -189,6 +388,8 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
     num_slots = 2 if smoke else 4
     max_len = 32 if smoke else 128
     sync_every = 4 if smoke else 8
+    # identically-seeded repeats: report the wall-clock spread, not one draw
+    reps = 1 if smoke else 3
 
     results = []
     for mix, (prompt_len, max_new) in mixes.items():
@@ -199,7 +400,7 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
                               prompt_len=prompt_len, max_new=max_new,
                               requests=requests, num_slots=num_slots,
                               max_len=max_len, chunk_size=chunk_size,
-                              sync_every=sync_every)
+                              sync_every=sync_every, reps=reps)
                 per_mode[mode] = r
                 results.append({"mix": mix, "codec": spec, "mode": mode,
                                 "chunk_size": chunk_size if mode == "chunked" else 1,
@@ -214,7 +415,9 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
                   f"chunked={per_mode['chunked']['tokens_per_s']:8.1f} tok/s  "
                   f"({speedup:.2f}x)", flush=True)
 
-    bench_mixed(cfg, params, smoke, chunk_size, sync_every, results)
+    bench_mixed(cfg, params, smoke, chunk_size, sync_every, results,
+                reps=reps)
+    bench_multi_tenant(cfg, params, smoke, chunk_size, sync_every, results)
 
     payload = {
         "protocol": {

@@ -1,0 +1,34 @@
+"""repro.frontdoor — the multi-tenant split-serving front door.
+
+The networked tier over :class:`repro.serving.engine.BatchedEngine`: many
+edge clients stream cut-layer payloads (token prompts today; the frame
+format carries dtype+shape so activation payloads ride the same frames)
+over length-prefixed asyncio TCP frames to one server, which continuously
+batches them into engine slots with admission control (per-tenant
+concurrency caps, queue-depth shedding with retriable ``BUSY``),
+per-tenant QoS accounting (TTFT / tokens-per-second / wire-byte
+histograms via the ``STATS`` RPC), and — with engine ``preemption=True``
+— priority eviction of low-priority slots under pool oversubscription.
+
+See ``src/repro/frontdoor/README.md`` for the architecture sketch (frame
+format, admission states, preemption policy).
+"""
+from repro.frontdoor.admission import (ADMIT, BUSY_QUEUE, BUSY_TENANT,
+                                       AdmissionController, TenantPolicy)
+from repro.frontdoor.client import BusyError, FrontDoorClient, FrontDoorError
+from repro.frontdoor.protocol import (MsgType, ProtocolError, decode_frame,
+                                      encode_frame, pack_array, read_frame,
+                                      send_frame, unpack_array)
+from repro.frontdoor.qos import LogHistogram, QoSRegistry, TenantQoS
+from repro.frontdoor.server import (FrontDoorServer, canonical_codec_spec,
+                                    engine_codec_specs)
+
+__all__ = [
+    "MsgType", "ProtocolError", "encode_frame", "decode_frame",
+    "read_frame", "send_frame", "pack_array", "unpack_array",
+    "TenantPolicy", "AdmissionController", "ADMIT", "BUSY_TENANT",
+    "BUSY_QUEUE",
+    "LogHistogram", "TenantQoS", "QoSRegistry",
+    "FrontDoorServer", "canonical_codec_spec", "engine_codec_specs",
+    "FrontDoorClient", "FrontDoorError", "BusyError",
+]

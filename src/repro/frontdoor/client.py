@@ -1,0 +1,221 @@
+"""Asyncio client for the split-serving front door.
+
+The edge-client side of the wire protocol: one TCP connection, a HELLO
+handshake pinning the cut-layer codec spec, then any number of in-flight
+``SUBMIT``s multiplexed by request id.  ``BUSY`` replies (admission
+shedding) surface as :class:`BusyError` with the server's retry hint;
+:meth:`generate` wraps submit+wait in the retry loop an edge client would
+run.
+
+    client = await FrontDoorClient.open(host, port, tenant="edge-7",
+                                        codec="c3sl:R=4|int8")
+    out = await client.generate([1, 2, 3], max_new=16)
+    print(out["tokens"], out["ttft_s"])
+    await client.close()
+"""
+from __future__ import annotations
+
+import asyncio
+import itertools
+
+import numpy as np
+
+from repro.frontdoor import protocol as proto
+from repro.frontdoor.protocol import MsgType, ProtocolError
+
+
+class FrontDoorError(Exception):
+    """Server refused the connection or the request (not retriable)."""
+
+
+class BusyError(Exception):
+    """Admission shed the request; retry after ``retry_after_ms``."""
+
+    def __init__(self, reason: str, retry_after_ms: int):
+        super().__init__(f"server busy ({reason}); "
+                         f"retry in {retry_after_ms}ms")
+        self.reason = reason
+        self.retry_after_ms = retry_after_ms
+
+
+class FrontDoorClient:
+    def __init__(self, reader, writer, *, tenant: str, server_info: dict):
+        self._reader = reader
+        self._writer = writer
+        self.tenant = tenant
+        self.server_info = server_info       # HELLO_OK header
+        self._rids = itertools.count()
+        self._acks: dict[int, asyncio.Future] = {}
+        self._results: dict[int, asyncio.Future] = {}
+        self._stats: list[asyncio.Future] = []
+        self._bye: asyncio.Future | None = None
+        self._conn_error: Exception | None = None
+        self._read_task = asyncio.create_task(self._read_loop())
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+
+    @classmethod
+    async def open(cls, host: str, port: int, *, tenant: str,
+                   codec: str = "none") -> "FrontDoorClient":
+        reader, writer = await asyncio.open_connection(host, port)
+        await proto.send_frame(writer, MsgType.HELLO,
+                               {"tenant": tenant, "codec": codec})
+        frame = await proto.read_frame(reader)
+        if frame is None:
+            raise FrontDoorError("server closed the connection mid-handshake")
+        mtype, header, _, _ = frame
+        if mtype == MsgType.ERROR:
+            writer.close()
+            raise FrontDoorError(header.get("reason", "handshake refused"))
+        if mtype != MsgType.HELLO_OK:
+            writer.close()
+            raise FrontDoorError(f"expected HELLO_OK, got {mtype.name}")
+        return cls(reader, writer, tenant=tenant, server_info=header)
+
+    async def close(self):
+        """BYE handshake, then tear the connection down."""
+        if self._bye is None and self._conn_error is None:
+            self._bye = asyncio.get_running_loop().create_future()
+            try:
+                await proto.send_frame(self._writer, MsgType.BYE, {})
+                await asyncio.wait_for(asyncio.shield(self._bye), timeout=10)
+            except (ConnectionError, asyncio.TimeoutError):
+                pass
+        self._read_task.cancel()
+        try:
+            await self._read_task
+        except (asyncio.CancelledError, Exception):
+            pass
+        self._writer.close()
+        try:
+            await self._writer.wait_closed()
+        except Exception:
+            pass
+
+    # ------------------------------------------------------------------
+    # RPCs
+    # ------------------------------------------------------------------
+
+    async def submit(self, prompt, *, max_new: int = 16,
+                     priority: int | None = None) -> int:
+        """One SUBMIT; returns the rid once ACCEPTED.  Raises BusyError on
+        admission shedding, FrontDoorError on a server-side refusal."""
+        self._check_conn()
+        rid = next(self._rids)
+        header = {"rid": rid, "max_new": max_new}
+        if priority is not None:
+            header["priority"] = priority
+        arr_header, payload = proto.pack_array(
+            np.asarray(list(prompt), dtype=np.int32))
+        header.update(arr_header)
+        loop = asyncio.get_running_loop()
+        self._acks[rid] = loop.create_future()
+        self._results[rid] = loop.create_future()
+        await proto.send_frame(self._writer, MsgType.SUBMIT, header, payload)
+        try:
+            await self._acks[rid]
+        except BaseException:
+            self._results.pop(rid, None)
+            raise
+        finally:
+            self._acks.pop(rid, None)
+        return rid
+
+    async def result(self, rid: int) -> dict:
+        """Await one rid's RESULT: {"tokens", "ttft_s", "evictions"}."""
+        fut = self._results[rid]
+        try:
+            return await fut
+        finally:
+            self._results.pop(rid, None)
+
+    async def generate(self, prompt, *, max_new: int = 16,
+                       priority: int | None = None, retries: int = 64,
+                       backoff_s: float = 0.02) -> dict:
+        """submit + result with the BUSY retry loop an edge client runs."""
+        for attempt in range(retries):
+            try:
+                rid = await self.submit(prompt, max_new=max_new,
+                                        priority=priority)
+                break
+            except BusyError as e:
+                await asyncio.sleep(max(e.retry_after_ms / 1e3,
+                                        backoff_s * (attempt + 1)))
+        else:
+            raise FrontDoorError(f"server still busy after {retries} tries")
+        return await self.result(rid)
+
+    async def stats(self) -> dict:
+        """The server's per-tenant QoS + engine counters snapshot."""
+        self._check_conn()
+        fut = asyncio.get_running_loop().create_future()
+        self._stats.append(fut)
+        await proto.send_frame(self._writer, MsgType.STATS, {})
+        return await fut
+
+    # ------------------------------------------------------------------
+    # frame dispatch
+    # ------------------------------------------------------------------
+
+    def _check_conn(self):
+        if self._conn_error is not None:
+            raise FrontDoorError(f"connection dead: {self._conn_error}")
+
+    async def _read_loop(self):
+        try:
+            while True:
+                frame = await proto.read_frame(self._reader)
+                if frame is None:
+                    raise ConnectionError("server closed the connection")
+                self._dispatch(*frame[:3])
+        except asyncio.CancelledError:
+            raise
+        except Exception as e:
+            self._conn_error = e
+            for fut in (*self._acks.values(), *self._results.values(),
+                        *self._stats,
+                        *((self._bye,) if self._bye else ())):
+                if not fut.done():
+                    fut.set_exception(FrontDoorError(str(e)))
+
+    def _dispatch(self, mtype: MsgType, header: dict, payload: bytes):
+        rid = header.get("rid")
+        if mtype == MsgType.ACCEPTED:
+            fut = self._acks.get(rid)
+            if fut and not fut.done():
+                fut.set_result(rid)
+        elif mtype == MsgType.BUSY:
+            fut = self._acks.get(rid)
+            self._results.pop(rid, None)
+            if fut and not fut.done():
+                fut.set_exception(BusyError(header.get("reason", "busy"),
+                                            header.get("retry_after_ms", 50)))
+        elif mtype == MsgType.RESULT:
+            fut = self._results.get(rid)
+            if fut and not fut.done():
+                tokens = proto.unpack_array(header, payload)
+                fut.set_result({"tokens": [int(t) for t in tokens],
+                                "ttft_s": header.get("ttft_s"),
+                                "evictions": header.get("evictions", 0)})
+        elif mtype == MsgType.ERROR:
+            err = FrontDoorError(header.get("reason", "server error"))
+            if rid is not None:
+                for book in (self._acks, self._results):
+                    fut = book.get(rid)
+                    if fut and not fut.done():
+                        fut.set_exception(err)
+                self._results.pop(rid, None)
+            else:
+                raise ProtocolError(str(err))   # connection-level failure
+        elif mtype == MsgType.STATS_OK:
+            if self._stats:
+                fut = self._stats.pop(0)
+                if not fut.done():
+                    fut.set_result(header.get("stats", {}))
+        elif mtype == MsgType.BYE_OK:
+            if self._bye and not self._bye.done():
+                self._bye.set_result(True)
+        else:
+            raise ProtocolError(f"unexpected {mtype.name} frame from server")

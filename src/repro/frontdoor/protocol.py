@@ -1,0 +1,175 @@
+"""Wire protocol for the split-serving front door.
+
+Length-prefixed frames over a byte stream (asyncio TCP / loopback):
+
+    +---------+------+------+----------------+------------------+
+    | !I len  | !B t | !I h | header (JSON)  | payload (raw)    |
+    +---------+------+------+----------------+------------------+
+
+``len`` counts every byte after the length field itself; ``t`` is the
+:class:`MsgType`; ``h`` is the JSON header's byte length.  The header is a
+flat JSON object (tenant id, codec spec string, request id, dtype, shape,
+...); the payload is raw little-endian array bytes described by the
+header's ``dtype``/``shape`` fields.  Anything malformed — bad magic-free
+framing is impossible, but truncated frames, oversized lengths, non-JSON
+headers, dtype/shape vs payload-size mismatches — raises
+:class:`ProtocolError` and the connection dies LOUDLY instead of decoding
+garbage.
+
+The handshake (``HELLO``) carries the client's cut-layer codec spec; the
+server refuses (``ERROR`` + close) any client whose canonical spec does
+not match the engine's, so a client/server codec mismatch is a connect
+error, not silently mis-decoded activations.
+
+Message flow::
+
+    client                             server
+      HELLO {tenant, codec}       ->
+                                  <-   HELLO_OK {codec, num_slots, ...}
+                                       (or ERROR {reason} + close)
+      SUBMIT {rid, max_new, ...}
+             + int32 token payload ->
+                                  <-   ACCEPTED {rid}
+                                       | BUSY {rid, retry_after_ms}
+                                       | ERROR {rid, reason}
+                                  <-   RESULT {rid, ttft_s, ...}
+                                       + int32 token payload
+      STATS {}                    ->
+                                  <-   STATS_OK {stats}
+      BYE {}                      ->
+                                  <-   BYE_OK {} + close
+"""
+from __future__ import annotations
+
+import asyncio
+import enum
+import json
+import struct
+
+import numpy as np
+
+# 64 MiB: far above any cut-layer payload this repo ships, small enough
+# that a corrupted length prefix cannot make the reader buffer gigabytes.
+MAX_FRAME_BYTES = 64 * 1024 * 1024
+
+_LEN = struct.Struct("!I")
+_HDR = struct.Struct("!BI")      # msg type, header length
+
+
+class ProtocolError(Exception):
+    """Malformed frame / header / payload — the connection must die."""
+
+
+class MsgType(enum.IntEnum):
+    HELLO = 1
+    HELLO_OK = 2
+    SUBMIT = 3
+    ACCEPTED = 4
+    BUSY = 5
+    RESULT = 6
+    ERROR = 7
+    STATS = 8
+    STATS_OK = 9
+    BYE = 10
+    BYE_OK = 11
+
+
+def encode_frame(mtype: MsgType, header: dict, payload: bytes = b"") -> bytes:
+    """One wire frame: length prefix, type, JSON header, raw payload."""
+    hdr = json.dumps(header, separators=(",", ":")).encode("utf-8")
+    body_len = _HDR.size + len(hdr) + len(payload)
+    if body_len > MAX_FRAME_BYTES:
+        raise ProtocolError(f"frame of {body_len} bytes exceeds the "
+                            f"{MAX_FRAME_BYTES}-byte frame limit")
+    return b"".join((_LEN.pack(body_len),
+                     _HDR.pack(int(mtype), len(hdr)), hdr, payload))
+
+
+def decode_frame(body: bytes) -> tuple[MsgType, dict, bytes]:
+    """Decode one frame body (everything after the length prefix)."""
+    if len(body) < _HDR.size:
+        raise ProtocolError(f"frame body of {len(body)} bytes is shorter "
+                            f"than the {_HDR.size}-byte type+header prefix")
+    t, hlen = _HDR.unpack_from(body)
+    try:
+        mtype = MsgType(t)
+    except ValueError as e:
+        raise ProtocolError(f"unknown message type {t}") from e
+    if _HDR.size + hlen > len(body):
+        raise ProtocolError(f"header length {hlen} overruns the "
+                            f"{len(body)}-byte frame body")
+    try:
+        header = json.loads(body[_HDR.size:_HDR.size + hlen])
+    except ValueError as e:
+        raise ProtocolError(f"non-JSON header in {mtype.name} frame") from e
+    if not isinstance(header, dict):
+        raise ProtocolError(f"{mtype.name} header must be a JSON object, "
+                            f"got {type(header).__name__}")
+    return mtype, header, body[_HDR.size + hlen:]
+
+
+async def read_frame(reader: asyncio.StreamReader):
+    """Read one frame; returns (mtype, header, payload, wire_bytes) or
+    None on a clean EOF at a frame boundary."""
+    try:
+        raw_len = await reader.readexactly(_LEN.size)
+    except (asyncio.IncompleteReadError, ConnectionResetError):
+        return None                          # peer closed between frames
+    (body_len,) = _LEN.unpack(raw_len)
+    if body_len > MAX_FRAME_BYTES:
+        raise ProtocolError(f"declared frame length {body_len} exceeds the "
+                            f"{MAX_FRAME_BYTES}-byte frame limit")
+    try:
+        body = await reader.readexactly(body_len)
+    except asyncio.IncompleteReadError as e:
+        raise ProtocolError(f"connection died {len(e.partial)} bytes into a "
+                            f"{body_len}-byte frame body") from e
+    mtype, header, payload = decode_frame(body)
+    return mtype, header, payload, _LEN.size + body_len
+
+
+async def send_frame(writer: asyncio.StreamWriter, mtype: MsgType,
+                     header: dict, payload: bytes = b"") -> int:
+    """Write one frame and drain; returns the bytes put on the wire."""
+    frame = encode_frame(mtype, header, payload)
+    writer.write(frame)
+    await writer.drain()
+    return len(frame)
+
+
+# ---------------------------------------------------------------------------
+# array payloads: dtype + shape ride in the header, bytes in the payload
+# ---------------------------------------------------------------------------
+
+_WIRE_DTYPES = ("int32", "int8", "uint8", "float32", "float16")
+
+
+def pack_array(arr) -> tuple[dict, bytes]:
+    """Header fields + payload bytes for an ndarray (C-order, little-end)."""
+    arr = np.ascontiguousarray(arr)
+    if arr.dtype.name not in _WIRE_DTYPES:
+        raise ProtocolError(f"dtype {arr.dtype.name!r} is not a wire dtype "
+                            f"(expected one of {_WIRE_DTYPES})")
+    return ({"dtype": arr.dtype.name, "shape": list(arr.shape)},
+            arr.tobytes())
+
+
+def unpack_array(header: dict, payload: bytes) -> np.ndarray:
+    """Rebuild the array a frame carries, failing LOUDLY on any mismatch
+    between the declared dtype/shape and the actual payload size."""
+    dtype, shape = header.get("dtype"), header.get("shape")
+    if dtype not in _WIRE_DTYPES:
+        raise ProtocolError(f"header dtype {dtype!r} is not a wire dtype "
+                            f"(expected one of {_WIRE_DTYPES})")
+    if (not isinstance(shape, list)
+            or not all(isinstance(d, int) and d >= 0 for d in shape)):
+        raise ProtocolError(f"header shape {shape!r} is not a list of "
+                            "non-negative ints")
+    dt = np.dtype(dtype)
+    want = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+    if want != len(payload):
+        raise ProtocolError(
+            f"payload size mismatch: header {dtype}{tuple(shape)} needs "
+            f"{want} bytes but the frame carries {len(payload)} — refusing "
+            "to decode garbage (codec/dtype drift between client and server?)")
+    return np.frombuffer(payload, dtype=dt).reshape(shape)

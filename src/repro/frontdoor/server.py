@@ -1,0 +1,342 @@
+"""The multi-tenant split-serving front door server.
+
+Turns an in-process :class:`repro.serving.engine.BatchedEngine` into a
+networked server: N concurrent client connections stream length-prefixed
+frames (``repro.frontdoor.protocol``) over asyncio TCP/loopback, a
+continuous batcher drains accepted requests into engine slots, and
+per-tenant QoS accounting (``repro.frontdoor.qos``) is exposed through a
+``STATS`` RPC.
+
+Concurrency model: everything — connection handlers, admission, engine
+stepping — runs on ONE event loop thread.  Handlers only run between
+engine dispatches (``engine.tick()`` is synchronous), so no locks guard
+the engine or the books; the engine must not be driven by anything else
+while the server owns it.  ``auto_tick=False`` parks the compute loop so
+tests can stage every submission first and then :meth:`drain`
+deterministically — that is what makes the loopback-vs-direct
+bit-identical equivalence tests possible under a batch-wise codec (slot
+occupancy affects C3-SL superposition cross-talk, so the dispatch
+schedule must match exactly).
+
+The HELLO handshake pins the cut-layer codec contract: the client's spec
+string is canonicalized exactly like the engine's (same registry build,
+same D, same slot clamp) and must equal the engine's canonical spec — or,
+for an adaptive engine, may name one of its R buckets (the server's
+controller owns the schedule; a bucket client is pinned to a compatible
+wire format).  Any other spec is refused with ``ERROR`` at connect time:
+codec mismatch is a handshake failure, never silently decoded garbage.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import itertools
+import time
+
+import numpy as np
+
+from repro import codecs as codecs_lib
+from repro.frontdoor import protocol as proto
+from repro.frontdoor.admission import (ADMIT, BUSY_QUEUE, AdmissionController)
+from repro.frontdoor.protocol import MsgType, ProtocolError
+from repro.frontdoor.qos import QoSRegistry
+from repro.serving.engine import BatchedEngine, Request
+
+
+def canonical_codec_spec(spec, D: int, num_slots: int) -> str:
+    """The canonical form of a cut-layer codec spec as the ENGINE would
+    serve it: link specs resolve to their forward channel, runtime dims
+    filled (D), R clamped to the slot count, then the registry's
+    round-trip spec string.  Two specs are wire-compatible iff their
+    canonical forms are equal."""
+    from repro import transport
+    if spec is None or spec == "none":
+        return "none"
+    if transport.is_link_spec(spec):
+        spec = transport.build_link(spec, D=D).fwd.codec
+    codec = codecs_lib.build(spec, D=D) if isinstance(spec, str) else spec
+    return codecs_lib.clamp_R(codec, num_slots).spec()
+
+
+def engine_codec_specs(engine: BatchedEngine) -> tuple[str, set[str]]:
+    """The engine's canonical spec plus the set of additionally-compatible
+    specs (an adaptive engine's per-bucket static specs)."""
+    if engine.codec is None:
+        return "none", set()
+    spec = engine.codec.spec()
+    compat = set()
+    if isinstance(engine.codec, codecs_lib.AdaptiveC3SL):
+        compat = {c.spec() for c in engine.codec.buckets.values()}
+    return spec, compat
+
+
+@dataclasses.dataclass
+class _Conn:
+    writer: asyncio.StreamWriter
+    tenant: str
+    open: bool = True
+
+
+@dataclasses.dataclass
+class _Route:
+    """Where a submitted request's result goes, plus its QoS timestamps."""
+    conn: _Conn
+    rid: int
+    tenant: str
+    bytes_in: int            # SUBMIT frame bytes (per-request wire cost)
+
+
+class FrontDoorServer:
+    def __init__(self, engine: BatchedEngine, *, host: str = "127.0.0.1",
+                 port: int = 0, admission: AdmissionController | None = None,
+                 qos: QoSRegistry | None = None, auto_tick: bool = True,
+                 idle_sleep_s: float = 0.002, busy_retry_ms: int = 25):
+        self.engine = engine
+        self.host, self.port = host, port
+        self.admission = admission or AdmissionController()
+        self.qos = qos or QoSRegistry()
+        self.auto_tick = auto_tick
+        self.idle_sleep_s = idle_sleep_s
+        self.busy_retry_ms = busy_retry_ms
+        self._spec, self._compat_specs = engine_codec_specs(engine)
+        self._uids = itertools.count()
+        self._routes: dict[int, _Route] = {}
+        self._server: asyncio.base_events.Server | None = None
+        self._tick_task: asyncio.Task | None = None
+        self._closing = False
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+
+    async def start(self) -> tuple[str, int]:
+        self._server = await asyncio.start_server(self._handle, self.host,
+                                                  self.port)
+        self.host, self.port = self._server.sockets[0].getsockname()[:2]
+        if self.auto_tick:
+            self._tick_task = asyncio.create_task(self._tick_loop())
+        return self.host, self.port
+
+    async def stop(self, *, drain: bool = True):
+        """Clean shutdown: optionally finish all admitted work (results
+        delivered), then stop ticking and close the listener."""
+        if drain:
+            await self.drain()
+        self._closing = True
+        if self._tick_task is not None:
+            self._tick_task.cancel()
+            try:
+                await self._tick_task
+            except asyncio.CancelledError:
+                pass
+            self._tick_task = None
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+
+    async def drain(self):
+        """Tick until the engine is idle and every finished request has
+        been delivered (or its connection is gone)."""
+        eng = self.engine
+        while eng.queue or eng.active or eng.finished or self._routes:
+            worked = await self._pump()
+            if not worked:
+                if not (eng.queue or eng.active or eng.finished):
+                    break                      # routes of dead conns only
+                await asyncio.sleep(0)
+
+    async def _tick_loop(self):
+        while not self._closing:
+            worked = await self._pump()
+            # yield even after useful work so handlers get to run between
+            # dispatches; park on the idle sleep otherwise
+            await asyncio.sleep(0 if worked else self.idle_sleep_s)
+
+    async def _pump(self) -> bool:
+        """One engine tick plus result delivery; True if anything moved."""
+        eng = self.engine
+        worked = False
+        if eng.queue or eng.active:
+            worked = eng.tick()
+        worked |= await self._deliver()
+        return worked
+
+    async def _deliver(self) -> bool:
+        eng = self.engine
+        if not eng.finished:
+            return False
+        finished, eng.finished = list(eng.finished), []
+        now = time.monotonic()
+        for req in finished:
+            route = self._routes.pop(req.uid, None)
+            if route is None:
+                continue                      # not ours (direct submit)
+            self.admission.release(route.tenant)
+            tq = self.qos.tenant(route.tenant)
+            ttft = (req.t_first - req.t_submit
+                    if req.t_first is not None else None)
+            decode_s = (now - req.t_first) if req.t_first is not None else 0.0
+            header = {"rid": route.rid, "ttft_s": ttft,
+                      "evictions": req.evictions}
+            arr_header, payload = proto.pack_array(
+                np.asarray(req.out, dtype=np.int32))
+            header.update(arr_header)
+            sent = 0
+            if route.conn.open:
+                try:
+                    sent = await proto.send_frame(route.conn.writer,
+                                                  MsgType.RESULT, header,
+                                                  payload)
+                    tq.bytes_out += sent
+                except (ConnectionError, RuntimeError):
+                    route.conn.open = False
+            tq.record_result(ttft_s=ttft, gen_tokens=len(req.out),
+                             decode_s=decode_s,
+                             wire_bytes=route.bytes_in + sent,
+                             evictions=req.evictions)
+        return True
+
+    # ------------------------------------------------------------------
+    # connection handling
+    # ------------------------------------------------------------------
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter):
+        conn: _Conn | None = None
+        try:
+            conn = await self._handshake(reader, writer)
+            if conn is None:
+                return
+            while True:
+                frame = await proto.read_frame(reader)
+                if frame is None:
+                    break                     # peer went away
+                mtype, header, payload, nbytes = frame
+                self.qos.tenant(conn.tenant).bytes_in += nbytes
+                if mtype == MsgType.SUBMIT:
+                    await self._submit(conn, header, payload, nbytes)
+                elif mtype == MsgType.STATS:
+                    out = await proto.send_frame(
+                        conn.writer, MsgType.STATS_OK,
+                        {"stats": self.stats()})
+                    self.qos.tenant(conn.tenant).bytes_out += out
+                elif mtype == MsgType.BYE:
+                    await proto.send_frame(conn.writer, MsgType.BYE_OK, {})
+                    break
+                else:
+                    raise ProtocolError(f"unexpected {mtype.name} frame "
+                                        "after handshake")
+        except ProtocolError as e:
+            # fail LOUDLY, then kill the connection: a framing/dtype error
+            # means client and server no longer agree on the wire format
+            try:
+                await proto.send_frame(writer, MsgType.ERROR,
+                                       {"reason": str(e)})
+            except (ConnectionError, RuntimeError):
+                pass
+        except (ConnectionError, asyncio.CancelledError):
+            pass
+        finally:
+            if conn is not None:
+                conn.open = False
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except Exception:
+                pass
+
+    async def _handshake(self, reader, writer) -> _Conn | None:
+        frame = await proto.read_frame(reader)
+        if frame is None:
+            return None
+        mtype, header, _, nbytes = frame
+        if mtype != MsgType.HELLO:
+            raise ProtocolError(f"expected HELLO, got {mtype.name}")
+        tenant = header.get("tenant")
+        if not isinstance(tenant, str) or not tenant:
+            raise ProtocolError("HELLO carries no tenant id")
+        spec = header.get("codec", "none")
+        try:
+            canon = canonical_codec_spec(spec, self.engine.cfg.d_model,
+                                         self.engine.num_slots)
+        except Exception as e:
+            raise ProtocolError(f"unbuildable codec spec {spec!r}: {e}")
+        if canon != self._spec and canon not in self._compat_specs:
+            compat = sorted({self._spec, *self._compat_specs})
+            raise ProtocolError(
+                f"codec mismatch: client {spec!r} (canonical {canon!r}) vs "
+                f"engine {self._spec!r}; compatible specs: {compat} — "
+                "refusing the connection rather than decoding garbage")
+        conn = _Conn(writer=writer, tenant=tenant)
+        tq = self.qos.tenant(tenant)
+        tq.bytes_in += nbytes
+        tq.bytes_out += await proto.send_frame(
+            writer, MsgType.HELLO_OK,
+            {"codec": self._spec, "num_slots": self.engine.num_slots,
+             "max_len": self.engine.max_len,
+             "kv_layout": self.engine.kv_layout,
+             "preemption": self.engine.preemption})
+        return conn
+
+    async def _submit(self, conn: _Conn, header: dict, payload: bytes,
+                      nbytes: int):
+        tq = self.qos.tenant(conn.tenant)
+        rid = header.get("rid")
+        if not isinstance(rid, int):
+            raise ProtocolError("SUBMIT carries no integer rid")
+        tokens = proto.unpack_array(header, payload)
+        if tokens.ndim != 1 or tokens.dtype.name != "int32":
+            raise ProtocolError(f"SUBMIT payload must be a 1-D int32 token "
+                                f"array, got {tokens.dtype.name}"
+                                f"{tokens.shape}")
+        verdict = self.admission.try_admit(conn.tenant)
+        if verdict != ADMIT:
+            tq.busy_rejections += 1
+            retry = self.busy_retry_ms * (4 if verdict == BUSY_QUEUE else 1)
+            tq.bytes_out += await proto.send_frame(
+                conn.writer, MsgType.BUSY,
+                {"rid": rid, "reason": verdict, "retry_after_ms": retry})
+            return
+        policy = self.admission.policy(conn.tenant)
+        req = Request(uid=next(self._uids),
+                      prompt=[int(t) for t in tokens],
+                      max_new_tokens=int(header.get("max_new", 16)),
+                      priority=int(header.get("priority", policy.priority)))
+        try:
+            self.engine.submit(req)
+        except ValueError as e:
+            # engine-level refusal (empty/overlong prompt, footprint above
+            # the whole pool): an ERROR the client must not retry verbatim
+            self.admission.release(conn.tenant)
+            tq.errors += 1
+            tq.bytes_out += await proto.send_frame(
+                conn.writer, MsgType.ERROR, {"rid": rid, "reason": str(e)})
+            return
+        self._routes[req.uid] = _Route(conn=conn, rid=rid,
+                                       tenant=conn.tenant, bytes_in=nbytes)
+        tq.bytes_out += await proto.send_frame(conn.writer, MsgType.ACCEPTED,
+                                               {"rid": rid})
+
+    # ------------------------------------------------------------------
+    # stats
+    # ------------------------------------------------------------------
+
+    def stats(self) -> dict:
+        """The STATS RPC body: per-tenant QoS plus the engine's serving
+        counters (cut-layer wire bytes, served-R schedule, eviction and
+        early-exit counts, page-pool occupancy)."""
+        eng = self.engine
+        return {"tenants": self.qos.snapshot(),
+                "engine": {**eng.stats,
+                           "r_served": {str(k): v
+                                        for k, v in sorted(
+                                            eng.r_served.items())},
+                           "codec": self._spec,
+                           "active_slots": eng.active,
+                           "queued": len(eng.queue),
+                           "pool": eng.pool_accounting()},
+                "admission": {"inflight_total": self.admission.inflight_total,
+                              "inflight": dict(self.admission.inflight),
+                              "max_queue_depth":
+                                  self.admission.max_queue_depth}}

@@ -11,6 +11,11 @@ batch).
     PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \
         --engine --requests 16 --prompt-len 64 --max-new 16 \
         --chunk-size 16 --codec "c3sl:R=4|int8"
+
+    # multi-tenant networked front door (see src/repro/frontdoor/README.md)
+    PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b --reduced \
+        --frontdoor --port 8787 --kv-layout paged --preemption \
+        --codec "adaptive:c3sl:R=4,min_R=2|int8"
 """
 from __future__ import annotations
 
@@ -42,24 +47,8 @@ def _serving_codec(spec: str, D: int, R: int, batch: int):
 
 def _run_engine(cfg, params, args):
     """Continuous batching: chunked prefill + device-resident stepping."""
-    from repro.serving.engine import BatchedEngine, Request
-    codec = None
-    if args.codec != "none":
-        # same spec defaults as the lockstep path: --R fills specs omitting R
-        codec = _serving_codec(args.codec, cfg.d_model, args.R, args.batch)
-    eng = BatchedEngine(params, cfg, num_slots=args.batch,
-                        max_len=args.cache_len, codec=codec,
-                        codec_params=(codec.init(jax.random.PRNGKey(7))
-                                      if codec is not None else None),
-                        greedy=args.greedy, seed=args.seed,
-                        prefill_mode=args.prefill_mode,
-                        chunk_size=args.chunk_size, sync_every=args.sync_every,
-                        kv_layout=args.kv_layout, page_size=args.page_size,
-                        num_pages=args.num_pages, interleave=args.interleave)
-    if args.pin_R is not None:
-        if not isinstance(eng.codec, codecs.AdaptiveC3SL):
-            raise SystemExit("--pin-R needs an 'adaptive:...' --codec spec")
-        eng.codec.pin(args.pin_R)
+    from repro.serving.engine import Request
+    eng = _build_engine(cfg, params, args)
     rng = jax.random.PRNGKey(args.seed + 1)
     prompts = jax.random.randint(rng, (args.requests, args.prompt_len), 0,
                                  cfg.vocab_size)
@@ -94,6 +83,65 @@ def _run_engine(cfg, params, args):
           f"mean TTFT {sum(ttfts) / max(len(ttfts), 1) * 1e3:.1f}ms; "
           f"dispatches {eng.stats['dispatches']}")
     print("sample output:", done[0].out[:16])
+
+
+def _build_engine(cfg, params, args):
+    from repro.serving.engine import BatchedEngine
+    codec = None
+    if args.codec != "none":
+        codec = _serving_codec(args.codec, cfg.d_model, args.R, args.batch)
+    eng = BatchedEngine(params, cfg, num_slots=args.batch,
+                        max_len=args.cache_len, codec=codec,
+                        codec_params=(codec.init(jax.random.PRNGKey(7))
+                                      if codec is not None else None),
+                        greedy=args.greedy, seed=args.seed,
+                        prefill_mode=args.prefill_mode,
+                        chunk_size=args.chunk_size, sync_every=args.sync_every,
+                        kv_layout=args.kv_layout, page_size=args.page_size,
+                        num_pages=args.num_pages, interleave=args.interleave,
+                        preemption=args.preemption)
+    if args.pin_R is not None:
+        if not isinstance(eng.codec, codecs.AdaptiveC3SL):
+            raise SystemExit("--pin-R needs an 'adaptive:...' --codec spec")
+        eng.codec.pin(args.pin_R)
+    return eng
+
+
+def _run_frontdoor(cfg, params, args):
+    """Serve the engine over the multi-tenant front door (TCP loopback by
+    default) until interrupted.  Clients connect with
+    ``repro.frontdoor.FrontDoorClient`` or anything speaking the frame
+    protocol in ``src/repro/frontdoor/README.md``."""
+    import asyncio
+
+    from repro.frontdoor import (AdmissionController, FrontDoorServer,
+                                 TenantPolicy)
+    eng = _build_engine(cfg, params, args)
+    server = FrontDoorServer(
+        eng, host=args.host, port=args.port,
+        admission=AdmissionController(
+            max_queue_depth=args.max_queue_depth,
+            default_policy=TenantPolicy(max_inflight=args.max_inflight)))
+
+    async def serve():
+        host, port = await server.start()
+        spec = eng.codec.spec() if eng.codec is not None else "none"
+        print(f"[serve] front door on {host}:{port} arch={cfg.name} "
+              f"slots={args.batch} kv={args.kv_layout} codec={spec} "
+              f"preemption={args.preemption} (ctrl-c to stop)", flush=True)
+        try:
+            await asyncio.Event().wait()
+        finally:
+            await server.stop(drain=False)
+
+    try:
+        asyncio.run(serve())
+    except KeyboardInterrupt:
+        pass
+    print(f"[serve] front door stopped; engine stats: "
+          f"dispatches={eng.stats['dispatches']} "
+          f"evictions={eng.stats['evictions']} "
+          f"wire fwd {eng.stats['wire_bytes_fwd']:,d} B")
 
 
 def main():
@@ -144,6 +192,24 @@ def main():
                     help="decode steps interleaved after each prefill chunk "
                          "(0 = prefill admitted prompts to completion; the "
                          "TTFT vs inter-token-latency knob)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="evict lower-priority slots (pages freed, request "
+                         "re-queued for re-prefill) instead of FIFO-blocking "
+                         "when the queue head cannot be admitted "
+                         "(chunked prefill only)")
+    ap.add_argument("--frontdoor", action="store_true",
+                    help="serve the engine over the multi-tenant TCP front "
+                         "door (repro.frontdoor) instead of running a local "
+                         "request batch")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="front door bind address")
+    ap.add_argument("--port", type=int, default=8787,
+                    help="front door port (0 = ephemeral)")
+    ap.add_argument("--max-inflight", type=int, default=8,
+                    help="per-tenant in-flight request cap (front door)")
+    ap.add_argument("--max-queue-depth", type=int, default=64,
+                    help="server-wide backlog cap before BUSY shedding "
+                         "(front door)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -155,6 +221,9 @@ def main():
     rng = jax.random.PRNGKey(args.seed)
     params = lm_lib.init_lm_params(rng, cfg)
 
+    if args.frontdoor:
+        _run_frontdoor(cfg, params, args)
+        return
     if args.engine:
         _run_engine(cfg, params, args)
         return

@@ -66,9 +66,27 @@ kept aligned with the train-side protocol.
 
 Paged-pool utilization: when the page pool is starving the head of the
 queue, decode windows exit device-side the moment ANY slot finishes
-(``stats["eos_early_exits"]``), so the boundary frees that slot's page
-reservation immediately instead of holding it for the rest of the window;
+(``stats["eos_early_exits"]``) and the finished slot is retired FROM THAT
+HOST SYNC — outputs captured at their actual emitted length, the whole
+worst-case ``prompt + max_new`` page reservation freed — instead of the
+reservation being held until the next boundary's retire sweep;
 ``pool_accounting()`` exposes the free/in-use split the tests pin.
+
+Slot preemption (``preemption=True``, chunked mode): when the head of the
+queue is blocked on pages (or on a free slot) and outranks running work
+(``Request.priority``), the boundary EVICTS strictly-lower-priority slots
+— least progress first — frees their reservations, and re-queues the
+evicted requests right behind the preempting head.  A re-admitted request
+re-prefills its prompt plus the tokens it had already emitted, so greedy
+output is bit-identical to an uninterrupted run (pinned in
+tests/test_preemption.py); the price is the re-prefill compute.  This
+replaces the pure FIFO-blocking reservation policy under oversubscription:
+free pages no longer sit idle behind a blocked high-priority head.
+
+``tick()`` is the incremental form of ``run()`` — one boundary + one
+prefill/decode iteration + one boundary — for callers that interleave
+engine work with other activity (the ``repro.frontdoor`` server's asyncio
+loop, open-loop arrival benchmarks).
 
 The C3-SL codec applies to each step's cut-layer features across the
 active slots; on the chunked path the features are grouped PER POSITION
@@ -104,10 +122,12 @@ class Request:
     uid: int
     prompt: list            # token ids
     max_new_tokens: int = 16
+    priority: int = 0       # higher preempts lower (engine preemption=True)
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     t_submit: float = 0.0   # set by submit()
     t_first: float | None = None  # first token observed (TTFT = t_first - t_submit)
+    evictions: int = 0      # times this request was preempted mid-flight
 
 
 @dataclasses.dataclass
@@ -115,7 +135,12 @@ class _Slot:
     req: Request | None = None
     pos: int = 0             # next cache position to write (legacy mode)
     in_prompt: int = 0       # tokens of the prompt already ingested (legacy)
-    ingested: int = 0        # tokens of the prompt already ingested (chunked)
+    ingested: int = 0        # tokens of the feed already ingested (chunked)
+    # what this residency must ingest before decoding: the prompt, plus —
+    # after an eviction — the tokens already emitted, so a re-admitted
+    # request re-prefills its full generated-so-far context and greedy
+    # decode continues exactly where it left off
+    feed: list = dataclasses.field(default_factory=list)
     pages: list = dataclasses.field(default_factory=list)  # owned linear pages
 
 
@@ -126,7 +151,8 @@ class BatchedEngine:
                  seed: int = 0, prefill_mode: str = "chunked",
                  chunk_size: int = 16, sync_every: int = 8,
                  kv_layout: str = "contiguous", page_size: int = 16,
-                 num_pages: int | None = None, interleave: int = 0):
+                 num_pages: int | None = None, interleave: int = 0,
+                 preemption: bool = False):
         # `codec` may be a ready codec object, a registry spec string
         # (e.g. "c3sl:R=4|int8"), or a per-direction link spec/SplitLink
         # ("c3sl:R=8|int8 >> bwd:c3sl:R=4").  Serving is forward-only —
@@ -167,6 +193,11 @@ class BatchedEngine:
         if kv_layout not in ("contiguous", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r} "
                              "(expected 'contiguous' | 'paged')")
+        if preemption and prefill_mode != "chunked":
+            raise ValueError("preemption requires prefill_mode='chunked' "
+                             "(eviction re-queues the request for chunked "
+                             "re-prefill of its generated context)")
+        self.preemption = preemption
         self.codec = codec
         self.codec_params = codec_params
         self.params = params
@@ -234,7 +265,8 @@ class BatchedEngine:
         # them for the rest of the window).
         self.stats = {"dispatches": 0, "decode_steps": 0, "prefill_chunks": 0,
                       "payload_wire_bytes": 0, "wire_bytes_fwd": 0,
-                      "wire_bytes_bwd": 0, "eos_early_exits": 0}
+                      "wire_bytes_bwd": 0, "eos_early_exits": 0,
+                      "evictions": 0}
         # the served R schedule under an adaptive codec, as {R: count} with
         # one count per EXECUTED decode step + one per prefill chunk, so
         # total() == decode_steps + prefill_chunks (not dispatches — a
@@ -493,24 +525,45 @@ class BatchedEngine:
             self._boundary()
             if not (self.queue or self.active):
                 break
-            if self._pending_prefill():
-                self._prefill_one_chunk()
-                if self.interleave == 0:
-                    # PR2 behavior: admitted prompts prefill to completion
-                    while self._pending_prefill():
-                        self._prefill_one_chunk()
-                else:
-                    # the host knows which slots have finished their prompt —
-                    # don't dispatch a window that would exit at step 0
-                    if any(s.req is not None
-                           and s.ingested >= len(s.req.prompt)
-                           for s in self.slots):
-                        steps += self._decode_window(
-                            min(self.interleave, max_steps - steps))
-                    continue
-            steps += self._decode_window(min(self.sync_every, max_steps - steps))
+            steps += self._tick_body(max_steps - steps)
         self._boundary()
         return self.finished
+
+    def tick(self) -> bool:
+        """One admission/compute iteration — the incremental form of
+        :meth:`run` for callers that interleave engine work with other
+        activity (the front-door server's asyncio loop, open-loop arrival
+        benchmarks).  Runs one boundary, then at most one prefill pass /
+        decode window, then a second boundary so finished requests land in
+        ``self.finished`` before control returns.  Returns False when the
+        engine is idle (no queued or resident work) — the caller's cue to
+        sleep instead of spinning."""
+        if self.prefill_mode == "decode":
+            return bool(self.step())
+        self._boundary()
+        if not (self.queue or self.active):
+            return False
+        self._tick_body(self.sync_every)
+        self._boundary()
+        return True
+
+    def _tick_body(self, budget: int) -> int:
+        """One scheduler iteration (between boundaries): prefill according
+        to the interleave policy, then decode.  Returns executed decode
+        steps (0 for a pure-prefill iteration)."""
+        if self._pending_prefill():
+            self._prefill_one_chunk()
+            if self.interleave != 0:
+                # the host knows which slots have finished their prompt —
+                # don't dispatch a window that would exit at step 0
+                if any(s.req is not None and s.ingested >= len(s.feed)
+                       for s in self.slots):
+                    return self._decode_window(min(self.interleave, budget))
+                return 0
+            # PR2 behavior: admitted prompts prefill to completion
+            while self._pending_prefill():
+                self._prefill_one_chunk()
+        return self._decode_window(min(self.sync_every, budget))
 
     # ------------------------------------------------------------------
     # fast path internals
@@ -533,15 +586,22 @@ class BatchedEngine:
         executed = int(i)
         self.stats["decode_steps"] += executed
         self._account_fwd_bytes(executed * self._step_wire_bytes())
-        if stop_on_done and executed < n and bool(np.any(np.asarray(
-                jax.device_get(self.state["active"]))
-                & ~np.asarray(jax.device_get(self.state["done"])))):
-            # a slot's EOS cut the window short while others were still
-            # live; the boundary that follows frees its pages immediately
-            # (instead of after n - executed more steps) so the starved
-            # head-of-queue request can admit.  The extra host sync only
-            # happens on the already-rare starved-pool early exit.
-            self.stats["eos_early_exits"] += 1
+        if stop_on_done and executed < n:
+            # a slot finished while the page pool was starving the head of
+            # the queue.  Retire it from THIS host sync: its outputs are
+            # captured at their actual emitted length and its whole
+            # PageAllocator reservation is freed right here, instead of the
+            # worst-case prompt+max_new pages staying held until the next
+            # retire sweep.  The extra device round-trip only happens on
+            # the already-rare starved-pool early exit.
+            st = {k: np.array(v)
+                  for k, v in jax.device_get(self.state).items()}
+            if bool(np.any(st["active"] & ~st["done"])):
+                # the early exit actually cut short a window that still had
+                # live slots (vs the batch simply draining)
+                self.stats["eos_early_exits"] += 1
+            if self._retire_done(st):
+                self.state = jax.device_put(st)
         if bucket is not None:
             self.r_served[bucket] += executed
         if executed:
@@ -568,7 +628,7 @@ class BatchedEngine:
                 "total": self.paged.num_pages}
 
     def _pending_prefill(self) -> bool:
-        return any(s.req is not None and s.ingested < len(s.req.prompt)
+        return any(s.req is not None and s.ingested < len(s.feed)
                    for s in self.slots)
 
     def _prefill_one_chunk(self):
@@ -581,13 +641,13 @@ class BatchedEngine:
         completes = np.zeros((B,), bool)
         any_rows = False
         for i, slot in enumerate(self.slots):
-            if slot.req is None or slot.ingested >= len(slot.req.prompt):
+            if slot.req is None or slot.ingested >= len(slot.feed):
                 continue
-            seg = slot.req.prompt[slot.ingested:slot.ingested + C]
+            seg = slot.feed[slot.ingested:slot.ingested + C]
             tokens[i, :len(seg)] = seg
             valid[i, :len(seg)] = True
             slot.ingested += len(seg)
-            completes[i] = slot.ingested >= len(slot.req.prompt)
+            completes[i] = slot.ingested >= len(slot.feed)
             any_rows = True
         if not any_rows:
             return
@@ -614,20 +674,14 @@ class BatchedEngine:
                     self.slots[i].req.t_first = now
             self._dirty = True
 
-    def _boundary(self):
-        """Admit/retire boundary: the ONLY place the fast path syncs with
-        the device outside the per-window cadence.  In paged mode this is
-        also where pages move: retire frees a slot's pages, admission
-        waits (FIFO — no overtaking) until the head request's reservation
-        fits the pool.  Skipped entirely while the host knows nothing could
-        have changed (no decode steps executed, no prompt completed, no new
-        submissions since the last boundary) — interleaved prefill of a
-        long prompt must not pay a blocking device_get per chunk."""
-        if not self._dirty:
-            return
-        self._dirty = False
-        st = {k: np.array(v) for k, v in jax.device_get(self.state).items()}
-        now = time.monotonic()
+    def _retire_done(self, st, now: float | None = None) -> bool:
+        """Retire every slot whose done flag is set in the host state copy
+        ``st``: capture its outputs at their ACTUAL emitted length and free
+        its whole page reservation.  Called from the boundary sweep and —
+        so a starved pool gets the pages at the earliest host-visible
+        instant — from the decode window's EOS early exit."""
+        if now is None:
+            now = time.monotonic()
         touched = False
         for i, slot in enumerate(self.slots):
             if slot.req is None:
@@ -641,24 +695,111 @@ class BatchedEngine:
                 self.finished.append(slot.req)
                 self._tokens_decoded += n
                 slot.req = None
+                slot.feed = []
                 self._free_slot_pages(i)
                 st["active"][i] = st["done"][i] = False
                 st["pos"][i] = st["last_tok"][i] = st["out_len"][i] = 0
                 st["out_buf"][i, :] = 0
                 touched = True
+        return touched
+
+    def _evict(self, i: int, st):
+        """Preempt slot ``i`` mid-flight: capture the tokens it has emitted
+        so far, free its page reservation, and re-queue the request right
+        behind the preempting head (position 1 — it resumes before other
+        queued work, so a single high-priority arrival cannot starve it).
+        On re-admission the request re-prefills prompt + emitted tokens
+        (``slot.feed``), so greedy decode resumes bit-identically."""
+        slot = self.slots[i]
+        req = slot.req
+        n = int(st["out_len"][i])
+        req.out = [int(t) for t in st["out_buf"][i, :n]]
+        req.evictions += 1
+        self.stats["evictions"] += 1
+        slot.req = None
+        slot.feed = []
+        slot.ingested = 0
+        self._free_slot_pages(i)
+        st["active"][i] = st["done"][i] = False
+        st["pos"][i] = st["last_tok"][i] = st["out_len"][i] = 0
+        st["out_buf"][i, :] = 0
+        self.queue.insert(1, req)
+
+    def _preempt_for(self, st, head: Request) -> bool:
+        """Try to make room for the blocked head-of-queue request by
+        evicting strictly-lower-priority running slots (least progress
+        first — the cheapest re-prefill).  Evicts nothing when even the
+        full victim set cannot cover the head's page reservation.  Returns
+        True when at least one eviction happened (admission should retry)."""
+        if not self.preemption:
+            return False
+        victims = [i for i, s in enumerate(self.slots)
+                   if s.req is not None and s.req.priority < head.priority]
+        if not victims:
+            return False
+        victims.sort(key=lambda i: (self.slots[i].req.priority,
+                                    int(st["pos"][i])))
+        paged = self.paged is not None and self._linear_backed
+        if paged:
+            need = self.paged.pages_for(len(head.prompt)
+                                        + head.max_new_tokens)
+            if need > self.allocator.free_pages + sum(
+                    len(self.slots[i].pages) for i in victims):
+                return False       # hopeless: keep the victims running
+        evicted = False
+        for i in victims:
+            have_slot = any(s.req is None for s in self.slots)
+            have_pages = not paged or need <= self.allocator.free_pages
+            if have_slot and have_pages:
+                break
+            self._evict(i, st)
+            evicted = True
+        return evicted
+
+    def _boundary(self):
+        """Admit/retire boundary: the ONLY place the fast path syncs with
+        the device outside the per-window cadence.  In paged mode this is
+        also where pages move: retire frees a slot's pages, admission
+        waits (FIFO — no overtaking) until the head request's reservation
+        fits the pool — unless ``preemption`` is on and the head outranks
+        running slots, in which case low-priority slots are evicted (pages
+        freed, request re-queued for re-prefill) to admit it.  Skipped
+        entirely while the host knows nothing could have changed (no
+        decode steps executed, no prompt completed, no new submissions
+        since the last boundary) — interleaved prefill of a long prompt
+        must not pay a blocking device_get per chunk."""
+        if not self._dirty:
+            return
+        self._dirty = False
+        st = {k: np.array(v) for k, v in jax.device_get(self.state).items()}
+        touched = self._retire_done(st)
         admitted: list[int] = []
-        for i, slot in enumerate(self.slots):
-            if slot.req is None and self.queue:
-                if not self._alloc_slot_pages(i, self.queue[0]):
-                    break                      # FIFO: wait for pages to free
-                slot.req = self.queue.popleft()
-                slot.ingested = 0
-                st["active"][i] = st["done"][i] = False
-                st["pos"][i] = st["last_tok"][i] = st["out_len"][i] = 0
-                st["max_new"][i] = slot.req.max_new_tokens
-                st["out_buf"][i, :] = 0
-                admitted.append(i)
+        while self.queue:
+            head = self.queue[0]
+            i = next((j for j, s in enumerate(self.slots) if s.req is None),
+                     None)
+            if i is None or not self._alloc_slot_pages(i, head):
+                if not self._preempt_for(st, head):
+                    break                  # FIFO: wait for pages to free
                 touched = True
+                continue                   # room was made — retry the head
+            slot = self.slots[i]
+            slot.req = self.queue.popleft()
+            slot.ingested = 0
+            # re-admitted (evicted) requests re-prefill their emitted
+            # tokens too, and resume with out_len/out_buf pre-seeded so
+            # the prefill-completing dispatch commits token k+1
+            slot.feed = list(slot.req.prompt) + list(slot.req.out)
+            k = len(slot.req.out)
+            st["active"][i] = st["done"][i] = False
+            st["pos"][i] = st["last_tok"][i] = 0
+            st["out_len"][i] = k
+            st["max_new"][i] = slot.req.max_new_tokens
+            st["out_buf"][i, :] = 0
+            if k:
+                st["out_buf"][i, :k] = slot.req.out
+            admitted.append(i)
+            touched = True
         if touched:
             self.state = jax.device_put(st)
         if admitted:
@@ -710,6 +851,7 @@ class BatchedEngine:
                 slot.req = self.queue.popleft()
                 slot.pos = 0
                 slot.in_prompt = 0
+                slot.feed = list(slot.req.prompt) + list(slot.req.out)
                 if self.paged is not None:
                     self.cache = {**self.cache,
                                   "pages": jnp.asarray(self._table)}
@@ -728,8 +870,8 @@ class BatchedEngine:
             if s.req is None:
                 continue
             occupied[i] = True
-            if s.in_prompt < len(s.req.prompt):
-                tokens[i, 0] = s.req.prompt[s.in_prompt]
+            if s.in_prompt < len(s.feed):
+                tokens[i, 0] = s.feed[s.in_prompt]
             else:
                 tokens[i, 0] = s.req.out[-1]
             pos[i] = s.pos
@@ -754,12 +896,12 @@ class BatchedEngine:
             if s.req is None:
                 continue
             s.pos += 1
-            fed_prompt = s.in_prompt < len(s.req.prompt)
+            fed_prompt = s.in_prompt < len(s.feed)
             if fed_prompt:
                 s.in_prompt += 1
             # the prediction counts once the WHOLE prompt is in: the last
             # prompt token's logits give the first generated token
-            if not fed_prompt or s.in_prompt == len(s.req.prompt):
+            if not fed_prompt or s.in_prompt == len(s.feed):
                 tok = int(nxt[i])
                 s.req.out.append(tok)
                 if s.req.t_first is None:

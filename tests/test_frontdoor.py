@@ -1,0 +1,342 @@
+"""Front door: wire protocol, admission, QoS, and the loopback server.
+
+The core acceptance test is loopback equivalence: a request stream
+through HELLO/SUBMIT/RESULT frames over real TCP must produce greedy
+outputs BIT-IDENTICAL to direct ``engine.submit()`` + ``engine.run()`` —
+with and without a C3-SL codec.  Under batch-wise superposition the
+outputs depend on slot occupancy, so the server is run with
+``auto_tick=False`` and drained after all submissions land: identical
+admission order -> identical dispatch schedule -> identical cross-talk.
+
+No pytest-asyncio in the image: every async scenario runs under a plain
+``asyncio.run``.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import get_config, reduced
+from repro.frontdoor import (AdmissionController, BusyError, FrontDoorClient,
+                             FrontDoorError, FrontDoorServer, LogHistogram,
+                             MsgType, ProtocolError, TenantPolicy,
+                             decode_frame, encode_frame, pack_array,
+                             read_frame, unpack_array)
+from repro.frontdoor.admission import ADMIT, BUSY_QUEUE, BUSY_TENANT
+from repro.models import lm as lm_lib
+from repro.serving.engine import BatchedEngine, Request
+
+
+# ---------------------------------------------------------------------------
+# protocol (no engine, no sockets)
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip():
+    arr = np.arange(7, dtype=np.int32)
+    hdr, payload = pack_array(arr)
+    frame = encode_frame(MsgType.SUBMIT, {"rid": 3, **hdr}, payload)
+    mtype, header, body = decode_frame(frame[4:])
+    assert mtype == MsgType.SUBMIT and header["rid"] == 3
+    np.testing.assert_array_equal(unpack_array(header, body), arr)
+
+
+def test_frame_roundtrip_through_stream_reader():
+    async def go():
+        reader = asyncio.StreamReader()
+        hdr, payload = pack_array(np.array([[1, 2], [3, 4]], dtype=np.int8))
+        reader.feed_data(encode_frame(MsgType.RESULT, {"rid": 0, **hdr},
+                                      payload))
+        reader.feed_data(encode_frame(MsgType.BYE, {}))
+        reader.feed_eof()
+        mtype, header, body, nbytes = await read_frame(reader)
+        assert mtype == MsgType.RESULT and nbytes > len(payload)
+        assert unpack_array(header, body).tolist() == [[1, 2], [3, 4]]
+        mtype, _, _, _ = await read_frame(reader)
+        assert mtype == MsgType.BYE
+        assert await read_frame(reader) is None      # clean EOF
+
+    asyncio.run(go())
+
+
+def test_truncated_frame_fails_loudly():
+    async def go():
+        reader = asyncio.StreamReader()
+        frame = encode_frame(MsgType.STATS, {"x": 1})
+        reader.feed_data(frame[:-2])                 # die mid-body
+        reader.feed_eof()
+        with pytest.raises(ProtocolError, match="bytes into"):
+            await read_frame(reader)
+
+    asyncio.run(go())
+
+
+def test_oversized_frame_refused():
+    async def go():
+        reader = asyncio.StreamReader()
+        reader.feed_data(b"\xff\xff\xff\xff")        # 4 GiB declared length
+        reader.feed_eof()
+        with pytest.raises(ProtocolError, match="frame limit"):
+            await read_frame(reader)
+
+    asyncio.run(go())
+
+
+def test_decode_frame_rejects_garbage():
+    with pytest.raises(ProtocolError, match="unknown message type"):
+        decode_frame(b"\x99\x00\x00\x00\x02{}")
+    with pytest.raises(ProtocolError, match="overruns"):
+        decode_frame(b"\x01\x00\x00\xff\xff{}")
+    with pytest.raises(ProtocolError, match="non-JSON"):
+        decode_frame(b"\x01\x00\x00\x00\x02[[")
+
+
+def test_array_codec_guards():
+    with pytest.raises(ProtocolError, match="wire dtype"):
+        pack_array(np.zeros(3, dtype=np.float64))
+    hdr, payload = pack_array(np.zeros(4, dtype=np.int32))
+    with pytest.raises(ProtocolError, match="size mismatch"):
+        unpack_array(hdr, payload[:-4])              # short payload
+    with pytest.raises(ProtocolError, match="size mismatch"):
+        unpack_array({**hdr, "dtype": "int8"}, payload)   # dtype drift
+    with pytest.raises(ProtocolError, match="wire dtype"):
+        unpack_array({**hdr, "dtype": "float64"}, payload)
+
+
+# ---------------------------------------------------------------------------
+# admission + QoS units
+# ---------------------------------------------------------------------------
+
+def test_admission_caps_and_shedding():
+    adm = AdmissionController(max_queue_depth=3,
+                              default_policy=TenantPolicy(max_inflight=2))
+    assert adm.try_admit("a") == ADMIT
+    assert adm.try_admit("a") == ADMIT
+    assert adm.try_admit("a") == BUSY_TENANT          # per-tenant cap
+    assert adm.try_admit("b") == ADMIT
+    assert adm.try_admit("b") == BUSY_QUEUE           # global backlog
+    adm.release("a")
+    assert adm.try_admit("b") == ADMIT
+    adm.release("a")                                  # drain: a has 1 left
+    adm.release("b")
+    adm.release("b")                                  # ... and b has 2
+    with pytest.raises(RuntimeError):
+        adm.release("a")                              # underflow is a bug
+
+
+def test_log_histogram_percentiles():
+    h = LogHistogram()
+    for v in (0.001, 0.01, 0.01, 0.1, 1.0):
+        h.record(v)
+    snap = h.snapshot()
+    assert snap["count"] == 5
+    assert snap["min"] == pytest.approx(0.001)
+    assert snap["max"] == pytest.approx(1.0)
+    assert 0.005 <= snap["p50"] <= 0.05               # bucket upper bound
+    assert snap["p99"] == pytest.approx(1.0)
+    assert LogHistogram().snapshot() == {"count": 0}
+
+
+# ---------------------------------------------------------------------------
+# loopback server (real engine, real TCP)
+# ---------------------------------------------------------------------------
+
+def _cfg():
+    return reduced(get_config("deepseek-7b"), num_layers=2, d_model=128,
+                   d_ff=256, vocab_size=128, num_heads=4, num_kv_heads=2,
+                   head_dim=32)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, codec=None, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("chunk_size", 8)
+    kw.setdefault("sync_every", 4)
+    return BatchedEngine(params, cfg, codec=codec, greedy=True, seed=0, **kw)
+
+
+def _prompts(n, rng):
+    return [[int(t) for t in rng.randint(1, 128, 5 + i)] for i in range(n)]
+
+
+@pytest.mark.parametrize("spec", ["none", "c3sl:R=4|int8"])
+def test_loopback_bit_identical_to_direct_submit(setup, spec):
+    cfg, params = setup
+    codec = None if spec == "none" else spec
+    prompts = _prompts(3, np.random.RandomState(2))
+
+    # direct: 3 requests through 2 slots (recycling changes occupancy,
+    # which changes C3-SL cross-talk -- exactly what must still match)
+    direct = _engine(cfg, params, codec=codec)
+    for u, p in enumerate(prompts):
+        direct.submit(Request(uid=u, prompt=list(p), max_new_tokens=6))
+    ref = {r.uid: list(r.out) for r in direct.run()}
+    assert len(ref) == 3
+
+    async def go():
+        eng = _engine(cfg, params, codec=codec)
+        server = FrontDoorServer(eng, auto_tick=False)
+        host, port = await server.start()
+        client = await FrontDoorClient.open(host, port, tenant="t0",
+                                            codec=spec)
+        # stage EVERY submission before any engine work, so the dispatch
+        # schedule is identical to the direct run
+        rids = [await client.submit(p, max_new=6) for p in prompts]
+        await server.drain()
+        outs = [await client.result(rid) for rid in rids]
+        await client.close()
+        await server.stop(drain=False)
+        return outs
+
+    outs = asyncio.run(go())
+    for uid, out in enumerate(outs):
+        assert out["tokens"] == ref[uid], (spec, uid)
+        assert out["ttft_s"] is not None and out["ttft_s"] >= 0
+
+
+def test_codec_mismatch_is_a_handshake_failure(setup):
+    cfg, params = setup
+
+    async def go():
+        # 4 slots so the engine serves R=4 unclamped: R=2 really mismatches
+        eng = _engine(cfg, params, codec="c3sl:R=4|int8", num_slots=4)
+        server = FrontDoorServer(eng, auto_tick=False)
+        host, port = await server.start()
+        try:
+            for bad in ("none", "c3sl:R=2|int8", "c3sl:R=4"):
+                with pytest.raises(FrontDoorError, match="codec mismatch"):
+                    await FrontDoorClient.open(host, port, tenant="t0",
+                                               codec=bad)
+            with pytest.raises(FrontDoorError, match="unbuildable"):
+                await FrontDoorClient.open(host, port, tenant="t0",
+                                           codec="no-such-codec:R=1")
+            # the matching spec (canonicalized: D filled in) still connects
+            ok = await FrontDoorClient.open(host, port, tenant="t0",
+                                            codec="c3sl:R=4|int8")
+            await ok.close()
+        finally:
+            await server.stop(drain=False)
+
+    asyncio.run(go())
+
+
+def test_busy_shedding_then_retry_completes(setup):
+    cfg, params = setup
+
+    async def go():
+        eng = _engine(cfg, params)
+        server = FrontDoorServer(
+            eng, auto_tick=True,
+            admission=AdmissionController(
+                max_queue_depth=8,
+                default_policy=TenantPolicy(max_inflight=1)))
+        host, port = await server.start()
+        client = await FrontDoorClient.open(host, port, tenant="shed")
+        rng = np.random.RandomState(3)
+        prompts = _prompts(3, rng)
+        # concurrent generates with max_inflight=1: the extras are shed
+        # with BUSY and complete through the client's retry loop
+        outs = await asyncio.gather(*(
+            client.generate(p, max_new=4) for p in prompts))
+        stats = await client.stats()
+        await client.close()
+        await server.stop()
+        return outs, stats
+
+    outs, stats = asyncio.run(go())
+    assert len(outs) == 3 and all(len(o["tokens"]) == 4 for o in outs)
+    t = stats["tenants"]["shed"]
+    assert t["requests"] == 3
+    assert t["busy_rejections"] >= 1          # shedding actually happened
+    assert stats["admission"]["inflight_total"] == 0
+
+
+def test_hard_busy_raises_after_retries(setup):
+    cfg, params = setup
+
+    async def go():
+        eng = _engine(cfg, params)
+        # auto_tick=False and max_inflight=1: the first submit is admitted
+        # but never completes, so the second can only ever see BUSY
+        server = FrontDoorServer(
+            eng, auto_tick=False,
+            admission=AdmissionController(
+                default_policy=TenantPolicy(max_inflight=1)))
+        host, port = await server.start()
+        client = await FrontDoorClient.open(host, port, tenant="stuck")
+        await client.submit([1, 2, 3], max_new=4)
+        with pytest.raises(BusyError):
+            await client.submit([4, 5, 6], max_new=4)
+        with pytest.raises(FrontDoorError, match="still busy"):
+            await client.generate([4, 5, 6], max_new=4, retries=2,
+                                  backoff_s=0.001)
+        await server.drain()                   # let the admitted one finish
+        await client.close()
+        await server.stop(drain=False)
+
+    asyncio.run(go())
+
+
+def test_engine_refusal_is_error_not_busy(setup):
+    cfg, params = setup
+
+    async def go():
+        eng = _engine(cfg, params)
+        server = FrontDoorServer(eng, auto_tick=False)
+        host, port = await server.start()
+        client = await FrontDoorClient.open(host, port, tenant="bad")
+        with pytest.raises(FrontDoorError, match="prompt length"):
+            await client.submit(list(range(1, 40)), max_new=4)  # > max_len
+        # the refusal released its admission slot: a good submit still works
+        rid = await client.submit([1, 2, 3], max_new=2)
+        await server.drain()
+        out = await client.result(rid)
+        assert len(out["tokens"]) == 2
+        await client.close()
+        await server.stop(drain=False)
+        return server.stats()
+
+    stats = asyncio.run(go())
+    assert stats["tenants"]["bad"]["errors"] == 1
+    assert stats["admission"]["inflight_total"] == 0
+
+
+def test_multi_tenant_concurrent_clients(setup):
+    cfg, params = setup
+
+    async def tenant(host, port, name, prompts):
+        client = await FrontDoorClient.open(host, port, tenant=name)
+        outs = await asyncio.gather(*(
+            client.generate(p, max_new=3) for p in prompts))
+        await client.close()
+        return outs
+
+    async def go():
+        eng = _engine(cfg, params)
+        server = FrontDoorServer(eng, auto_tick=True)
+        host, port = await server.start()
+        rng = np.random.RandomState(4)
+        names = ["edge-a", "edge-b", "edge-c"]
+        outs = await asyncio.gather(*(
+            tenant(host, port, n, _prompts(2, rng)) for n in names))
+        stats = server.stats()
+        await server.stop()
+        return outs, stats, eng
+
+    outs, stats, eng = asyncio.run(go())
+    assert all(len(o) == 2 for o in outs)
+    for name in ("edge-a", "edge-b", "edge-c"):
+        t = stats["tenants"][name]
+        assert t["requests"] == 2 and t["tokens_out"] == 6
+        assert t["ttft_s"]["count"] == 2 and t["bytes_in"] > 0
+    assert stats["engine"]["decode_steps"] > 0
+    assert stats["engine"]["pool"] == eng.pool_accounting()
+    assert not eng.queue and eng.active == 0           # clean shutdown
