@@ -23,6 +23,7 @@ Two sections:
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import platform
 import time
@@ -367,6 +368,148 @@ def adaptive_sweep(steps: int, w=None) -> dict:
             "adaptive": adaptive, "summary": summary}
 
 
+# ---------------------------------------------------------------------------
+# Chaos sweep: goodput + final loss vs fault rate, erasure vs retransmit
+# ---------------------------------------------------------------------------
+
+def _make_chaos_step(codec, codec_params, lr, compile_counter, faulty):
+    """One jitted SGD step for ONE static bucket that takes the step's
+    erasure keep-mask as a runtime argument (static shape per bucket, so
+    every lossy step of a bucket shares one compiled branch).  Clean runs
+    pin ``erasure=None`` at trace time — the pre-fault program."""
+    loss_fn = transport.make_split_loss_fn(_front, _back, codec, _ce,
+                                           with_metrics=True)
+
+    def raw(net, batch, erasure):
+        compile_counter[0] += 1          # runs only while tracing
+        params = {**net, "codec": codec_params}
+        (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, erasure=erasure)
+        net2 = jax.tree.map(lambda a, b: a - lr * b,
+                            net, {"front": g["front"], "back": g["back"]})
+        return net2, loss, m["cut_snr"]
+
+    if faulty:
+        return jax.jit(raw)
+    return jax.jit(functools.partial(raw, erasure=None))
+
+
+def _run_chaos(spec, w, steps, *, rate, mode, fault_seed=11):
+    """One chaos training run: the adaptive codec under a seeded FaultPlan
+    dropping ``rate`` of the forward cut payload's packets per step,
+    recovered per ``mode`` ("erasure" decodes through the renormalized
+    mask and lets the degraded SNR drive the controller; "retransmit"
+    NACKs until complete and pays the wire bytes).  Returns loss,
+    goodput (useful payload bytes / transmitted bytes, retransmissions
+    included), and the residual-erasure + R trajectory."""
+    codec = build(spec, D=w["D_cut"])
+    codec_params = codec.init(jax.random.PRNGKey(7))
+    net, X, y = _workload(w)
+    counter = [0]
+    faulty = rate > 0.0
+    link = transport.as_link(codec)
+    if faulty:
+        link.install_faults(
+            transport.FaultPlan(seed=fault_seed, rates={"drop": rate}),
+            transport.RecoveryPolicy(mode=mode, retry_budget=8))
+    steps_by_R = codecs.build_program_table(
+        codec, codec_params,
+        lambda bucket, bp: _make_chaos_step(bucket, bp, w["lr"], counter,
+                                            faulty))
+
+    losses, r_traj = [], []
+    payload_bytes = wire_bytes = 0
+    erased_sum = 0.0
+    skipped = 0
+    for t, batch in enumerate(_batches(X, y, w["batch"], steps)):
+        R = codec.current_R
+        useful = 2 * codec.buckets[R].wire_bytes(w["batch"]) \
+            if isinstance(codec, codecs.AdaptiveC3SL) \
+            else 2 * codec.wire_bytes(w["batch"])
+        erasure = info = None
+        if faulty:
+            try:
+                erasure, info = link.next_erasure(w["batch"])
+            except transport.ChannelErasure:
+                # unrecoverable step: at least one full transmission was
+                # spent (retransmission traffic of the failed NACK rounds
+                # is under-counted here), nothing useful delivered
+                skipped += 1
+                wire_bytes += useful
+                continue
+        if faulty:
+            net, loss, snr = steps_by_R[R](net, batch, erasure)
+        else:
+            net, loss, snr = steps_by_R[R](net, batch)
+        losses.append(float(loss))
+        r_traj.append(R)
+        payload_bytes += useful
+        mult = info["fwd"]["wire_mult"] if info and info.get("fwd") else 1.0
+        # only the forward payload is faulted (mirrored link); the bwd
+        # half of `useful` ships clean
+        wire_bytes += useful // 2 + int(round((useful // 2) * mult))
+        if info and info.get("fwd"):
+            erased_sum += info["fwd"]["erased_frac"]
+        codec.observe(float(snr))
+    done = len(losses)
+    return {"rate": rate, "mode": mode if faulty else "clean",
+            "steps": steps, "completed": done, "skipped": skipped,
+            "final_loss": round(float(np.mean(losses[-20:])), 4),
+            "payload_bytes": payload_bytes,
+            "wire_bytes": wire_bytes,
+            "goodput": round(payload_bytes / max(wire_bytes, 1), 4),
+            "mean_erased_frac": round(erased_sum / max(done, 1), 4),
+            "final_R": codec.current_R,
+            "mean_R": round(float(np.mean(r_traj)), 2) if r_traj else None,
+            "compiles": counter[0]}
+
+
+def chaos_sweep(steps: int, w=None) -> dict:
+    """Fault-rate sweep over both recovery modes on the adaptive ladder.
+
+    The expectation this section pins (see benchmarks/README.md): the
+    erasure-tolerant decode holds goodput at ~1.0 (no retransmissions —
+    loss is absorbed as SNR degradation and, when sustained, an R
+    step-down), while retransmit-only pays a growing wire-byte premium
+    for the same payload; BOTH modes end at a finite, trained loss at
+    every swept rate."""
+    w = dict(WORKLOAD if w is None else w)
+    spec = "adaptive:c3sl:R=8,min_R=2,target_snr=-20"
+    rates = (0.0, 0.05, 0.1, 0.2)
+    print(f"\n# chaos sweep: {spec}, drop rates {rates}, "
+          f"erasure vs retransmit")
+    runs = []
+    clean = _run_chaos(spec, w, steps, rate=0.0, mode="erasure")
+    runs.append(clean)
+    print(f"clean       loss {clean['final_loss']:.4f}  "
+          f"goodput {clean['goodput']:.2f}  R ends {clean['final_R']}")
+    for mode in ("erasure", "retransmit"):
+        for rate in rates[1:]:
+            r = _run_chaos(spec, w, steps, rate=rate, mode=mode)
+            runs.append(r)
+            print(f"{mode:<10} drop={rate:<5} loss {r['final_loss']:.4f}  "
+                  f"goodput {r['goodput']:.2f}  "
+                  f"erased {r['mean_erased_frac']:.1%}  "
+                  f"skipped {r['skipped']}  R ends {r['final_R']}")
+    finite = all(np.isfinite(r["final_loss"]) and r["completed"] > 0
+                 for r in runs)
+    era = [r for r in runs if r["mode"] == "erasure"]
+    ret = [r for r in runs if r["mode"] == "retransmit"]
+    goodput_ok = all(e["goodput"] >= r["goodput"]
+                     for e, r in zip(era, ret))
+    summary = {
+        "spec": spec,
+        "rates": list(rates),
+        "all_finite": bool(finite),
+        "erasure_goodput_ge_retransmit": bool(goodput_ok),
+        "meets_criteria": bool(finite and goodput_ok),
+    }
+    print(f"# summary: all_finite={finite}, "
+          f"erasure goodput >= retransmit at every rate: {goodput_ok}")
+    return {"workload": {**w, "steps": steps}, "runs": runs,
+            "summary": summary}
+
+
 def main(out: str = "BENCH_comm.json", sweep_steps: int = 200,
          smoke: bool = False):
     analytic = []
@@ -375,6 +518,7 @@ def main(out: str = "BENCH_comm.json", sweep_steps: int = 200,
     sweep = adaptive_sweep(steps)
     directional = directional_sweep(steps, sweep["adaptive"],
                                     sweep["static"][0]["loss_trajectory"])
+    chaos = chaos_sweep(steps)
     payload = {
         "protocol": {
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -386,6 +530,7 @@ def main(out: str = "BENCH_comm.json", sweep_steps: int = 200,
         "analytic": analytic,
         "adaptive_sweep": sweep,
         "directional_sweep": directional,
+        "chaos_sweep": chaos,
     }
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)

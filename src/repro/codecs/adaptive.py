@@ -196,6 +196,10 @@ class AdaptiveC3SL:
     def decode(self, params, payload):
         return self.current.decode(self.params_for(params), payload)
 
+    def decode_masked(self, params, payload, keep):
+        return self.current.decode_masked(self.params_for(params),
+                                          payload, keep)
+
     def param_count(self) -> int:
         return sum(c.param_count() for c in self.buckets.values())
 

@@ -76,6 +76,19 @@ class C3SLCodec(SpecMixin):
         G, R, D = Zhat.shape
         return Zhat.reshape(*payload.shape[:-2], payload.shape[-2] * R, D)
 
+    def decode_masked(self, params, payload, keep):
+        """Erasure-aware decode: ``keep`` (payload-shaped, 1.0 kept /
+        0.0 erased) marks the elements that survived the wire; the
+        superposition is renormalized over the survivors
+        (``repro.core.hrr.masked_unbind``).  Bitwise identical to
+        :meth:`decode` at an all-ones mask."""
+        Zhat = hrr.masked_unbind(payload.reshape(-1, self.D),
+                                 params["keys"], keep.reshape(-1, self.D),
+                                 backend=self.backend,
+                                 K_fft=params.get("keys_fft"))
+        G, R, D = Zhat.shape
+        return Zhat.reshape(*payload.shape[:-2], payload.shape[-2] * R, D)
+
     def param_count(self) -> int:
         return self.R * self.D  # paper Table 2
 

@@ -69,6 +69,15 @@ class Chain:
     def decode(self, params, payload):
         return self.transform.decode(params, payload)
 
+    def decode_masked(self, params, payload, keep):
+        """Erasure-aware decode: wire stages are straight-through (the
+        in-graph payload keeps the transform's shape), so the mask
+        applies at the transform's decode."""
+        fn = getattr(self.transform, "decode_masked", None)
+        if fn is None:
+            return self.transform.decode(params, payload * keep)
+        return fn(params, payload, keep)
+
     # ---- accounting ------------------------------------------------------
 
     def param_count(self) -> int:

@@ -218,6 +218,32 @@ def unbind(S: jax.Array, K: jax.Array, backend: str = "fft",
     return _unbind_vjp(S, K, K_fft, backend)
 
 
+def masked_unbind(S: jax.Array, K: jax.Array, keep: jax.Array,
+                  backend: str = "fft",
+                  K_fft: jax.Array | None = None) -> jax.Array:
+    """Erasure-aware decode: unbind ``S`` with elements marked 0 in
+    ``keep`` treated as LOST, renormalizing each superposition row over
+    its surviving elements.
+
+    ``keep`` (same shape as S, 1.0 kept / 0.0 erased) zeroes the lost
+    elements before correlation; the per-row scale ``D / #kept`` makes
+    the retrieval unbiased under random erasure — each correlation lag
+    sums over the kept elements only, so its expectation shrinks by
+    ``#kept / D`` and the rescale restores it (the mask-encoded decode
+    argument of sparse-payload codecs, applied to erasures).  Exact at
+    an all-ones mask: ``S * 1.0`` and the scale ``D / D == 1.0`` are
+    IEEE-exact, so the result is bitwise ``unbind(S, K)`` — the property
+    the zero-fault bit-identity tests pin.
+    """
+    keep = keep.astype(S.dtype)
+    D = S.shape[-1]
+    kept = keep.sum(axis=-1, keepdims=True)            # (..., 1)
+    scale = (jnp.float32(D) / jnp.maximum(kept, 1.0)).astype(S.dtype)
+    Zhat = unbind(S * keep, K, backend=backend, K_fft=K_fft)
+    # unbind adds the R axis before D: broadcast the per-row scale over it
+    return Zhat * scale[..., None, :]
+
+
 def retrieval_snr(Z: jax.Array, Zhat: jax.Array) -> jax.Array:
     """Signal-to-noise ratio (dB) of HRR retrieval — diagnostics for Eq. 4."""
     sig = jnp.sum(Z.astype(jnp.float32) ** 2)

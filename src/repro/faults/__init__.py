@@ -1,0 +1,24 @@
+"""repro.faults — deterministic fault injection + erasure recovery.
+
+The chaos layer for the split link: :class:`FaultPlan` is a seeded,
+schedule-driven description of what the network does (drop / corrupt /
+delay / duplicate / truncate / disconnect, per-direction rates or
+explicit step lists, every draw replayable).  It installs into
+``repro.transport.Channel`` (payload-level erasures inside train and
+pipeline loops, resolved against a :class:`RecoveryPolicy` by
+:func:`negotiate_payload`) and into the frontdoor's
+``FrameStream`` (wire-level frame faults on the asyncio path, recovered
+via CRC32 + sequence numbers + NACK/retransmit).
+
+:class:`ChannelErasure` is the typed "the channel ate it" error both
+layers surface instead of decoding garbage.
+"""
+from repro.faults.plan import (FAULT_KINDS, ChannelErasure, FaultEvent,
+                               FaultPlan)
+from repro.faults.recovery import (RecoveryPolicy, erasure_mask_like,
+                                   negotiate_payload)
+
+__all__ = [
+    "FAULT_KINDS", "FaultEvent", "FaultPlan", "ChannelErasure",
+    "RecoveryPolicy", "negotiate_payload", "erasure_mask_like",
+]

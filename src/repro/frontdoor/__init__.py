@@ -10,25 +10,39 @@ per-tenant QoS accounting (TTFT / tokens-per-second / wire-byte
 histograms via the ``STATS`` RPC), and — with engine ``preemption=True``
 — priority eviction of low-priority slots under pool oversubscription.
 
+The wire is fault-tolerant: every frame carries a CRC32 and a sequence
+number, :class:`FrameStream` recovers damaged/dropped frames by
+NACK/retransmit, connections have handshake and heartbeat deadlines, and
+a dead connection detaches its session for ``resume_ttl_s`` — the client
+reconnects with its session token and the server re-admits the withdrawn
+work with greedy output bit-identical to an uninterrupted run.
+
 See ``src/repro/frontdoor/README.md`` for the architecture sketch (frame
-format, admission states, preemption policy).
+format, admission states, preemption policy, failure handling).
 """
+from repro.faults import ChannelErasure, FaultPlan
 from repro.frontdoor.admission import (ADMIT, BUSY_QUEUE, BUSY_TENANT,
                                        AdmissionController, TenantPolicy)
-from repro.frontdoor.client import BusyError, FrontDoorClient, FrontDoorError
-from repro.frontdoor.protocol import (MsgType, ProtocolError, decode_frame,
+from repro.frontdoor.client import (BusyError, DeadlineExceeded,
+                                    FrontDoorClient, FrontDoorError)
+from repro.frontdoor.protocol import (CTRL_SEQ, FrameCorruption, MsgType,
+                                      ProtocolError, decode_frame,
                                       encode_frame, pack_array, read_frame,
                                       send_frame, unpack_array)
 from repro.frontdoor.qos import LogHistogram, QoSRegistry, TenantQoS
 from repro.frontdoor.server import (FrontDoorServer, canonical_codec_spec,
                                     engine_codec_specs)
+from repro.frontdoor.stream import FrameStream
 
 __all__ = [
-    "MsgType", "ProtocolError", "encode_frame", "decode_frame",
+    "MsgType", "ProtocolError", "FrameCorruption", "CTRL_SEQ",
+    "encode_frame", "decode_frame",
     "read_frame", "send_frame", "pack_array", "unpack_array",
+    "FrameStream",
     "TenantPolicy", "AdmissionController", "ADMIT", "BUSY_TENANT",
     "BUSY_QUEUE",
     "LogHistogram", "TenantQoS", "QoSRegistry",
     "FrontDoorServer", "canonical_codec_spec", "engine_codec_specs",
-    "FrontDoorClient", "FrontDoorError", "BusyError",
+    "FrontDoorClient", "FrontDoorError", "BusyError", "DeadlineExceeded",
+    "FaultPlan", "ChannelErasure",
 ]

@@ -82,6 +82,11 @@ class TenantQoS:
         self.busy_rejections = 0   # SUBMITs shed with BUSY
         self.errors = 0            # SUBMITs refused with ERROR
         self.evictions = 0         # preemptions suffered by this tenant
+        self.disconnects = 0       # connections that died mid-session
+        self.resumes = 0           # sessions reattached after a disconnect
+        self.expired = 0           # detached sessions past the resume TTL
+        self.retransmits = 0       # frames re-sent to this tenant (NACKed)
+        self.nacks = 0             # NACKs received from this tenant's stream
 
     def record_result(self, *, ttft_s: float | None, gen_tokens: int,
                       decode_s: float, wire_bytes: int, evictions: int = 0):
@@ -102,6 +107,11 @@ class TenantQoS:
                 "busy_rejections": self.busy_rejections,
                 "errors": self.errors,
                 "evictions": self.evictions,
+                "disconnects": self.disconnects,
+                "resumes": self.resumes,
+                "expired": self.expired,
+                "retransmits": self.retransmits,
+                "nacks": self.nacks,
                 "ttft_s": self.ttft_s.snapshot(),
                 "tokens_per_s": self.tokens_per_s.snapshot(),
                 "wire_bytes": self.wire_bytes.snapshot()}

@@ -1,24 +1,42 @@
 """Front-door loopback selfcheck — the CI ``frontdoor-smoke`` job.
 
 One process: a tiny-model engine behind a :class:`FrontDoorServer` on an
-ephemeral loopback port, three concurrent tenants (one speaking the
-engine's full ADAPTIVE spec, two pinned to a compatible R bucket), each
-streaming a few requests through the BUSY-retry path.  Asserts every
-result is well-formed, the per-tenant STATS are non-empty for all three
-tenants, and the shutdown is clean (BYE handshakes, drained engine,
-stopped listener).
+ephemeral loopback port, three tenants (one speaking the engine's full
+ADAPTIVE spec, two pinned to a compatible R bucket), each streaming a few
+requests through the BUSY-retry path.  Asserts every result is
+well-formed, the per-tenant STATS are non-empty for all three tenants,
+and the shutdown is clean (BYE handshakes, drained engine, stopped
+listener).  Any failed tenant exits NONZERO.
 
-    PYTHONPATH=src python -m repro.frontdoor.selfcheck [--requests N]
+``--chaos`` runs the fault-injected variant (the CI ``chaos-smoke``
+job): three tenants run SEQUENTIALLY — one request in flight at a time,
+so slot occupancy (and with it the batch-wise codec's cross-talk) is
+schedule-independent — first fault-free to record the reference tokens,
+then again under a seeded :class:`~repro.faults.FaultPlan` that drops
+and corrupts frames in both directions and forces one disconnect per
+direction (exercising NACK/retransmit, heartbeat gap detection, and
+reconnect-with-resume).  The chaos run must complete every request with
+tokens BIT-IDENTICAL to the fault-free reference.  The chaos engine
+serves a STATIC bucket spec: what is being pinned is transport
+determinism (recovered frames and resumed sessions decode the exact same
+tokens), and an adaptive controller would break the comparison for the
+wrong reason — its R schedule is deliberately sensitive to the extra
+re-prefill steps a disconnect induces, so schedule drift under faults is
+expected behavior, not a transport bug.
+
+    PYTHONPATH=src python -m repro.frontdoor.selfcheck [--requests N] [--chaos]
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
+import sys
 
 import jax
 import numpy as np
 
 from repro.configs.base import get_config, reduced
+from repro.faults import FaultPlan
 from repro.frontdoor.admission import AdmissionController, TenantPolicy
 from repro.frontdoor.client import FrontDoorClient
 from repro.frontdoor.server import FrontDoorServer
@@ -28,22 +46,44 @@ from repro.serving.engine import BatchedEngine
 ENGINE_SPEC = "adaptive:c3sl:R=4,min_R=2|int8"
 BUCKET_SPEC = "c3sl:R=2|int8"
 
+TENANTS = [("tenant-adaptive", ENGINE_SPEC),
+           ("tenant-bucket-1", BUCKET_SPEC),
+           ("tenant-bucket-2", BUCKET_SPEC)]
 
-def build_engine(num_slots: int = 4, max_len: int = 64) -> BatchedEngine:
+# the chaos variant pins transport determinism on a static bucket engine
+# (see the module docstring); every tenant speaks the engine's spec
+CHAOS_TENANTS = [("tenant-a", BUCKET_SPEC), ("tenant-b", BUCKET_SPEC),
+                 ("tenant-c", BUCKET_SPEC)]
+
+
+def build_engine(num_slots: int = 4, max_len: int = 64,
+                 spec: str = ENGINE_SPEC) -> BatchedEngine:
     cfg = reduced(get_config("deepseek-7b"), num_layers=2, d_model=128,
                   d_ff=256, vocab_size=256, num_heads=4, num_kv_heads=2,
                   head_dim=32)
     params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
     return BatchedEngine(params, cfg, num_slots=num_slots, max_len=max_len,
-                         codec=ENGINE_SPEC, greedy=True, seed=0,
+                         codec=spec, greedy=True, seed=0,
                          kv_layout="paged", page_size=8,
                          num_pages=num_slots * (max_len // 8),
                          preemption=True)
 
 
-async def _tenant(host, port, tenant, codec, requests, vocab, seed):
+def chaos_plan() -> FaultPlan:
+    """The seeded chaos schedule: frame drops + corruption both ways, one
+    forced disconnect per direction (c2s seq 2 fires during a SUBMIT —
+    reconnect + idempotent re-SUBMIT; s2c seq 3 fires around a RESULT —
+    park + flush-on-resume)."""
+    return FaultPlan(seed=7,
+                     rates={"drop": 0.08, "corrupt": 0.04},
+                     schedule={"c2s": {2: "disconnect"},
+                               "s2c": {3: "disconnect"}})
+
+
+async def _tenant(host, port, tenant, codec, requests, vocab, seed,
+                  faults=None):
     client = await FrontDoorClient.open(host, port, tenant=tenant,
-                                        codec=codec)
+                                        codec=codec, faults=faults)
     rng = np.random.RandomState(seed)
     results = []
     try:
@@ -69,18 +109,24 @@ async def amain(requests: int = 3) -> dict:
     host, port = await server.start()
     print(f"[selfcheck] front door on {host}:{port} "
           f"(engine codec {server.stats()['engine']['codec']!r})")
-    tenants = [("tenant-adaptive", ENGINE_SPEC),
-               ("tenant-bucket-1", BUCKET_SPEC),
-               ("tenant-bucket-2", BUCKET_SPEC)]
     outs = await asyncio.gather(*(
         _tenant(host, port, name, codec, requests, eng.cfg.vocab_size, 7 + i)
-        for i, (name, codec) in enumerate(tenants)))
+        for i, (name, codec) in enumerate(TENANTS)),
+        return_exceptions=True)
+    failed = [(TENANTS[i][0], r) for i, r in enumerate(outs)
+              if isinstance(r, BaseException)]
+    if failed:
+        await server.stop(drain=False)
+        for name, err in failed:
+            print(f"[selfcheck] FAILED tenant {name}: {err!r}",
+                  file=sys.stderr)
+        sys.exit(1)
     stats = outs[-1][2]          # last tenant's STATS snapshot
     await server.stop()
 
     for name, results, _ in outs:
         assert len(results) == requests, (name, len(results))
-    for name, _ in tenants:
+    for name, _ in TENANTS:
         t = stats["tenants"].get(name)
         assert t and t["requests"] >= 1, f"empty stats for {name}: {t}"
         assert t["tokens_out"] > 0 and t["bytes_in"] > 0, t
@@ -89,7 +135,7 @@ async def amain(requests: int = 3) -> dict:
     acct = eng.pool_accounting()
     assert acct["free"] == acct["total"], acct
     print(f"[selfcheck] {3 * requests} requests across 3 tenants OK; "
-          "per-tenant stats non-empty; clean shutdown")
+          f"per-tenant stats non-empty; clean shutdown")
     for name, t in stats["tenants"].items():
         ttft = t["ttft_s"]
         print(f"[selfcheck]   {name}: {t['requests']} reqs, "
@@ -99,12 +145,75 @@ async def amain(requests: int = 3) -> dict:
     return stats
 
 
+async def _sequential_run(requests: int, faults: FaultPlan | None) -> dict:
+    """One full sequential pass (every tenant, every request, one at a
+    time) against a FRESH static-bucket engine; returns
+    {tenant: [token lists]} plus the final server stats under the
+    "_stats" key."""
+    eng = build_engine(spec=BUCKET_SPEC)
+    server = FrontDoorServer(
+        eng,
+        admission=AdmissionController(
+            max_queue_depth=16,
+            default_policy=TenantPolicy(max_inflight=4)),
+        faults=faults,
+        heartbeat_s=0.2, max_misses=10, resume_ttl_s=10.0)
+    host, port = await server.start()
+    tokens: dict = {}
+    stats = None
+    try:
+        for i, (name, codec) in enumerate(CHAOS_TENANTS):
+            name_, results, stats = await _tenant(
+                host, port, name, codec, requests, eng.cfg.vocab_size, 7 + i,
+                faults=faults)
+            tokens[name_] = [r["tokens"] for r in results]
+    finally:
+        await server.stop()
+    assert not eng.queue and eng.active == 0, "engine not drained"
+    tokens["_stats"] = stats
+    return tokens
+
+
+async def amain_chaos(requests: int = 3) -> None:
+    print("[selfcheck] chaos: recording the fault-free sequential reference")
+    ref = await _sequential_run(requests, faults=None)
+    plan = chaos_plan()
+    print(f"[selfcheck] chaos: replaying under {plan}")
+    got = await _sequential_run(requests, faults=plan)
+    bad = []
+    for name, _ in CHAOS_TENANTS:
+        if got[name] != ref[name]:
+            bad.append((name, ref[name], got[name]))
+    if bad:
+        for name, want, have in bad:
+            print(f"[selfcheck] CHAOS MISMATCH for {name}:\n"
+                  f"  fault-free: {want}\n  chaos:      {have}",
+                  file=sys.stderr)
+        sys.exit(1)
+    stats = got["_stats"]
+    recovered = sum(t.get("retransmits", 0) + t.get("nacks", 0)
+                    + t.get("resumes", 0)
+                    for t in stats["tenants"].values())
+    assert recovered > 0, ("chaos run recovered nothing — the fault plan "
+                           f"never fired? stats: {stats['tenants']}")
+    n = sum(len(got[name]) for name, _ in CHAOS_TENANTS)
+    print(f"[selfcheck] chaos: {n} requests bit-identical to the fault-free "
+          f"reference through drops/corruption/disconnects "
+          f"({recovered} recovery events)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=3,
                     help="requests per tenant")
+    ap.add_argument("--chaos", action="store_true",
+                    help="seeded fault-injection run: sequential tenants, "
+                         "outputs must be bit-identical to fault-free")
     args = ap.parse_args()
-    asyncio.run(amain(args.requests))
+    if args.chaos:
+        asyncio.run(amain_chaos(args.requests))
+    else:
+        asyncio.run(amain(args.requests))
     print("[selfcheck] PASS")
 
 

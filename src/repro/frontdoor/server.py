@@ -2,10 +2,11 @@
 
 Turns an in-process :class:`repro.serving.engine.BatchedEngine` into a
 networked server: N concurrent client connections stream length-prefixed
-frames (``repro.frontdoor.protocol``) over asyncio TCP/loopback, a
-continuous batcher drains accepted requests into engine slots, and
-per-tenant QoS accounting (``repro.frontdoor.qos``) is exposed through a
-``STATS`` RPC.
+frames (``repro.frontdoor.protocol``) over asyncio TCP/loopback through
+the reliable :class:`~repro.frontdoor.stream.FrameStream` layer
+(sequencing + CRC + NACK/retransmit), a continuous batcher drains
+accepted requests into engine slots, and per-tenant QoS accounting
+(``repro.frontdoor.qos``) is exposed through a ``STATS`` RPC.
 
 Concurrency model: everything — connection handlers, admission, engine
 stepping — runs on ONE event loop thread.  Handlers only run between
@@ -25,6 +26,31 @@ for an adaptive engine, may name one of its R buckets (the server's
 controller owns the schedule; a bucket client is pinned to a compatible
 wire format).  Any other spec is refused with ``ERROR`` at connect time:
 codec mismatch is a handshake failure, never silently decoded garbage.
+
+Failure handling (see src/repro/frontdoor/README.md):
+
+* **Deadlines** — the handshake must complete within
+  ``handshake_timeout_s`` (a half-open client can no longer hold a
+  connection slot forever), and the per-connection read loop wakes every
+  ``heartbeat_s`` of silence to PING; ``max_misses`` silent heartbeat
+  intervals in a row declare the peer dead.
+
+* **Detach / resume** — every handshake mints (or resumes) a session
+  token.  When a connection dies with work outstanding, the session
+  DETACHES: live requests are pulled out of the engine
+  (``engine.withdraw`` — same capture machinery as slot preemption),
+  their admission units are released immediately (the inflight counter
+  is correct the moment the connection ends, on every failure path), and
+  finished-but-undelivered results are parked.  A client reconnecting
+  with the token within ``resume_ttl_s`` gets its withdrawn requests
+  re-admitted and re-submitted — the engine re-prefills prompt + emitted
+  tokens, so greedy output is bit-identical to an uninterrupted run —
+  and its parked results flushed.  Past the TTL the session is swept and
+  its parked work dropped.
+
+* **Shutdown** — :meth:`stop` cancels every in-flight connection task
+  and tears down all sessions, so no orphaned asyncio tasks or unclosed
+  transports survive the server.
 """
 from __future__ import annotations
 
@@ -36,10 +62,12 @@ import time
 import numpy as np
 
 from repro import codecs as codecs_lib
+from repro.faults import ChannelErasure
 from repro.frontdoor import protocol as proto
 from repro.frontdoor.admission import (ADMIT, BUSY_QUEUE, AdmissionController)
 from repro.frontdoor.protocol import MsgType, ProtocolError
 from repro.frontdoor.qos import QoSRegistry
+from repro.frontdoor.stream import FrameStream
 from repro.serving.engine import BatchedEngine, Request
 
 
@@ -72,15 +100,43 @@ def engine_codec_specs(engine: BatchedEngine) -> tuple[str, set[str]]:
 
 @dataclasses.dataclass
 class _Conn:
-    writer: asyncio.StreamWriter
+    stream: FrameStream
     tenant: str
     open: bool = True
 
 
 @dataclasses.dataclass
+class _Session:
+    """One client's server-side continuity across connections."""
+    token: str
+    tenant: str
+    conn: _Conn | None                       # live connection, None detached
+    rids: dict = dataclasses.field(default_factory=dict)   # rid -> uid
+    # rids whose RESULT was already delivered (bounded, insertion-ordered).
+    # A replayed SUBMIT can race the parked-result flush on resume: by the
+    # time it arrives the rid is gone from ``rids``, and without this set
+    # it would be admitted AGAIN — a ghost request burning a slot and,
+    # under a batch-wise codec, perturbing other requests' outputs.
+    done_rids: dict = dataclasses.field(default_factory=dict)
+    # finished results that could not be delivered: (rid, header, payload)
+    parked: list = dataclasses.field(default_factory=list)
+
+    def mark_delivered(self, rid, keep: int = 256):
+        self.rids.pop(rid, None)
+        self.done_rids[rid] = None
+        while len(self.done_rids) > keep:
+            del self.done_rids[next(iter(self.done_rids))]
+    # requests pulled out of the engine at detach, awaiting resume:
+    # (rid, Request) — the Request carries prompt + emitted tokens
+    withdrawn: list = dataclasses.field(default_factory=list)
+    detached_at: float | None = None
+    epochs: int = 0                          # connections this session saw
+
+
+@dataclasses.dataclass
 class _Route:
     """Where a submitted request's result goes, plus its QoS timestamps."""
-    conn: _Conn
+    sess: _Session
     rid: int
     tenant: str
     bytes_in: int            # SUBMIT frame bytes (per-request wire cost)
@@ -90,7 +146,10 @@ class FrontDoorServer:
     def __init__(self, engine: BatchedEngine, *, host: str = "127.0.0.1",
                  port: int = 0, admission: AdmissionController | None = None,
                  qos: QoSRegistry | None = None, auto_tick: bool = True,
-                 idle_sleep_s: float = 0.002, busy_retry_ms: int = 25):
+                 idle_sleep_s: float = 0.002, busy_retry_ms: int = 25,
+                 faults=None, handshake_timeout_s: float = 10.0,
+                 heartbeat_s: float = 5.0, max_misses: int = 3,
+                 resume_ttl_s: float = 30.0):
         self.engine = engine
         self.host, self.port = host, port
         self.admission = admission or AdmissionController()
@@ -98,9 +157,18 @@ class FrontDoorServer:
         self.auto_tick = auto_tick
         self.idle_sleep_s = idle_sleep_s
         self.busy_retry_ms = busy_retry_ms
+        self.faults = faults                 # FaultPlan on the s2c direction
+        self.handshake_timeout_s = handshake_timeout_s
+        self.heartbeat_s = heartbeat_s
+        self.max_misses = max_misses
+        self.resume_ttl_s = resume_ttl_s
         self._spec, self._compat_specs = engine_codec_specs(engine)
         self._uids = itertools.count()
+        self._tokens = itertools.count()
+        self._epochs = itertools.count()     # s2c fault epoch per connection
         self._routes: dict[int, _Route] = {}
+        self._sessions: dict[str, _Session] = {}
+        self._conn_tasks: set[asyncio.Task] = set()
         self._server: asyncio.base_events.Server | None = None
         self._tick_task: asyncio.Task | None = None
         self._closing = False
@@ -119,7 +187,9 @@ class FrontDoorServer:
 
     async def stop(self, *, drain: bool = True):
         """Clean shutdown: optionally finish all admitted work (results
-        delivered), then stop ticking and close the listener."""
+        delivered), then stop ticking, cancel every in-flight connection
+        task, tear down all sessions, and close the listener — no
+        orphaned tasks or held admission units survive."""
         if drain:
             await self.drain()
         self._closing = True
@@ -130,6 +200,18 @@ class FrontDoorServer:
             except asyncio.CancelledError:
                 pass
             self._tick_task = None
+        for task in list(self._conn_tasks):
+            task.cancel()
+        if self._conn_tasks:
+            await asyncio.gather(*self._conn_tasks, return_exceptions=True)
+        self._conn_tasks.clear()
+        # any route still live (its connection task was cancelled before a
+        # detach could run) holds one admission unit — release them all,
+        # then drop the session books
+        for route in self._routes.values():
+            self.admission.release(route.tenant)
+        self._routes.clear()
+        self._sessions.clear()
         if self._server is not None:
             self._server.close()
             await self._server.wait_closed()
@@ -160,6 +242,7 @@ class FrontDoorServer:
         if eng.queue or eng.active:
             worked = eng.tick()
         worked |= await self._deliver()
+        self._sweep_expired()
         return worked
 
     async def _deliver(self) -> bool:
@@ -183,14 +266,22 @@ class FrontDoorServer:
                 np.asarray(req.out, dtype=np.int32))
             header.update(arr_header)
             sent = 0
-            if route.conn.open:
+            conn = route.sess.conn
+            delivered = False
+            if conn is not None and conn.open:
                 try:
-                    sent = await proto.send_frame(route.conn.writer,
-                                                  MsgType.RESULT, header,
+                    sent = await conn.stream.send(MsgType.RESULT, header,
                                                   payload)
                     tq.bytes_out += sent
-                except (ConnectionError, RuntimeError):
-                    route.conn.open = False
+                    delivered = True
+                except (ConnectionError, RuntimeError, OSError):
+                    conn.open = False
+            if delivered:
+                route.sess.mark_delivered(route.rid)
+            else:
+                # park for a reattach — the session keeps the result until
+                # the client resumes or the resume TTL sweeps it
+                route.sess.parked.append((route.rid, header, payload))
             tq.record_result(ttft_s=ttft, gen_tokens=len(req.out),
                              decode_s=decode_s,
                              wire_bytes=route.bytes_in + sent,
@@ -198,59 +289,182 @@ class FrontDoorServer:
         return True
 
     # ------------------------------------------------------------------
+    # session continuity
+    # ------------------------------------------------------------------
+
+    def _detach(self, sess: _Session, reason: str):
+        """The connection died with the session possibly holding work.
+        Pull its live requests out of the engine and release their
+        admission units RIGHT NOW — the inflight counter must be correct
+        the moment the connection ends, whatever killed it — then park
+        the session for ``resume_ttl_s``."""
+        if sess.conn is not None:
+            sess.conn.open = False
+            sess.conn = None
+        sess.detached_at = time.monotonic()
+        self.qos.tenant(sess.tenant).disconnects += 1
+        for uid, route in list(self._routes.items()):
+            if route.sess is not sess:
+                continue
+            req = self.engine.withdraw(uid)
+            if req is None:
+                # finished but undelivered: _deliver will release its
+                # admission unit and park the result on this session
+                continue
+            del self._routes[uid]
+            self.admission.release(sess.tenant)
+            sess.withdrawn.append((route.rid, req))
+
+    async def _resume(self, sess: _Session, conn: _Conn):
+        """Reattach a detached session: re-admit + re-submit everything
+        that was withdrawn (the engine re-prefills prompt + emitted
+        tokens, so greedy decode is bit-identical to an uninterrupted
+        run), then flush parked results."""
+        sess.conn = conn
+        sess.detached_at = None
+        sess.epochs += 1
+        tq = self.qos.tenant(sess.tenant)
+        tq.resumes += 1
+        withdrawn, sess.withdrawn = sess.withdrawn, []
+        for rid, req in withdrawn:
+            verdict = self.admission.try_admit(sess.tenant)
+            if verdict != ADMIT:
+                # someone took the capacity while we were detached; the
+                # client gets a typed refusal instead of a silent hang
+                sess.rids.pop(rid, None)
+                tq.errors += 1
+                tq.bytes_out += await conn.stream.send(
+                    MsgType.ERROR,
+                    {"rid": rid, "reason": f"resume re-admission refused "
+                                           f"({verdict})"})
+                continue
+            self.engine.submit(req)
+            self._routes[req.uid] = _Route(sess=sess, rid=rid,
+                                           tenant=sess.tenant, bytes_in=0)
+        parked, sess.parked = sess.parked, []
+        for rid, header, payload in parked:
+            tq.bytes_out += await conn.stream.send(MsgType.RESULT, header,
+                                                   payload)
+            sess.mark_delivered(rid)
+
+    def _sweep_expired(self):
+        """Detached sessions past the resume TTL: drop their parked
+        results and withdrawn requests (admission was already released at
+        detach) and forget the token."""
+        if self.resume_ttl_s is None:
+            return
+        now = time.monotonic()
+        for token, sess in list(self._sessions.items()):
+            if sess.detached_at is None:
+                continue
+            if now - sess.detached_at > self.resume_ttl_s:
+                self.qos.tenant(sess.tenant).expired += 1
+                del self._sessions[token]
+
+    def _end_session(self, sess: _Session):
+        """Clean BYE: anything still outstanding is abandoned by the
+        client — withdraw it and release its admission units."""
+        for uid, route in list(self._routes.items()):
+            if route.sess is not sess:
+                continue
+            self.engine.withdraw(uid)
+            del self._routes[uid]
+            self.admission.release(sess.tenant)
+        self._sessions.pop(sess.token, None)
+
+    # ------------------------------------------------------------------
     # connection handling
     # ------------------------------------------------------------------
 
     async def _handle(self, reader: asyncio.StreamReader,
                       writer: asyncio.StreamWriter):
+        task = asyncio.current_task()
+        self._conn_tasks.add(task)
+        stream = FrameStream(reader, writer, direction="s2c",
+                             faults=self.faults, epoch=next(self._epochs))
         conn: _Conn | None = None
+        sess: _Session | None = None
+        clean = False
         try:
-            conn = await self._handshake(reader, writer)
+            try:
+                conn, sess = await asyncio.wait_for(
+                    self._handshake(stream), self.handshake_timeout_s)
+            except asyncio.TimeoutError:
+                return                        # half-open peer: free the slot
             if conn is None:
                 return
+            misses = 0
             while True:
-                frame = await proto.read_frame(reader)
-                if frame is None:
-                    break                     # peer went away
-                mtype, header, payload, nbytes = frame
+                try:
+                    got = await stream.recv(timeout=self.heartbeat_s)
+                except asyncio.TimeoutError:
+                    misses += 1
+                    if misses > self.max_misses:
+                        raise ConnectionError(
+                            f"peer silent for {misses} heartbeat intervals")
+                    await stream.ping()       # PONG carries the peer's
+                    continue                  # send watermark -> gap NACKs
+                misses = 0
+                if got is None:
+                    break                     # peer went away (EOF)
+                mtype, header, payload, nbytes, _seq = got
                 self.qos.tenant(conn.tenant).bytes_in += nbytes
                 if mtype == MsgType.SUBMIT:
-                    await self._submit(conn, header, payload, nbytes)
+                    await self._submit(sess, conn, header, payload, nbytes)
                 elif mtype == MsgType.STATS:
-                    out = await proto.send_frame(
-                        conn.writer, MsgType.STATS_OK,
-                        {"stats": self.stats()})
+                    out = await conn.stream.send(MsgType.STATS_OK,
+                                                 {"stats": self.stats()})
                     self.qos.tenant(conn.tenant).bytes_out += out
                 elif mtype == MsgType.BYE:
-                    await proto.send_frame(conn.writer, MsgType.BYE_OK, {})
+                    await conn.stream.send(MsgType.BYE_OK, {})
+                    clean = True
                     break
                 else:
                     raise ProtocolError(f"unexpected {mtype.name} frame "
                                         "after handshake")
+        except (ChannelErasure, ConnectionError, asyncio.TimeoutError):
+            pass                              # abnormal end -> detach below
         except ProtocolError as e:
             # fail LOUDLY, then kill the connection: a framing/dtype error
             # means client and server no longer agree on the wire format
             try:
-                await proto.send_frame(writer, MsgType.ERROR,
-                                       {"reason": str(e)})
-            except (ConnectionError, RuntimeError):
+                await stream.send(MsgType.ERROR, {"reason": str(e)})
+            except (ConnectionError, RuntimeError, OSError):
                 pass
-        except (ConnectionError, asyncio.CancelledError):
-            pass
+        except asyncio.CancelledError:
+            # server shutdown: stop() releases the books after cancelling
+            raise
         finally:
+            self._conn_tasks.discard(task)
             if conn is not None:
                 conn.open = False
-            writer.close()
+                tq = self.qos.tenant(conn.tenant)
+                tq.retransmits += stream.counters["retransmits"]
+                tq.nacks += stream.counters["nacks"]
+            if sess is not None:
+                if clean:
+                    self._end_session(sess)
+                elif sess.conn is conn:       # not already resumed elsewhere
+                    self._detach(sess, "connection lost")
+            stream.close()
             try:
-                await writer.wait_closed()
-            except Exception:
+                await stream.wait_closed()
+            except asyncio.CancelledError:
                 pass
 
-    async def _handshake(self, reader, writer) -> _Conn | None:
-        frame = await proto.read_frame(reader)
-        if frame is None:
-            return None
-        mtype, header, _, nbytes = frame
+    async def _handshake(self, stream: FrameStream):
+        # a dropped HELLO must not stall the full handshake deadline: ping
+        # on silence — the peer's PONG carries its send watermark, the gap
+        # NACK recovers the frame (the outer wait_for still bounds this)
+        while True:
+            try:
+                got = await stream.recv(timeout=max(self.heartbeat_s, 0.05))
+                break
+            except asyncio.TimeoutError:
+                await stream.ping()
+        if got is None:
+            return None, None
+        mtype, header, _, nbytes, _seq = got
         if mtype != MsgType.HELLO:
             raise ProtocolError(f"expected HELLO, got {mtype.name}")
         tenant = header.get("tenant")
@@ -268,23 +482,53 @@ class FrontDoorServer:
                 f"codec mismatch: client {spec!r} (canonical {canon!r}) vs "
                 f"engine {self._spec!r}; compatible specs: {compat} — "
                 "refusing the connection rather than decoding garbage")
-        conn = _Conn(writer=writer, tenant=tenant)
+        conn = _Conn(stream=stream, tenant=tenant)
+        resume = header.get("resume")
+        resumed = False
+        if resume is not None:
+            sess = self._sessions.get(resume)
+            if sess is None:
+                raise ProtocolError(
+                    f"resume token {resume!r} unknown or expired (sessions "
+                    f"detach for at most {self.resume_ttl_s}s)")
+            if sess.tenant != tenant:
+                raise ProtocolError(
+                    f"resume token {resume!r} belongs to another tenant")
+            if sess.conn is not None:
+                sess.conn.open = False        # stale half-open predecessor
+            resumed = True
+        else:
+            token = f"{tenant}#{next(self._tokens)}"
+            sess = _Session(token=token, tenant=tenant, conn=conn)
+            self._sessions[token] = sess
         tq = self.qos.tenant(tenant)
         tq.bytes_in += nbytes
-        tq.bytes_out += await proto.send_frame(
-            writer, MsgType.HELLO_OK,
+        tq.bytes_out += await stream.send(
+            MsgType.HELLO_OK,
             {"codec": self._spec, "num_slots": self.engine.num_slots,
              "max_len": self.engine.max_len,
              "kv_layout": self.engine.kv_layout,
-             "preemption": self.engine.preemption})
-        return conn
+             "preemption": self.engine.preemption,
+             "session": sess.token, "resumed": resumed,
+             "heartbeat_s": self.heartbeat_s})
+        if resumed:
+            await self._resume(sess, conn)
+        return conn, sess
 
-    async def _submit(self, conn: _Conn, header: dict, payload: bytes,
-                      nbytes: int):
+    async def _submit(self, sess: _Session, conn: _Conn, header: dict,
+                      payload: bytes, nbytes: int):
         tq = self.qos.tenant(conn.tenant)
         rid = header.get("rid")
         if not isinstance(rid, int):
             raise ProtocolError("SUBMIT carries no integer rid")
+        if rid in sess.rids or rid in sess.done_rids:
+            # idempotent re-SUBMIT after a reconnect: the request is
+            # already in flight (or parked), or its result was already
+            # delivered (the replay raced the parked-result flush) —
+            # re-ACK instead of doubling it
+            tq.bytes_out += await conn.stream.send(MsgType.ACCEPTED,
+                                                   {"rid": rid})
+            return
         tokens = proto.unpack_array(header, payload)
         if tokens.ndim != 1 or tokens.dtype.name != "int32":
             raise ProtocolError(f"SUBMIT payload must be a 1-D int32 token "
@@ -294,8 +538,8 @@ class FrontDoorServer:
         if verdict != ADMIT:
             tq.busy_rejections += 1
             retry = self.busy_retry_ms * (4 if verdict == BUSY_QUEUE else 1)
-            tq.bytes_out += await proto.send_frame(
-                conn.writer, MsgType.BUSY,
+            tq.bytes_out += await conn.stream.send(
+                MsgType.BUSY,
                 {"rid": rid, "reason": verdict, "retry_after_ms": retry})
             return
         policy = self.admission.policy(conn.tenant)
@@ -310,12 +554,13 @@ class FrontDoorServer:
             # the whole pool): an ERROR the client must not retry verbatim
             self.admission.release(conn.tenant)
             tq.errors += 1
-            tq.bytes_out += await proto.send_frame(
-                conn.writer, MsgType.ERROR, {"rid": rid, "reason": str(e)})
+            tq.bytes_out += await conn.stream.send(
+                MsgType.ERROR, {"rid": rid, "reason": str(e)})
             return
-        self._routes[req.uid] = _Route(conn=conn, rid=rid,
+        self._routes[req.uid] = _Route(sess=sess, rid=rid,
                                        tenant=conn.tenant, bytes_in=nbytes)
-        tq.bytes_out += await proto.send_frame(conn.writer, MsgType.ACCEPTED,
+        sess.rids[rid] = req.uid
+        tq.bytes_out += await conn.stream.send(MsgType.ACCEPTED,
                                                {"rid": rid})
 
     # ------------------------------------------------------------------
@@ -339,4 +584,8 @@ class FrontDoorServer:
                 "admission": {"inflight_total": self.admission.inflight_total,
                               "inflight": dict(self.admission.inflight),
                               "max_queue_depth":
-                                  self.admission.max_queue_depth}}
+                                  self.admission.max_queue_depth},
+                "sessions": {"open": sum(s.conn is not None
+                                         for s in self._sessions.values()),
+                             "detached": sum(s.conn is None
+                                             for s in self._sessions.values())}}

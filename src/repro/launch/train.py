@@ -23,6 +23,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -74,25 +75,50 @@ def run_standard(args, cfg):
     adaptive = isinstance(codec, codecs.AdaptiveC3SL)
     adaptive_bwd = link is not None and link.bwd.adaptive
 
+    # Seeded fault injection on the cut link (the CI chaos-smoke job): a
+    # FaultPlan draws per-step packet loss on the boundary payload, the
+    # RecoveryPolicy decides erasure-tolerant decode vs NACK/retransmit.
+    # Clean runs (no fault flags) never touch this path — the compiled
+    # programs are bit-identical to pre-fault builds.
+    fault_link = None
+    if args.fault_drop > 0.0 or args.fault_corrupt > 0.0:
+        if codec is None:
+            raise SystemExit("--fault-drop/--fault-corrupt need a boundary "
+                             "codec (--codec): a raw split has no payload "
+                             "to lose")
+        plan = transport.FaultPlan(
+            seed=args.fault_seed,
+            rates={"drop": args.fault_drop, "corrupt": args.fault_corrupt})
+        fault_link = link if link is not None else transport.as_link(codec)
+        fault_link.install_faults(
+            plan, transport.RecoveryPolicy(mode=args.fault_mode))
+        print(f"[faults] installed on the cut link: drop={args.fault_drop} "
+              f"corrupt={args.fault_corrupt} seed={args.fault_seed} "
+              f"recovery={args.fault_mode}", flush=True)
+
     def make_step(step_codec, step_codec_params):
         """One jitted train step closing over ONE static codec/link + its
         params.  Under Adaptive-R this is called once per (R_fwd, R_bwd)
         bucket pair — each pair is its own compiled branch, so host-side
         schedule switches never retrace.  The probe argument taps the
-        gradient-retrieval SNR (asymmetric links; zero otherwise)."""
-        @jax.jit
-        def step_fn(params, opt_state, batch, probe):
+        gradient-retrieval SNR (asymmetric links; zero otherwise).  With
+        faults installed the step takes the erasure keep-masks as a runtime
+        argument (bucket-static shapes — masked steps share the branch)."""
+        def _body(params, opt_state, batch, probe, erasure):
             def loss_fn(p, pr):
                 return lm_lib.lm_loss(p, batch, cfg, codec=step_codec,
                                       codec_params=step_codec_params,
-                                      with_metrics=True, bwd_probe=pr)
+                                      with_metrics=True, bwd_probe=pr,
+                                      erasure=erasure)
             (loss, metrics), (grads, bwd_snr) = jax.value_and_grad(
                 loss_fn, argnums=(0, 1), has_aux=True)(params, probe)
             grads, gn = clip_by_global_norm(grads, 1.0)
             updates, opt_state2 = opt.update(grads, opt_state, params)
             return (apply_updates(params, updates), opt_state2, loss, gn,
                     metrics.get("cut_snr"), bwd_snr)
-        return step_fn
+        if fault_link is not None:
+            return jax.jit(_body)
+        return jax.jit(functools.partial(_body, erasure=None))
 
     step_fns = transport.build_link_program_table(codec, codec_params,
                                                   make_step)
@@ -102,6 +128,7 @@ def run_standard(args, cfg):
     t0 = time.time()
     losses = []
     wire_fwd_total = wire_bwd_total = 0
+    fault_skipped = 0
     probe0 = jnp.float32(0.0)
     tokens_per_step = args.batch * args.seq
     # MFU denominator: this host's measured-equivalent peak (CPU has no
@@ -112,9 +139,24 @@ def run_standard(args, cfg):
         if cfg.frontend:
             batch["frontend"] = jnp.zeros(
                 (args.batch, cfg.frontend_seq, cfg.frontend_dim))
+        erasure = fault_info = None
+        if fault_link is not None:
+            try:
+                erasure, fault_info = fault_link.next_erasure(args.batch)
+            except transport.ChannelErasure as e:
+                # this step's payload is unrecoverable under the policy's
+                # retry budget — skip it rather than train on garbage
+                fault_skipped += 1
+                print(f"step {step:5d} SKIPPED (unrecoverable): {e}",
+                      flush=True)
+                continue
         key = transport.link_program_key(codec)
-        params, opt_state, loss, gn, snr, bwd_snr = step_fns[key](
-            params, opt_state, batch, probe0)
+        if fault_link is None:
+            params, opt_state, loss, gn, snr, bwd_snr = step_fns[key](
+                params, opt_state, batch, probe0)
+        else:
+            params, opt_state, loss, gn, snr, bwd_snr = step_fns[key](
+                params, opt_state, batch, probe0, erasure)
         losses.append(float(loss))
         # actual bytes this step put on the boundary, per direction: the
         # backward payload has the forward's compressed shape (mirrored /
@@ -127,6 +169,12 @@ def run_standard(args, cfg):
         else:
             step_codec = codec.buckets[key] if adaptive else codec
             wf = wb = step_codec.wire_bytes(args.batch)
+        if fault_info is not None:
+            # retransmissions inflate the actual wire traffic
+            if fault_info.get("fwd"):
+                wf = int(round(wf * fault_info["fwd"]["wire_mult"]))
+            if fault_info.get("bwd"):
+                wb = int(round(wb * fault_info["bwd"]["wire_mult"]))
         wire_fwd_total += wf
         wire_bwd_total += wb
         if link is not None:
@@ -155,6 +203,10 @@ def run_standard(args, cfg):
                              f"(ema {codec.ema_snr:.1f})" + sched)
                 elif snr is not None:
                     sched = f" snr {float(snr):.1f}dB" + sched
+                if fault_info is not None and fault_info.get("fwd"):
+                    fi = fault_info["fwd"]
+                    sched += (f" [erased {fi['erased_frac']:.0%} "
+                              f"x{fi['wire_mult']:.2f} wire]")
             print(f"step {step:5d} loss {float(loss):.4f} gnorm {float(gn):.3f}"
                   f"{sched} | {tps:,.0f} tok/s, "
                   f"{step_flops*(step+1)/dt/1e9:.1f} "
@@ -164,6 +216,12 @@ def run_standard(args, cfg):
               f"{wire_bwd_total:,d} B bwd = "
               f"{wire_fwd_total + wire_bwd_total:,d} B total over "
               f"{args.steps} steps", flush=True)
+    if fault_link is not None:
+        print(f"[faults] {fault_skipped} of {args.steps} steps skipped as "
+              f"unrecoverable", flush=True)
+        if not losses:
+            raise SystemExit("[faults] every step was unrecoverable — "
+                             "raise the retry budget or lower the rates")
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, args.steps, {"params": params},
                         {"arch": cfg.name, "loss": losses[-1]})
@@ -275,9 +333,30 @@ def main():
                          "synchronous (send serializes with the next "
                          "microbatch), 2 = the ppermute overlaps the next "
                          "front pass (one extra bubble step)")
+    ap.add_argument("--fault-drop", type=float, default=0.0,
+                    help="seeded per-packet drop rate on the cut payload "
+                         "(repro.faults.FaultPlan; 0 = clean, and the "
+                         "compiled programs are bit-identical to a "
+                         "fault-free build)")
+    ap.add_argument("--fault-corrupt", type=float, default=0.0,
+                    help="seeded per-packet corruption rate on the cut "
+                         "payload (corrupt packets are discarded = erased)")
+    ap.add_argument("--fault-seed", type=int, default=7,
+                    help="FaultPlan seed (the whole chaos run is replayable)")
+    ap.add_argument("--fault-mode", choices=["erasure", "retransmit"],
+                    default="erasure",
+                    help="lossy-step recovery: 'erasure' decodes through "
+                         "the renormalized mask (loss degrades SNR, feeds "
+                         "the adaptive controller), 'retransmit' NACKs "
+                         "until complete and pays the wire bytes")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
+    if args.pipeline and (args.fault_drop > 0.0 or args.fault_corrupt > 0.0):
+        raise SystemExit("fault injection drives the standard loop; the "
+                         "pipeline path takes erasure masks through "
+                         "make_pod_pipeline_loss_fn(with_erasure=True) "
+                         "(see tests/test_faults.py)")
 
     cfg = get_config(args.arch)
     if args.reduced:

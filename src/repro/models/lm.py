@@ -103,7 +103,7 @@ def _split_stacked(stacked, n_front: int):
 
 def lm_forward(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None,
                sliding_window=None, remat=True, last_only=False,
-               with_metrics=False, bwd_probe=None):
+               with_metrics=False, bwd_probe=None, erasure=None):
     """Returns (logits (B,S,V), aux_loss) — or (logits, aux_loss, metrics)
     with ``with_metrics=True``, where metrics carries ``cut_snr`` (the
     retrieval SNR in dB at the cut layer, the Adaptive-R controller's signal;
@@ -115,7 +115,12 @@ def lm_forward(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None
     (per-direction cut-layer codecs); for an asymmetric link, ``bwd_probe``
     is the gradient-SNR tap — differentiate the loss w.r.t. it and the
     resulting "gradient" is the measured server→client gradient-retrieval
-    SNR in dB (see ``repro.transport.channel.grad_roundtrip``)."""
+    SNR in dB (see ``repro.transport.channel.grad_roundtrip``).
+
+    ``erasure`` (``{"fwd": keep[, "bwd": keep]}``) injects cut-payload loss
+    into the round-trip: masks are runtime arguments with bucket-static
+    shapes (see ``repro.transport.link.roundtrip``), ``None`` is
+    structurally the pre-fault trace."""
     sliding_window = sliding_window if sliding_window is not None else cfg.sliding_window
     memory = None
     if cfg.is_encdec:
@@ -142,10 +147,11 @@ def lm_forward(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None
         from repro.transport.link import roundtrip
         if with_metrics:
             Zhat, snr = roundtrip(codec, codec_params, Zf, with_snr=True,
-                                  bwd_probe=bwd_probe)
+                                  bwd_probe=bwd_probe, erasure=erasure)
             metrics["cut_snr"] = snr
         else:
-            Zhat = roundtrip(codec, codec_params, Zf, bwd_probe=bwd_probe)
+            Zhat = roundtrip(codec, codec_params, Zf, bwd_probe=bwd_probe,
+                             erasure=erasure)
         h = Zhat.reshape(B, S, d)
         h, a2 = run(back, h=h)
         aux = aux + a1 + a2
@@ -161,17 +167,18 @@ def lm_forward(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None
 
 def lm_loss(params, batch, cfg: ModelConfig, *, codec=None, codec_params=None,
             sliding_window=None, remat=True, with_metrics=False,
-            bwd_probe=None):
+            bwd_probe=None, erasure=None):
     """Mean next-token CE (+ MoE aux).  labels == -1 are masked (vlm pads
     frontend positions).  ``with_metrics=True`` returns (loss, metrics) with
     the cut-layer ``cut_snr`` (see lm_forward) — the signal the Adaptive-R
     codec scheduler consumes in repro.launch.train.  ``codec`` may be a
-    static ``SplitLink``; ``bwd_probe`` taps the gradient-retrieval SNR
-    (see lm_forward)."""
+    static ``SplitLink``; ``bwd_probe`` taps the gradient-retrieval SNR and
+    ``erasure`` injects cut-payload loss (see lm_forward)."""
     out = lm_forward(params, batch, cfg, codec=codec,
                      codec_params=codec_params,
                      sliding_window=sliding_window, remat=remat,
-                     with_metrics=with_metrics, bwd_probe=bwd_probe)
+                     with_metrics=with_metrics, bwd_probe=bwd_probe,
+                     erasure=erasure)
     logits, aux = out[0], out[1]
     labels = batch["labels"]
     if cfg.frontend and not cfg.is_encdec:
@@ -236,7 +243,9 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
     across the decode batch — the serving-path C3-SL integration.  ``paged``
     (static PagedLayout, matching the cache built with it) switches the
     per-position cache leaves to pool+page-table addressing; ``live`` (B,)
-    masks every cache/state write for rows that are not decoding.
+    masks every cache/state write for rows that are not decoding AND zeroes
+    their cut-layer contribution to the batch-wise codec, so a dead slot's
+    stale cache state can never perturb live rows through cross-talk.
     """
     h = params["embed"][tokens]
     memory = cache.get("memory")
@@ -258,6 +267,13 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
         h, nc_front = stack_lib.apply_stack_decode(p_front, c_front, cfg, h, pos,
                                                    **kw)
         B, _, d = h.shape
+        if live is not None:
+            # A non-live row's cut-layer feature is attention over whatever
+            # its (possibly stale) page-table rows point at — i.e. garbage
+            # that depends on allocation history.  It must not leak into the
+            # batch-wise superposition: zero it so dead slots contribute
+            # nothing and live outputs are a function of live state only.
+            h = jnp.where(live[:, None, None], h, 0.0)
         payload = codec.encode(codec_params, h.reshape(B, d))
         h = codec.decode(codec_params, payload).reshape(B, 1, d)
         h, nc_back = stack_lib.apply_stack_decode(p_back, c_back, cfg, h, pos,
@@ -291,10 +307,12 @@ def prefill_chunk(params, cache, tokens, pos, cfg: ModelConfig, *,
     features (B divisible by R).  Chunked prefill then reproduces
     prefill-as-decode outputs token-for-token when the group CONTENTS also
     match, i.e. every slot ingests in lockstep (full batch, equal prompt
-    lengths).  With empty slots or ragged prompts the two paths feed
-    different padding features into the HRR superposition, so outputs
-    agree only up to codec cross-talk — same as any occupancy change does
-    under batch-wise compression.
+    lengths).  Non-valid positions (idle slots, ragged chunk tails)
+    contribute exact ZEROS to the superposition — mirroring decode's
+    ``live`` masking — so padding never injects cache-history-dependent
+    cross-talk; with ragged prompts the two paths still group different
+    LIVE contents per step, so outputs agree only up to codec cross-talk —
+    same as any occupancy change does under batch-wise compression.
     """
     B, C = tokens.shape
     if valid is None:
@@ -319,6 +337,11 @@ def prefill_chunk(params, cache, tokens, pos, cfg: ModelConfig, *,
         c_front, c_back = _split_stacked(cache["stack"], n_cut)
         h, nc_front = stack_lib.apply_stack_prefill(p_front, c_front, cfg, h,
                                                     pos, valid, **kw)
+        # same containment as decode_step: positions that are not real
+        # prompt tokens (idle slots, ragged chunk tails) carry garbage
+        # features that would otherwise superpose onto live rows — and vary
+        # with cache/page history.  Zero them before the encode.
+        h = jnp.where(valid[:, :, None], h, 0.0)
         payload = sequence_group_encode(codec, codec_params, h.swapaxes(0, 1))
         h = sequence_group_decode(codec, codec_params, payload,
                                   C, B).swapaxes(0, 1)

@@ -266,7 +266,7 @@ class BatchedEngine:
         self.stats = {"dispatches": 0, "decode_steps": 0, "prefill_chunks": 0,
                       "payload_wire_bytes": 0, "wire_bytes_fwd": 0,
                       "wire_bytes_bwd": 0, "eos_early_exits": 0,
-                      "evictions": 0}
+                      "evictions": 0, "withdrawn": 0}
         # the served R schedule under an adaptive codec, as {R: count} with
         # one count per EXECUTED decode step + one per prefill chunk, so
         # total() == decode_steps + prefill_chunks (not dispatches — a
@@ -504,6 +504,44 @@ class BatchedEngine:
         req.t_submit = time.monotonic()
         self.queue.append(req)
         self._dirty = True            # a later run() must re-check admission
+
+    def withdraw(self, uid: int):
+        """Pull a queued or running request OUT of the engine (front-door
+        disconnect handling): its slot/pages free immediately and the
+        returned ``Request`` carries the tokens emitted so far, so a later
+        ``submit`` of the same object re-prefills prompt + emitted tokens
+        and greedy decode resumes bit-identically (the same machinery slot
+        preemption uses).  Returns None when the uid is finished or
+        unknown — finished results flow through the normal retire path."""
+        for k, req in enumerate(self.queue):
+            if req.uid == uid:
+                del self.queue[k]
+                self.stats["withdrawn"] += 1
+                return req
+        for i, slot in enumerate(self.slots):
+            if slot.req is None or slot.req.uid != uid:
+                continue
+            req = slot.req
+            self.stats["withdrawn"] += 1
+            if self.prefill_mode == "chunked":
+                st = {k: np.array(v)
+                      for k, v in jax.device_get(self.state).items()}
+                n = int(st["out_len"][i])
+                req.out = [int(t) for t in st["out_buf"][i, :n]]
+                st["active"][i] = st["done"][i] = False
+                st["pos"][i] = st["last_tok"][i] = st["out_len"][i] = 0
+                st["out_buf"][i, :] = 0
+                self.state = jax.device_put(st)
+            req.evictions += 1
+            req.done = False
+            slot.req = None
+            slot.feed = []
+            slot.ingested = 0
+            slot.pos = slot.in_prompt = 0
+            self._free_slot_pages(i)
+            self._dirty = True
+            return req
+        return None
 
     @property
     def active(self) -> int:

@@ -27,7 +27,8 @@ Loss builders:
 ``repro.core.split`` remains a thin re-export shim for pre-transport
 imports (same pattern PR 1 used for ``repro.core.codec``).
 """
-from repro.transport.channel import Channel, grad_roundtrip
+from repro.faults import ChannelErasure, FaultPlan, RecoveryPolicy
+from repro.transport.channel import Channel, grad_roundtrip, masked_decode
 from repro.transport.link import (SplitLink, as_link, build_link,
                                   build_link_or_codec,
                                   build_link_program_table, is_link_spec,
@@ -38,11 +39,12 @@ from repro.transport.split import (apply_codec, make_split_loss_fn,
                                    split_comm_bytes)
 
 __all__ = [
-    "Channel", "SplitLink", "grad_roundtrip", "roundtrip",
+    "Channel", "SplitLink", "grad_roundtrip", "roundtrip", "masked_decode",
     "as_link", "build_link", "build_link_or_codec", "is_link_spec",
     "parse_link_spec",
     "build_link_program_table", "link_program_key", "pin_link",
     "slice_link_params",
     "apply_codec", "make_split_loss_fn", "split_comm_bytes",
     "make_pod_pipeline_loss_fn",
+    "FaultPlan", "RecoveryPolicy", "ChannelErasure",
 ]

@@ -64,7 +64,49 @@ def _grad_seam(bwd_codec):
     return seam
 
 
-def grad_roundtrip(bwd_codec, payload, bwd_params, probe=None):
+def masked_decode(codec, params, payload, keep):
+    """Erasure-aware decode dispatch: codecs that implement
+    ``decode_masked`` (C3-SL's renormalized unbind, Chain, adaptive
+    buckets) get the mask natively; anything else decodes the zeroed
+    payload (lost elements contribute nothing, no renormalization)."""
+    fn = getattr(codec, "decode_masked", None)
+    if fn is None:
+        return codec.decode(params, payload * keep)
+    return fn(params, payload, keep)
+
+
+@functools.lru_cache(maxsize=None)
+def _grad_seam_masked(bwd_codec):
+    """The erasure-aware variant of :func:`_grad_seam`: the backward
+    payload's keep mask rides as a runtime argument (static shape per
+    bucket — no recompiles), the cotangent round-trip decodes through
+    ``masked_decode``, and the probe cotangent carries the
+    erasure-DEGRADED gradient SNR the backward controller observes."""
+
+    @jax.custom_vjp
+    def seam(payload, bwd_params, probe, keep):
+        del bwd_params, probe, keep
+        return payload
+
+    def fwd(payload, bwd_params, probe, keep):
+        del probe
+        return payload, (bwd_params, keep)
+
+    def bwd(res, g):
+        bwd_params, keep = res
+        D = g.shape[-1]
+        g2 = g.reshape(-1, D)
+        ghat = masked_decode(bwd_codec, bwd_params,
+                             bwd_codec.encode(bwd_params, g2), keep)
+        snr = hrr.retrieval_snr(g2, ghat)
+        zeros = jax.tree.map(jnp.zeros_like, bwd_params)
+        return ghat.reshape(g.shape), zeros, snr, jnp.zeros_like(keep)
+
+    seam.defvjp(fwd, bwd)
+    return seam
+
+
+def grad_roundtrip(bwd_codec, payload, bwd_params, probe=None, keep=None):
     """Identity on ``payload``; compresses its GRADIENT through ``bwd_codec``.
 
     ``probe`` (scalar f32) is a gradient tap: differentiate the surrounding
@@ -73,10 +115,17 @@ def grad_roundtrip(bwd_codec, payload, bwd_params, probe=None):
     ``AdaptiveC3SL`` controller's feedback, measured in the same backward
     pass that ships the payload.  ``bwd_codec`` must be a STATIC codec (an
     adaptive wrapper's bucket), same jit-safety contract as everywhere else.
+
+    ``keep`` (optional, backward-payload-shaped) is the backward
+    direction's erasure mask: the gradient round-trip decodes through the
+    mask-aware path and the probe SNR degrades accordingly.  ``keep=None``
+    routes through the exact pre-fault seam (structurally identical trace).
     """
     if probe is None:
         probe = jnp.float32(0.0)
-    return _grad_seam(bwd_codec)(payload, bwd_params, probe)
+    if keep is None:
+        return _grad_seam(bwd_codec)(payload, bwd_params, probe)
+    return _grad_seam_masked(bwd_codec)(payload, bwd_params, probe, keep)
 
 
 @dataclasses.dataclass
@@ -90,6 +139,9 @@ class Channel:
     """
     direction: str                 # "fwd" | "bwd" (display/accounting tag)
     codec: object
+    faults: object = None          # repro.faults.FaultPlan (None = clean)
+    recovery: object = None        # repro.faults.RecoveryPolicy
+    _step: int = dataclasses.field(default=0, repr=False, compare=False)
 
     @property
     def adaptive(self) -> bool:
@@ -121,6 +173,40 @@ class Channel:
         if self.adaptive:
             return self.codec.params_for(params, key)
         return params
+
+    def install_faults(self, plan, recovery=None) -> "Channel":
+        """Install a ``repro.faults.FaultPlan`` (and optional
+        ``RecoveryPolicy``) on this direction; resets the step counter so
+        the injected schedule replays from step 0.  Returns self."""
+        self.faults = plan
+        self.recovery = recovery
+        self._step = 0
+        return self
+
+    def next_erasure(self, rows: int | None = None, shape=None):
+        """Draw the NEXT step's erasure mask for this direction under the
+        installed plan, advancing the channel's per-direction step
+        counter.  Returns ``(keep, info)`` — both ``None`` with no plan
+        (or a zero plan), so clean runs stay structurally fault-free;
+        otherwise ``keep`` is the float32 element mask of the current
+        bucket's payload shape (all-ones on loss-free steps) and ``info``
+        the retransmission accounting from
+        :func:`repro.faults.negotiate_payload`.  Raises
+        ``ChannelErasure`` when the recovery budget cannot repair the
+        step."""
+        step = self._step
+        self._step += 1
+        if self.faults is None or self.faults.is_zero():
+            return None, None
+        if shape is None:
+            if rows is None:
+                raise ValueError("next_erasure needs rows or an explicit "
+                                 "payload shape")
+            c = self.current
+            shape = c.payload_shape(rows)
+        from repro.faults import negotiate_payload
+        return negotiate_payload(self.faults, self.direction, step,
+                                 tuple(shape), self.recovery)
 
     def wire_bytes(self, rows: int) -> int:
         """Exact bytes this direction ships for ``rows`` feature rows —

@@ -34,7 +34,7 @@ from __future__ import annotations
 from repro import codecs
 from repro.codecs import AdaptiveC3SL, clamp_R
 from repro.core import hrr
-from repro.transport.channel import Channel, grad_roundtrip
+from repro.transport.channel import Channel, grad_roundtrip, masked_decode
 
 LINK_SEP = ">>"
 BWD_PREFIX = "bwd:"
@@ -155,6 +155,36 @@ class SplitLink:
             return rf, rf
         return rf, self.bwd.observe(bwd_snr, loss_slack)
 
+    # ---- fault injection -------------------------------------------------
+
+    def install_faults(self, plan, recovery=None) -> "SplitLink":
+        """Install one ``repro.faults.FaultPlan`` on both directions (the
+        channels draw independently — their rngs key on the direction
+        tag).  Returns self."""
+        self.fwd.install_faults(plan, recovery)
+        self.bwd.install_faults(plan, recovery)
+        return self
+
+    def next_erasure(self, B: int):
+        """Draw both directions' erasure masks for the next step:
+        ``{"fwd": keep, "bwd": keep}`` suitable for ``roundtrip``'s
+        ``erasure`` argument (entries None on clean directions; the whole
+        dict is None when nothing is installed), plus the merged
+        retransmission info ``{"fwd": ..., "bwd": ...}``."""
+        kf, inf_f = self.fwd.next_erasure(rows=B)
+        kb, inf_b = (None, None)
+        if not self.mirrored:
+            rows = B // self.fwd.current_R
+            kb, inf_b = self.bwd.next_erasure(rows=rows)
+        if kf is None and kb is None:
+            return None, None
+        erasure = {}
+        if kf is not None:
+            erasure["fwd"] = kf
+        if kb is not None:
+            erasure["bwd"] = kb
+        return erasure, {"fwd": inf_f, "bwd": inf_b}
+
     # ---- accounting ------------------------------------------------------
 
     def wire_bytes_fwd(self, B: int) -> int:
@@ -228,7 +258,8 @@ def build_link_or_codec(spec: str, /, *, quant_bits=None, **defaults):
 # the round-trip seam (shared by the loss builders and repro.models.lm)
 # --------------------------------------------------------------------------
 
-def roundtrip(codec, params, Zf, *, with_snr: bool = False, bwd_probe=None):
+def roundtrip(codec, params, Zf, *, with_snr: bool = False, bwd_probe=None,
+              erasure=None):
     """Round-trip flat (B, D) cut features through a STATIC codec or a
     STATIC ``SplitLink`` (adaptive channels must already be resolved to
     buckets — same contract as every jitted call site).
@@ -238,18 +269,38 @@ def roundtrip(codec, params, Zf, *, with_snr: bool = False, bwd_probe=None):
     payload, so the forward numbers are IDENTICAL to mirrored and only the
     backward pass changes.  ``with_snr`` adds the forward retrieval SNR;
     ``bwd_probe`` is the gradient-SNR tap (see ``grad_roundtrip``).
+
+    ``erasure`` injects payload loss: ``{"fwd": keep}`` (and, for an
+    asymmetric link, ``"bwd": keep``) with keep masks shaped like each
+    direction's payload (1.0 kept / 0.0 erased) — runtime arguments with
+    bucket-static shapes, so masked steps share one compiled branch and
+    never retrace.  The decode renormalizes over survivors
+    (``decode_masked``) and ``with_snr`` reports the erasure-DEGRADED
+    retrieval SNR, which is exactly what the adaptive controller should
+    observe: loss on the wire reads as an R step-down, not a crash.
+    ``erasure=None`` is structurally the pre-fault trace (bit-identity by
+    construction).
     """
+    fwd_keep = erasure.get("fwd") if erasure else None
+    bwd_keep = erasure.get("bwd") if erasure else None
     if isinstance(codec, SplitLink):
         fwd_c = codec.fwd.codec
         fwd_p = codec.fwd_params(params)
         payload = fwd_c.encode(fwd_p, Zf)
         if not codec.mirrored:
             payload = grad_roundtrip(codec.bwd.codec, payload,
-                                     codec.bwd_params(params), bwd_probe)
-        Zhat = fwd_c.decode(fwd_p, payload)
+                                     codec.bwd_params(params), bwd_probe,
+                                     keep=bwd_keep)
+        if fwd_keep is None:
+            Zhat = fwd_c.decode(fwd_p, payload)
+        else:
+            Zhat = masked_decode(fwd_c, fwd_p, payload, fwd_keep)
     else:
         payload = codec.encode(params, Zf)
-        Zhat = codec.decode(params, payload)
+        if fwd_keep is None:
+            Zhat = codec.decode(params, payload)
+        else:
+            Zhat = masked_decode(codec, params, payload, fwd_keep)
     if with_snr:
         return Zhat, hrr.retrieval_snr(Zf, Zhat)
     return Zhat

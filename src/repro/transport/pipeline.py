@@ -42,7 +42,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.codecs import AdaptiveC3SL
-from repro.transport.channel import grad_roundtrip
+from repro.transport.channel import grad_roundtrip, masked_decode
 from repro.transport.link import SplitLink
 
 
@@ -80,6 +80,7 @@ def make_pod_pipeline_loss_fn(
     mesh,
     num_microbatches: int = 1,
     async_depth: int = 1,
+    with_erasure: bool = False,
 ) -> Callable:
     """Returns loss(params, batch) implementing the 2-stage compressed pipeline.
 
@@ -91,6 +92,15 @@ def make_pod_pipeline_loss_fn(
     The in-flight payloads are a ring of ``async_depth`` lax.scan carry
     buffers; ``lax.ppermute`` moves the newest one each step (see module
     docstring for the schedule and staleness semantics).
+
+    ``with_erasure=True`` compiles the chaos variant instead:
+    ``loss(params, batch, keep)`` where ``keep`` is an
+    ``(M + depth, mb // R_fwd, D)`` float32 stack of per-step keep masks
+    — ``keep[t]`` masks the payload the back stage CONSUMES at scan step
+    t (the one sent at t - depth), decoded through the renormalizing
+    ``decode_masked`` path.  An all-ones stack reproduces the clean
+    schedule bitwise (the masked decode is exact at full mask); the
+    erasure-free builder keeps the exact pre-fault trace.
     """
     M = num_microbatches
     depth = int(async_depth)
@@ -100,8 +110,17 @@ def make_pod_pipeline_loss_fn(
     link = codec if isinstance(codec, SplitLink) else None
     fwd_codec = link.fwd.codec if link is not None else codec
 
-    def loss(params, batch):
-        def inner(x, y, embed_p, blocks_local, head_p, codec_p):
+    def loss(params, batch, keep=None):
+        if with_erasure and keep is None:
+            raise ValueError(
+                "with_erasure=True compiles the masked consume path: pass "
+                "the (M + depth, rows, D) keep-mask stack (all-ones for a "
+                "loss-free step)")
+        if not with_erasure and keep is not None:
+            raise ValueError("keep masks need the with_erasure=True builder")
+
+        def inner(x, y, embed_p, blocks_local, head_p, codec_p, *rest):
+            keep_stack = rest[0] if rest else None
             stage = jax.lax.axis_index("pod")
             # blocks_local: (1, L/2, ...) — this pod's stage blocks
             my_blocks = jax.tree.map(lambda a: a[0], blocks_local)
@@ -143,8 +162,14 @@ def make_pod_pipeline_loss_fn(
                     y_mbs, jnp.clip(t - depth, 0, M - 1), axis=0,
                     keepdims=False)
                 h_front_in = embed_fn(embed_p, x_t)
-                h_back_in = fwd_codec.decode(
-                    fwd_p, bufs[-1]).reshape(h_front_in.shape)
+                if keep_stack is None:
+                    h_back = fwd_codec.decode(fwd_p, bufs[-1])
+                else:
+                    keep_t = jax.lax.dynamic_index_in_dim(
+                        keep_stack, t, axis=0, keepdims=False)
+                    h_back = masked_decode(fwd_codec, fwd_p, bufs[-1],
+                                           keep_t)
+                h_back_in = h_back.reshape(h_front_in.shape)
                 h_in = jnp.where(stage == 0, h_front_in, h_back_in)
                 h_out = stage_fn(my_blocks, h_in)
                 payload = payload_of(h_out)
@@ -163,10 +188,12 @@ def make_pod_pipeline_loss_fn(
             # only pod1 accumulated loss; sum over pods and average microbatches
             return jax.lax.psum(step_losses.sum(), "pod") / M
 
-        return _shard_map(
-            inner, mesh,
-            (P(), P(), P(), P("pod"), P(), P()), P(), {"pod"},
-        )(batch["x"], batch["y"], params["embed"], params["blocks"],
-          params["head"], params["codec"])
+        args = (batch["x"], batch["y"], params["embed"], params["blocks"],
+                params["head"], params["codec"])
+        specs = (P(), P(), P(), P("pod"), P(), P())
+        if with_erasure:
+            args += (keep,)
+            specs += (P(),)
+        return _shard_map(inner, mesh, specs, P(), {"pod"})(*args)
 
     return loss

@@ -13,7 +13,8 @@ from typing import Callable
 from repro.transport.link import SplitLink, roundtrip
 
 
-def apply_codec(codec, params, Z, *, with_snr=False, bwd_probe=None):
+def apply_codec(codec, params, Z, *, with_snr=False, bwd_probe=None,
+                erasure=None):
     """Round-trip Z through a codec or SplitLink, preserving Z's shape.
 
     Dispatch is protocol-level via ``codec.feature_layout``: "nchw" codecs
@@ -25,8 +26,14 @@ def apply_codec(codec, params, Z, *, with_snr=False, bwd_probe=None):
     round-trip — the forward Adaptive-R controller's feedback signal.
     ``bwd_probe`` is the asymmetric link's gradient-SNR tap (see
     ``repro.transport.channel.grad_roundtrip``); ignored otherwise.
+    ``erasure`` is the per-direction payload keep-mask dict (see
+    ``repro.transport.link.roundtrip``) — flat codecs/links only.
     """
     if getattr(codec, "feature_layout", "flat") == "nchw":
+        if erasure:
+            raise ValueError("payload erasure is modeled for flat codecs "
+                             "and links only (nchw has no packetized "
+                             "payload layout)")
         if isinstance(codec, SplitLink):
             # only mirrored links can be nchw (asymmetric is rejected at
             # construction); unwrap to the one shared codec
@@ -40,7 +47,8 @@ def apply_codec(codec, params, Z, *, with_snr=False, bwd_probe=None):
         return Zhat
     shape = Z.shape
     Zf = Z.reshape(shape[0], -1)
-    out = roundtrip(codec, params, Zf, with_snr=with_snr, bwd_probe=bwd_probe)
+    out = roundtrip(codec, params, Zf, with_snr=with_snr, bwd_probe=bwd_probe,
+                    erasure=erasure)
     if with_snr:
         Zhat, snr = out
         return Zhat.reshape(shape), snr
@@ -64,16 +72,22 @@ def make_split_loss_fn(front_apply: Callable, back_apply: Callable, codec,
     metrics["cut_snr"] is the cut-layer retrieval SNR in dB — pair it with
     ``jax.value_and_grad(..., has_aux=True)`` to feed the Adaptive-R
     scheduler without a second forward pass.
+
+    The returned fn also accepts ``erasure`` (per-direction keep-mask
+    dict, see ``roundtrip``): a runtime argument with static shapes, so
+    a chaos loop feeds each step's drawn mask to ONE compiled branch.
+    ``erasure=None`` (the default) is structurally the fault-free trace.
     """
 
-    def loss(params, batch, bwd_probe=None):
+    def loss(params, batch, bwd_probe=None, erasure=None):
         Z = front_apply(params["front"], batch["x"])
         if with_metrics:
             Zhat, snr = apply_codec(codec, params["codec"], Z, with_snr=True,
-                                    bwd_probe=bwd_probe)
+                                    bwd_probe=bwd_probe, erasure=erasure)
             logits = back_apply(params["back"], Zhat)
             return loss_fn(logits, batch["y"]), {"cut_snr": snr}
-        Zhat = apply_codec(codec, params["codec"], Z, bwd_probe=bwd_probe)
+        Zhat = apply_codec(codec, params["codec"], Z, bwd_probe=bwd_probe,
+                           erasure=erasure)
         logits = back_apply(params["back"], Zhat)
         return loss_fn(logits, batch["y"])
 

@@ -1,0 +1,261 @@
+"""Deterministic fault injection + erasure-tolerant HRR transport.
+
+Pins the three contracts the fault subsystem is built on:
+
+1. **Replayability** — every FaultPlan draw is keyed on
+   (seed, direction, step, attempt), so the same plan replays the same
+   failures bit-for-bit, and an all-zero plan is structurally inert
+   (install sites take the exact pre-fault code path).
+
+2. **Erasure-exactness** — the mask-aware decode is BITWISE identical to
+   the plain decode at zero erasures (multiplying by an all-ones mask and
+   renormalizing by D/D changes nothing), and retrieval SNR degrades
+   monotonically (within noise) as the erased fraction grows.
+
+3. **Recovery semantics** — "retransmit" converges to a complete payload
+   (all-ones keep, wire_mult > 1) under the attempt-keyed redraw;
+   "erasure" accepts loss up to the policy threshold; an exhausted retry
+   budget surfaces as a typed ChannelErasure, never as garbage.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import transport
+from repro.codecs import build
+from repro.core import hrr
+from repro.faults import (ChannelErasure, FaultPlan, RecoveryPolicy,
+                          negotiate_payload)
+
+D, B, R = 256, 8, 4
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan determinism
+# ---------------------------------------------------------------------------
+
+def _events(plan, direction, steps=40, epoch=0):
+    return [[(e.kind, e.arg) for e in plan.frame_events(direction, s, epoch)]
+            for s in range(steps)]
+
+
+def test_fault_plan_replays_bit_identically():
+    mk = lambda seed: FaultPlan(seed=seed, rates={"drop": 0.3,
+                                                  "corrupt": 0.15})
+    assert _events(mk(3), "c2s") == _events(mk(3), "c2s")
+    assert any(_events(mk(3), "c2s"))            # ...and actually fires
+    # the rng keys on the direction, the seed, and the connection epoch
+    assert _events(mk(3), "c2s") != _events(mk(3), "s2c")
+    assert _events(mk(3), "c2s") != _events(mk(4), "c2s")
+    assert _events(mk(3), "c2s") != _events(mk(3), "c2s", epoch=1)
+
+
+def test_schedule_fires_once_at_epoch_zero():
+    plan = FaultPlan(seed=0, schedule={"c2s": {3: "disconnect"}})
+    assert not plan.is_zero()
+    assert [e.kind for e in plan.frame_events("c2s", 3)] == ["disconnect"]
+    assert plan.frame_events("c2s", 2) == ()
+    assert plan.frame_events("s2c", 3) == ()     # direction-scoped
+    # epoch 1 = the connection AFTER the resume the event was testing
+    assert plan.frame_events("c2s", 3, epoch=1) == ()
+
+
+def test_zero_plan_is_structurally_inert():
+    assert FaultPlan().is_zero()
+    assert FaultPlan(seed=9, rates={"drop": 0.0, "corrupt": 0.0}).is_zero()
+    assert not FaultPlan(rates={"drop": 0.01}).is_zero()
+    ch = transport.Channel("fwd", build(f"c3sl:R={R}", D=D))
+    ch.install_faults(FaultPlan(seed=9, rates={"drop": 0.0}))
+    assert ch.next_erasure(rows=B) == (None, None)
+    link = transport.as_link(build(f"c3sl:R={R}", D=D))
+    link.install_faults(FaultPlan())
+    assert link.next_erasure(B) == (None, None)
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan(rates={"gremlins": 0.5})
+    with pytest.raises(ValueError, match="outside"):
+        FaultPlan(rates={"drop": 1.5})
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan(schedule={0: "gremlins"})
+    with pytest.raises(ValueError, match="packets"):
+        FaultPlan(packets=0)
+    with pytest.raises(ValueError, match="unknown recovery mode"):
+        RecoveryPolicy(mode="hope")
+
+
+def test_packet_masks_cover_the_payload_exactly():
+    plan = FaultPlan(seed=1, rates={"drop": 0.4}, packets=16)
+    shape = (B // R, D)
+    lost = plan.packet_faults("fwd", 0, shape)
+    assert lost.shape == (B // R, 16) and lost.dtype == bool
+    np.testing.assert_array_equal(
+        lost, plan.packet_faults("fwd", 0, shape))      # deterministic
+    keep = plan.expand_packets(shape, ~lost)
+    assert keep.shape == shape and keep.dtype == np.float32
+    # each packet expands to a contiguous span; spans tile D exactly
+    assert int(plan.packet_edges(D).sum()) == D
+    frac_pkts = float((~lost).mean())
+    assert float(keep.mean()) == pytest.approx(frac_pkts, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# recovery policy
+# ---------------------------------------------------------------------------
+
+def test_retransmit_converges_to_complete_payload():
+    plan = FaultPlan(seed=5, rates={"drop": 0.3})
+    keep, info = negotiate_payload(plan, "fwd", 0, (B // R, D),
+                                   RecoveryPolicy(mode="retransmit",
+                                                  retry_budget=16))
+    np.testing.assert_array_equal(keep, np.ones((B // R, D), np.float32))
+    assert info["erased_frac"] == 0.0
+    assert info["wire_mult"] > 1.0               # the NACK rounds cost bytes
+    assert info["attempts"] >= 2
+
+
+def test_erasure_mode_accepts_bounded_loss():
+    plan = FaultPlan(seed=5, rates={"drop": 0.3})
+    keep, info = negotiate_payload(plan, "fwd", 0, (B // R, D),
+                                   RecoveryPolicy(mode="erasure",
+                                                  max_erasure_frac=0.5))
+    assert 0.0 < info["erased_frac"] <= 0.5
+    assert info["wire_mult"] == 1.0              # loss absorbed, not resent
+    assert float(keep.mean()) == pytest.approx(1.0 - info["erased_frac"],
+                                               abs=1e-6)
+
+
+def test_exhausted_budget_raises_typed_erasure():
+    plan = FaultPlan(seed=5, rates={"drop": 1.0})     # every packet, always
+    with pytest.raises(ChannelErasure) as ei:
+        negotiate_payload(plan, "bwd", 7, (B // R, D),
+                          RecoveryPolicy(mode="retransmit", retry_budget=3))
+    assert ei.value.direction == "bwd" and ei.value.step == 7
+    assert ei.value.erased_frac == 1.0
+
+
+# ---------------------------------------------------------------------------
+# mask-aware decode: exact at zero erasures, graceful under loss
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [f"c3sl:R={R}", f"c3sl:R={R}|int8"])
+def test_masked_decode_bitwise_exact_at_all_ones(spec):
+    codec = build(spec, D=D)
+    params = codec.init(jax.random.PRNGKey(1))
+    Z = jax.random.normal(jax.random.PRNGKey(2), (B, D))
+    payload = codec.encode(params, Z)
+    ones = jnp.ones(payload.shape, jnp.float32)
+    plain = codec.decode(params, payload)
+    masked = codec.decode_masked(params, payload, ones)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(masked))
+
+
+def test_masked_unbind_full_erasure_zeroes_output():
+    codec = build(f"c3sl:R={R}", D=D)
+    params = codec.init(jax.random.PRNGKey(1))
+    Z = jax.random.normal(jax.random.PRNGKey(2), (B, D))
+    payload = codec.encode(params, Z)
+    out = codec.decode_masked(params, payload,
+                              jnp.zeros(payload.shape, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((B, D)))
+
+
+# The hypothesis property variant (random seeds, random erasure orders)
+# lives in tests/test_frame_codec.py with the other property suites; this
+# is the deterministic pin of the same monotonicity contract.
+def test_erasure_snr_monotone_nonincreasing():
+    codec = build(f"c3sl:R={R}", D=D)
+    params = codec.init(jax.random.PRNGKey(1))
+    rng = np.random.RandomState(0)
+    Z = jnp.asarray(rng.randn(B, D).astype(np.float32))
+    payload = codec.encode(params, Z)
+    plan = FaultPlan(seed=0, packets=16)
+    order = rng.permutation(16)
+    snrs = []
+    for n_erased in (0, 4, 8, 12):
+        keep_p = np.ones((payload.shape[0], 16), dtype=bool)
+        keep_p[:, order[:n_erased]] = False
+        keep = jnp.asarray(plan.expand_packets(payload.shape, keep_p))
+        Zhat = codec.decode_masked(params, payload, keep)
+        snrs.append(float(hrr.retrieval_snr(Z, Zhat)))
+    base = float(hrr.retrieval_snr(Z, codec.decode(params, payload)))
+    assert snrs[0] == pytest.approx(base, abs=1e-5)
+    for lo, hi in zip(snrs[1:], snrs):
+        assert lo <= hi + 0.75, snrs
+
+
+# ---------------------------------------------------------------------------
+# the installed link: masks flow into the split loss, clean runs untouched
+# ---------------------------------------------------------------------------
+
+def _front(p, x):
+    return x @ p["w"]
+
+
+def _back(p, z):
+    return z @ p["w"]
+
+
+def _loss(logits, y):
+    return jnp.mean((logits - y) ** 2)
+
+
+def _split_setup(spec):
+    codec = build(spec, D=D)
+    params = {
+        "front": {"w": jax.random.normal(jax.random.PRNGKey(3), (16, D))
+                  * 16 ** -0.5},
+        "back": {"w": jax.random.normal(jax.random.PRNGKey(4), (D, 4))
+                 * D ** -0.5},
+        "codec": codec.init(jax.random.PRNGKey(7)),
+    }
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(5), (B, 16)),
+             "y": jax.random.normal(jax.random.PRNGKey(6), (B, 4))}
+    loss_fn = transport.make_split_loss_fn(_front, _back, codec, _loss)
+    return codec, params, batch, loss_fn
+
+
+def test_link_erasure_masks_match_payload_and_replay():
+    spec = f"c3sl:R={R}|int8"
+    plan = FaultPlan(seed=11, rates={"drop": 0.25})
+    links = []
+    for _ in range(2):
+        link = transport.as_link(build(spec, D=D))
+        link.install_faults(plan, RecoveryPolicy(mode="erasure"))
+        links.append(link)
+    e1, i1 = links[0].next_erasure(B)
+    e2, i2 = links[1].next_erasure(B)
+    assert e1["fwd"].shape == tuple(links[0].fwd.current.payload_shape(B))
+    np.testing.assert_array_equal(e1["fwd"], e2["fwd"])   # replayable
+    assert i1["fwd"] == i2["fwd"]
+    # the per-direction step counters advance: the next draw differs
+    e3, _ = links[0].next_erasure(B)
+    assert not np.array_equal(e1["fwd"], e3["fwd"])
+
+
+def test_split_loss_under_erasure_finite_and_exact_at_all_ones():
+    codec, params, batch, loss_fn = _split_setup(f"c3sl:R={R}")
+    clean = float(loss_fn(params, batch))
+    shape = tuple(codec.payload_shape(B))
+    ones = {"fwd": jnp.ones(shape, jnp.float32)}
+    assert float(loss_fn(params, batch, erasure=ones)) == \
+        pytest.approx(clean, rel=1e-6)
+    plan = FaultPlan(seed=2, rates={"drop": 0.3})
+    keep = {"fwd": jnp.asarray(plan.payload_keep("fwd", 0, shape))}
+    lossy = float(loss_fn(params, batch, erasure=keep))
+    assert np.isfinite(lossy) and lossy != clean
+    # gradients stay finite through the masked unbind
+    g = jax.grad(lambda p: loss_fn(p, batch, erasure=keep))(params)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(bool(jnp.isfinite(x).all()) for x in leaves)
+
+
+def test_erasure_rejected_for_nchw_codecs():
+    codec = build("bnpp:R=4", D=D, C=4, H=8, W=8)
+    params = codec.init(jax.random.PRNGKey(0))
+    Z = jax.random.normal(jax.random.PRNGKey(1), (B, 4, 8, 8))
+    with pytest.raises(ValueError, match="flat codecs"):
+        transport.apply_codec(codec, params, Z,
+                              erasure={"fwd": jnp.ones((1,))})

@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) for the v2 frame codec and the
+mask-aware HRR unbind.
+
+Frame integrity contract: a frame either decodes to EXACTLY what was
+encoded, or raises loudly — truncation at EVERY byte boundary and any
+single-bit flip anywhere in the body must surface as FrameCorruption
+(wire damage, NACKable) or ProtocolError (malformed content), never as a
+silently mis-decoded frame.  Mask-aware unbind contract: retrieval SNR
+is exact at zero erasures and monotonically non-increasing (within
+per-sample noise) as the erased fraction grows.
+
+Example budget comes from the session profile in conftest.py
+(``HYPOTHESIS_PROFILE=ci`` in the dedicated CI job).
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+pytestmark = pytest.mark.property
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis package")
+from hypothesis import given, strategies as st  # noqa: E402
+
+from repro.codecs import build                  # noqa: E402
+from repro.core import hrr                      # noqa: E402
+from repro.faults import FaultPlan              # noqa: E402
+from repro.frontdoor import (CTRL_SEQ, FrameCorruption, MsgType,  # noqa: E402
+                             ProtocolError, decode_frame, encode_frame,
+                             pack_array, unpack_array)
+
+_WIRE_DTYPES = ("int32", "int8", "uint8", "float32", "float16")
+
+headers = st.dictionaries(
+    st.text(st.characters(min_codepoint=32, max_codepoint=126), max_size=8),
+    st.one_of(st.integers(-2**31, 2**31 - 1), st.text(max_size=12),
+              st.booleans(), st.none()),
+    max_size=4)
+
+
+@given(mtype=st.sampled_from(list(MsgType)), header=headers,
+       payload=st.binary(max_size=64),
+       seq=st.one_of(st.integers(0, 2**32 - 2), st.just(CTRL_SEQ)))
+def test_frame_roundtrip_exact(mtype, header, payload, seq):
+    frame = encode_frame(mtype, header, payload, seq=seq)
+    m2, h2, p2, s2 = decode_frame(frame[4:])
+    assert (m2, h2, p2, s2) == (mtype, header, payload, seq)
+
+
+@given(header=headers, payload=st.binary(max_size=32))
+def test_truncation_at_every_boundary_fails_loudly(header, payload):
+    body = encode_frame(MsgType.SUBMIT, header, payload, seq=3)[4:]
+    for cut in range(len(body)):
+        with pytest.raises(ProtocolError):
+            decode_frame(body[:cut])
+
+
+@given(header=headers, payload=st.binary(max_size=32), data=st.data())
+def test_any_single_bitflip_is_frame_corruption(header, payload, data):
+    body = bytearray(encode_frame(MsgType.RESULT, header, payload, seq=1)[4:])
+    i = data.draw(st.integers(0, len(body) - 1))
+    body[i] ^= 1 << data.draw(st.integers(0, 7))
+    # CRC32 catches every single-bit error; a flip inside the crc field
+    # itself mismatches the recomputed value the same way
+    with pytest.raises(FrameCorruption):
+        decode_frame(bytes(body))
+
+
+@st.composite
+def wire_arrays(draw):
+    dtype = np.dtype(draw(st.sampled_from(_WIRE_DTYPES)))
+    shape = draw(st.lists(st.integers(0, 5), min_size=1, max_size=3))
+    n = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    return np.frombuffer(draw(st.binary(min_size=n, max_size=n)),
+                         dtype=dtype).reshape(shape)
+
+
+@given(arr=wire_arrays(), rid=st.integers(0, 2**31 - 1))
+def test_array_payload_roundtrip_bit_exact(arr, rid):
+    hdr, payload = pack_array(arr)
+    frame = encode_frame(MsgType.SUBMIT, {"rid": rid, **hdr}, payload, seq=0)
+    _, h2, p2, _ = decode_frame(frame[4:])
+    out = unpack_array(h2, p2)
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    assert out.tobytes() == arr.tobytes()       # NaN-safe bit equality
+    assert json.loads(json.dumps(h2)) == h2     # header stays JSON-clean
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_masked_unbind_snr_monotone_in_erasure(seed):
+    D, B, R = 256, 8, 4
+    codec = build(f"c3sl:R={R}", D=D)
+    params = codec.init(jax.random.PRNGKey(1))
+    rng = np.random.RandomState(seed)
+    Z = jnp.asarray(rng.randn(B, D).astype(np.float32))
+    payload = codec.encode(params, Z)
+    plan = FaultPlan(seed=0, packets=16)
+    order = rng.permutation(16)
+    snrs = []
+    for n_erased in (0, 4, 8, 12):
+        keep_p = np.ones((payload.shape[0], 16), dtype=bool)
+        keep_p[:, order[:n_erased]] = False
+        keep = jnp.asarray(plan.expand_packets(payload.shape, keep_p))
+        snrs.append(float(hrr.retrieval_snr(
+            Z, codec.decode_masked(params, payload, keep))))
+    base = float(hrr.retrieval_snr(Z, codec.decode(params, payload)))
+    assert snrs[0] == pytest.approx(base, abs=1e-5)   # exact at zero loss
+    for lo, hi in zip(snrs[1:], snrs):
+        assert lo <= hi + 0.75, snrs

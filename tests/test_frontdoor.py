@@ -12,6 +12,8 @@ No pytest-asyncio in the image: every async scenario runs under a plain
 ``asyncio.run``.
 """
 import asyncio
+import struct
+import zlib
 
 import numpy as np
 import pytest
@@ -19,11 +21,11 @@ import pytest
 import jax
 
 from repro.configs.base import get_config, reduced
-from repro.frontdoor import (AdmissionController, BusyError, FrontDoorClient,
-                             FrontDoorError, FrontDoorServer, LogHistogram,
-                             MsgType, ProtocolError, TenantPolicy,
-                             decode_frame, encode_frame, pack_array,
-                             read_frame, unpack_array)
+from repro.frontdoor import (AdmissionController, BusyError, FrameCorruption,
+                             FrontDoorClient, FrontDoorError, FrontDoorServer,
+                             LogHistogram, MsgType, ProtocolError,
+                             TenantPolicy, decode_frame, encode_frame,
+                             pack_array, read_frame, unpack_array)
 from repro.frontdoor.admission import ADMIT, BUSY_QUEUE, BUSY_TENANT
 from repro.models import lm as lm_lib
 from repro.serving.engine import BatchedEngine, Request
@@ -36,9 +38,9 @@ from repro.serving.engine import BatchedEngine, Request
 def test_frame_roundtrip():
     arr = np.arange(7, dtype=np.int32)
     hdr, payload = pack_array(arr)
-    frame = encode_frame(MsgType.SUBMIT, {"rid": 3, **hdr}, payload)
-    mtype, header, body = decode_frame(frame[4:])
-    assert mtype == MsgType.SUBMIT and header["rid"] == 3
+    frame = encode_frame(MsgType.SUBMIT, {"rid": 3, **hdr}, payload, seq=5)
+    mtype, header, body, seq = decode_frame(frame[4:])
+    assert mtype == MsgType.SUBMIT and header["rid"] == 3 and seq == 5
     np.testing.assert_array_equal(unpack_array(header, body), arr)
 
 
@@ -50,10 +52,10 @@ def test_frame_roundtrip_through_stream_reader():
                                       payload))
         reader.feed_data(encode_frame(MsgType.BYE, {}))
         reader.feed_eof()
-        mtype, header, body, nbytes = await read_frame(reader)
+        mtype, header, body, nbytes, _ = await read_frame(reader)
         assert mtype == MsgType.RESULT and nbytes > len(payload)
         assert unpack_array(header, body).tolist() == [[1, 2], [3, 4]]
-        mtype, _, _, _ = await read_frame(reader)
+        mtype, _, _, _, _ = await read_frame(reader)
         assert mtype == MsgType.BYE
         assert await read_frame(reader) is None      # clean EOF
 
@@ -83,13 +85,36 @@ def test_oversized_frame_refused():
     asyncio.run(go())
 
 
+def _crafted(t, hdr=b"{}", payload=b"", hlen=None, seq=0):
+    """A CRC-VALID body with arbitrary (possibly malformed) content — the
+    peer verifiably sent this, so decode must raise plain ProtocolError,
+    not the NACKable FrameCorruption."""
+    hlen = len(hdr) if hlen is None else hlen
+    zero = struct.pack("!BIII", t, seq, 0, hlen)
+    crc = zlib.crc32(payload, zlib.crc32(hdr, zlib.crc32(zero))) & 0xFFFFFFFF
+    return struct.pack("!BIII", t, seq, crc, hlen) + hdr + payload
+
+
 def test_decode_frame_rejects_garbage():
     with pytest.raises(ProtocolError, match="unknown message type"):
-        decode_frame(b"\x99\x00\x00\x00\x02{}")
+        decode_frame(_crafted(0x99))
     with pytest.raises(ProtocolError, match="overruns"):
-        decode_frame(b"\x01\x00\x00\xff\xff{}")
+        decode_frame(_crafted(1, hlen=0xFFFF))
     with pytest.raises(ProtocolError, match="non-JSON"):
-        decode_frame(b"\x01\x00\x00\x00\x02[[")
+        decode_frame(_crafted(1, hdr=b"[["))
+    with pytest.raises(ProtocolError, match="JSON object"):
+        decode_frame(_crafted(1, hdr=b"[]"))
+
+
+def test_wire_damage_is_corruption_not_protocol_death():
+    frame = encode_frame(MsgType.SUBMIT, {"rid": 1}, b"xy", seq=9)
+    body = bytearray(frame[4:])
+    body[-1] ^= 0x40                              # damage the payload
+    with pytest.raises(FrameCorruption) as ei:
+        decode_frame(bytes(body))
+    assert ei.value.seq == 9                      # NACKable: seq recovered
+    with pytest.raises(FrameCorruption, match="shorter"):
+        decode_frame(bytes(frame[4:10]))          # shorter than the header
 
 
 def test_array_codec_guards():

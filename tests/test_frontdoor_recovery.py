@@ -1,0 +1,339 @@
+"""Front-door failure recovery: every way a connection can die must
+leave the books correct.
+
+The load-bearing invariant (pinned across every abnormal path below) is
+the admission counter: ``inflight_total`` drops back the moment a
+connection ends — abrupt close, silent peer, handshake stall, shutdown —
+never leaking a unit that would eventually wedge admission shut.  On top
+of that: detach-with-resume replays withdrawn work bit-identically (the
+engine re-prefills prompt + emitted tokens, so greedy decode cannot tell
+it was interrupted), repeated SUBMITs after a reconnect are idempotent,
+``generate`` honors its wall-clock deadline with a typed error, and
+``stop()`` leaves no orphaned asyncio task behind.
+
+No pytest-asyncio in the image: every scenario runs under a plain
+``asyncio.run``.
+"""
+import asyncio
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import get_config, reduced
+from repro.frontdoor import (AdmissionController, DeadlineExceeded,
+                             FrameStream, FrontDoorClient, FrontDoorServer,
+                             MsgType, TenantPolicy, pack_array)
+from repro.models import lm as lm_lib
+from repro.serving.engine import BatchedEngine, Request
+
+
+def _cfg():
+    return reduced(get_config("deepseek-7b"), num_layers=2, d_model=128,
+                   d_ff=256, vocab_size=128, num_heads=4, num_kv_heads=2,
+                   head_dim=32)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, codec=None, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("chunk_size", 8)
+    kw.setdefault("sync_every", 4)
+    return BatchedEngine(params, cfg, codec=codec, greedy=True, seed=0, **kw)
+
+
+def _prompts(n, rng):
+    return [[int(t) for t in rng.randint(1, 128, 5 + i)] for i in range(n)]
+
+
+def _reference(cfg, params, prompts, max_new):
+    eng = _engine(cfg, params)
+    for u, p in enumerate(prompts):
+        eng.submit(Request(uid=u, prompt=list(p), max_new_tokens=max_new))
+    return {r.uid: list(r.out) for r in eng.run()}
+
+
+async def _until(cond, timeout=5.0, what="condition"):
+    t0 = time.monotonic()
+    while not cond():
+        if time.monotonic() - t0 > timeout:
+            raise AssertionError(f"timed out waiting for {what}")
+        await asyncio.sleep(0.01)
+
+
+# ---------------------------------------------------------------------------
+# the admission counter-invariant, failure path by failure path
+# ---------------------------------------------------------------------------
+
+def test_abrupt_disconnect_releases_admission_and_withdraws(setup):
+    cfg, params = setup
+
+    async def go():
+        eng = _engine(cfg, params)
+        server = FrontDoorServer(eng, auto_tick=False, heartbeat_s=0.2)
+        host, port = await server.start()
+        client = await FrontDoorClient.open(host, port, tenant="drop",
+                                            reconnect=False)
+        rids = [await client.submit(p, max_new=4)
+                for p in _prompts(2, np.random.RandomState(0))]
+        assert server.stats()["admission"]["inflight_total"] == 2
+        assert len(eng.queue) == 2           # staged, auto_tick off
+        client._stream.close()               # die without BYE
+        await _until(
+            lambda: server.stats()["admission"]["inflight_total"] == 0,
+            what="admission release on disconnect")
+        s = server.stats()
+        assert s["sessions"] == {"open": 0, "detached": 1}
+        assert s["tenants"]["drop"]["disconnects"] == 1
+        # the work left the engine with the connection...
+        assert not eng.queue and eng.active == 0
+        # ...and is parked on the session, keyed by the original rids
+        sess = next(iter(server._sessions.values()))
+        assert sorted(rid for rid, _ in sess.withdrawn) == sorted(rids)
+        await client.close()
+        await server.stop(drain=False)
+
+    asyncio.run(go())
+
+
+def test_silent_peer_is_detached_by_heartbeats(setup):
+    cfg, params = setup
+
+    async def go():
+        eng = _engine(cfg, params)
+        server = FrontDoorServer(eng, auto_tick=False, heartbeat_s=0.05,
+                                 max_misses=2)
+        host, port = await server.start()
+        reader, writer = await asyncio.open_connection(host, port)
+        stream = FrameStream(reader, writer, direction="c2s")
+        await stream.send(MsgType.HELLO, {"tenant": "mute", "codec": "none"})
+        got = await stream.recv(timeout=2.0)
+        assert got is not None and got[0] == MsgType.HELLO_OK
+        hdr, payload = pack_array(np.asarray([1, 2, 3], dtype=np.int32))
+        await stream.send(MsgType.SUBMIT, {"rid": 0, "max_new": 2, **hdr},
+                          payload)
+        await _until(
+            lambda: server.stats()["admission"]["inflight_total"] == 1,
+            what="the SUBMIT to be admitted")
+        # now go silent: recv() is never called again, so the server's
+        # PINGs are never answered — max_misses intervals later the peer
+        # is declared dead and its admission unit comes back
+        await _until(
+            lambda: server.stats()["admission"]["inflight_total"] == 0,
+            what="heartbeat death detection")
+        assert server.stats()["sessions"]["detached"] == 1
+        stream.close()
+        await stream.wait_closed()
+        await server.stop(drain=False)
+
+    asyncio.run(go())
+
+
+def test_handshake_stall_frees_the_connection_slot(setup):
+    cfg, params = setup
+
+    async def go():
+        eng = _engine(cfg, params)
+        server = FrontDoorServer(eng, auto_tick=False,
+                                 handshake_timeout_s=0.15, heartbeat_s=0.05)
+        host, port = await server.start()
+        reader, writer = await asyncio.open_connection(host, port)
+        await _until(lambda: len(server._conn_tasks) == 1,
+                     what="the handler to pick the connection up")
+        # say nothing: the server must hang up on its own (the bytes we
+        # do receive are its handshake PINGs probing for a lost HELLO)
+        await asyncio.wait_for(reader.read(-1), timeout=5.0)
+        assert reader.at_eof()
+        await _until(lambda: not server._conn_tasks,
+                     what="the handler to finish")
+        s = server.stats()
+        assert s["sessions"] == {"open": 0, "detached": 0}
+        assert s["admission"]["inflight_total"] == 0
+        writer.close()
+        await server.stop(drain=False)
+
+    asyncio.run(go())
+
+
+def test_stop_cancels_inflight_and_leaves_no_orphan_tasks(setup):
+    cfg, params = setup
+
+    async def go():
+        eng = _engine(cfg, params)
+        server = FrontDoorServer(eng, auto_tick=True)
+        host, port = await server.start()
+        rng = np.random.RandomState(1)
+        clients = [await FrontDoorClient.open(host, port, tenant=f"t{i}",
+                                              reconnect=False)
+                   for i in range(2)]
+        rids = [await c.submit(p, max_new=3)
+                for c, p in zip(clients, _prompts(2, rng))]
+        # stop() drains first: the admitted work completes and is
+        # delivered before the connections are torn down
+        await server.stop()
+        outs = [await c.result(r) for c, r in zip(clients, rids)]
+        assert all(len(o["tokens"]) == 3 for o in outs)
+        assert server._conn_tasks == set() and server._tick_task is None
+        assert server._routes == {} and server._sessions == {}
+        assert server.admission.inflight_total == 0
+        for c in clients:
+            await c.close()
+        # nothing survives on the loop but this coroutine itself
+        leftover = [t for t in asyncio.all_tasks()
+                    if t is not asyncio.current_task()]
+        assert not leftover, leftover
+
+    asyncio.run(go())
+
+
+# ---------------------------------------------------------------------------
+# detach -> resume: bit-identical continuation
+# ---------------------------------------------------------------------------
+
+def test_resume_after_disconnect_is_bit_identical(setup):
+    cfg, params = setup
+    prompts = _prompts(2, np.random.RandomState(2))
+    ref = _reference(cfg, params, prompts, max_new=12)
+
+    async def go():
+        eng = _engine(cfg, params)
+        server = FrontDoorServer(eng, auto_tick=False, resume_ttl_s=10.0)
+        host, port = await server.start()
+        a = await FrontDoorClient.open(host, port, tenant="ph",
+                                       reconnect=False)
+        rids = [await a.submit(p, max_new=12) for p in prompts]
+        eng.tick()                           # decode PART of the answer...
+        assert eng.active == 2               # ...both genuinely mid-flight
+        a._stream.close()                    # ...then die mid-decode
+        await _until(
+            lambda: server.stats()["admission"]["inflight_total"] == 0,
+            what="detach after the mid-decode disconnect")
+        token = a.session
+        await a.close()
+
+        # a new connection presenting the session token gets the
+        # withdrawn work re-admitted; the engine re-prefills prompt +
+        # emitted tokens, so the continuation is bit-identical
+        b = FrontDoorClient(host, port, tenant="ph", reconnect=False)
+        b.session = token
+        await b._connect()
+        assert b.server_info["resumed"] is True
+        loop = asyncio.get_running_loop()
+        for rid in rids:                     # adopt the orphaned rids
+            b._results[rid] = loop.create_future()
+        await _until(lambda: len(server._routes) == 2,
+                     what="resume re-submission")
+        await server.drain()
+        outs = [await b.result(rid) for rid in rids]
+        s = server.stats()
+        assert s["tenants"]["ph"]["resumes"] == 1
+        assert s["admission"]["inflight_total"] == 0
+        await b.close()
+        await server.stop(drain=False)
+        return outs
+
+    outs = asyncio.run(go())
+    for uid, out in enumerate(outs):
+        assert out["tokens"] == ref[uid], uid
+
+
+def test_client_auto_reconnect_resumes_transparently(setup):
+    cfg, params = setup
+    prompts = _prompts(2, np.random.RandomState(7))
+    ref = _reference(cfg, params, prompts, max_new=12)
+
+    async def go():
+        eng = _engine(cfg, params)
+        server = FrontDoorServer(eng, auto_tick=False, resume_ttl_s=10.0)
+        host, port = await server.start()
+        client = await FrontDoorClient.open(host, port, tenant="auto")
+        rids = [await client.submit(p, max_new=12) for p in prompts]
+        eng.tick()
+        assert eng.active == 2               # disconnect lands mid-decode
+        # the network dies under the client (RST, not a clean FIN); its
+        # read loop reconnects with the session token on its own
+        sess = next(iter(server._sessions.values()))
+        sess.conn.stream.writer.transport.abort()
+        await _until(lambda: client.server_info.get("resumed") is True,
+                     what="the client's automatic resume")
+        await _until(lambda: len(server._routes) == 2,
+                     what="the resumed work to be back in flight")
+        await server.drain()
+        outs = [await client.result(rid) for rid in rids]
+        s = server.stats()
+        assert s["tenants"]["auto"]["resumes"] == 1
+        assert s["admission"]["inflight_total"] == 0
+        await client.close()
+        await server.stop(drain=False)
+        return outs
+
+    outs = asyncio.run(go())
+    for uid, out in enumerate(outs):
+        assert out["tokens"] == ref[uid], uid
+
+
+# ---------------------------------------------------------------------------
+# protocol-level recovery details
+# ---------------------------------------------------------------------------
+
+def test_repeated_submit_is_idempotent(setup):
+    cfg, params = setup
+
+    async def go():
+        eng = _engine(cfg, params)
+        server = FrontDoorServer(eng, auto_tick=False)
+        host, port = await server.start()
+        client = await FrontDoorClient.open(host, port, tenant="dup")
+        prompt = [1, 2, 3, 4]
+        rid = await client.submit(prompt, max_new=3)
+        # replay the SUBMIT verbatim — the lost-ACK half of the reconnect
+        # race: the request must be re-ACKed, never doubled
+        hdr, payload = pack_array(np.asarray(prompt, dtype=np.int32))
+        await client._stream.send(MsgType.SUBMIT,
+                                  {"rid": rid, "max_new": 3, **hdr}, payload)
+        # frames are ordered: once STATS_OK returns, the dup was handled
+        stats = await client.stats()
+        assert stats["admission"]["inflight_total"] == 1
+        assert len(eng.queue) == 1
+        await server.drain()
+        out = await client.result(rid)
+        assert len(out["tokens"]) == 3
+        await client.close()
+        await server.stop(drain=False)
+
+    asyncio.run(go())
+
+
+def test_generate_deadline_raises_typed_error(setup):
+    cfg, params = setup
+
+    async def go():
+        eng = _engine(cfg, params)
+        # auto_tick=False and max_inflight=1: the first submit is admitted
+        # but never completes, so generate() can only ever see BUSY
+        server = FrontDoorServer(
+            eng, auto_tick=False,
+            admission=AdmissionController(
+                default_policy=TenantPolicy(max_inflight=1)))
+        host, port = await server.start()
+        client = await FrontDoorClient.open(host, port, tenant="late")
+        await client.submit([1, 2, 3], max_new=4)
+        t0 = time.monotonic()
+        with pytest.raises(DeadlineExceeded, match="deadline"):
+            await client.generate([4, 5], max_new=4, retries=10_000,
+                                  backoff_s=0.005, deadline_s=0.15)
+        assert time.monotonic() - t0 < 2.0   # the deadline actually bounded it
+        await server.drain()                 # let the admitted one finish
+        await client.close()
+        await server.stop(drain=False)
+
+    asyncio.run(go())
