@@ -1,4 +1,4 @@
-"""Test-session config: hypothesis settings profiles.
+"""Test-session config: hypothesis settings profiles + sanitize gating.
 
 The property suite (tests/test_hrr_properties.py, marked ``property``)
 reads its example budget from a profile instead of per-test ``@settings``,
@@ -12,8 +12,27 @@ so the same tests run two ways:
 
 hypothesis is an optional dependency everywhere (the property modules
 importorskip it), so this registration must be too.
+
+Tests marked ``sanitize`` (runtime sanitizer coverage: per-tick engine
+invariant probes compile EXTRA jit programs per R bucket) are excluded
+from tier-1 timing by default and run in the CI ``analysis-gate`` job
+with ``REPRO_SANITIZE=1``.
 """
 import os
+
+import pytest
+
+
+def pytest_collection_modifyitems(config, items):
+    if os.environ.get("REPRO_SANITIZE") == "1":
+        return
+    skip = pytest.mark.skip(
+        reason="sanitizer-heavy test: set REPRO_SANITIZE=1 to run "
+               "(the CI analysis-gate job does)")
+    for item in items:
+        if "sanitize" in item.keywords:
+            item.add_marker(skip)
+
 
 try:
     from hypothesis import settings

@@ -1,0 +1,33 @@
+"""Repo-specific static analysis + runtime sanitizers.
+
+Two halves, one goal — turn the repo's correctness conventions into
+machine-checked invariants:
+
+* **Static** (:mod:`repro.analysis.lint`, :mod:`repro.analysis.rules`,
+  :mod:`repro.analysis.baseline`): an AST lint engine with five
+  repo-specific rules (R1 recompile hazards, R2 use-after-donate,
+  R3 hidden host syncs, R4 codec accounting completeness, R5 asyncio
+  race/hygiene), inline ``# lint-ok: R<n> rationale`` suppression, and
+  a committed-baseline gate.  Stdlib-only — never imports jax.  CLI:
+  ``python -m repro.analysis --check src/``.
+
+* **Runtime** (:mod:`repro.analysis.sanitize`): opt-in sanitizers
+  behind ``--sanitize`` on the launchers — ``jax_debug_nans`` /
+  checkify wiring, per-tick engine invariant checks (pool accounting,
+  live-slot zeroing pre-encode: the PR 7 C3-SL superposition-hygiene
+  fix pinned as a checked invariant), and an event-loop slow-callback
+  detector for the front door.
+
+See ``src/repro/analysis/README.md`` for the rule catalog and the
+baseline workflow.
+"""
+from repro.analysis.lint import (Finding, LintReport, lint_paths,
+                                 lint_source)
+from repro.analysis.baseline import (BASELINE_NAME, diff_against_baseline,
+                                     load_baseline, write_baseline)
+
+__all__ = [
+    "Finding", "LintReport", "lint_source", "lint_paths",
+    "BASELINE_NAME", "load_baseline", "write_baseline",
+    "diff_against_baseline",
+]

@@ -1,0 +1,607 @@
+"""Repo-specific lint rules R1–R5.
+
+Every rule is a function ``(tree, source, path) -> iterable[(line, col,
+message)]`` registered in :data:`CHECKERS`.  The rules are HEURISTIC —
+they encode this repo's conventions (program tables, donated engine
+buffers, single-threaded asyncio front door), not general Python
+semantics — and every one has an escape hatch: an inline ``# lint-ok:
+R<n> rationale`` comment on the flagged line (see
+:mod:`repro.analysis.lint`).
+
+Rule catalog (the authoritative copy lives in
+``src/repro/analysis/README.md``):
+
+* **R1 — recompile hazards.**  ``jax.jit``/``pjit`` wrappers created
+  inside a ``for``/``while`` body (a fresh wrapper per iteration means a
+  fresh trace cache), and immediate ``jax.jit(<lambda>)(...)``
+  invocations (the lambda object is new every execution, so the jit
+  cache can never hit).  The sanctioned pattern is a program table built
+  once (``codecs.build_program_table``) and dispatched host-side — the
+  PR 4/5 zero-recompile contract.
+
+* **R2 — use-after-donate.**  A name bound to ``jax.jit(...,
+  donate_argnums=...)`` marks its donated call arguments as DEAD: XLA
+  may have reused the buffer in place.  Reading such a variable later in
+  the same function without rebinding it is flagged.
+
+* **R3 — hidden host syncs.**  ``.item()`` / ``float()`` / ``int()`` /
+  ``bool()`` / ``np.asarray`` / ``jax.device_get`` /
+  ``jax.block_until_ready`` (a) inside a function that is jit-traced
+  (these raise or silently constant-fold at trace time), or (b) inside a
+  loop that dispatches a compiled program (a per-iteration host sync
+  serializes dispatch with compute — the classic
+  ``losses.append(float(loss))`` throughput bug).  Also flags truthiness
+  (``if``/``while``) directly on a traced function's parameter.
+
+* **R4 — codec accounting completeness.**  Every class registered in
+  the codec registry (``@register(...)``) must implement the wire
+  accounting surface in its own body: transforms need ``payload_shape``
+  + ``wire_bytes`` + ``flops``, wire stages need ``wire_bytes`` +
+  ``flops`` + ``apply``.  Exact byte accounting is what
+  ``BENCH_comm``/engine stats and the HLO cross-checks pin — a codec
+  without it silently under-reports the split link.
+
+* **R5 — asyncio race / hygiene** (the front door is ONE event loop;
+  everything here either stalls it or races it):
+
+  - R5a: blocking calls (``time.sleep``, ``subprocess.*``,
+    ``os.system``, sync socket constructors) inside ``async def``.
+  - R5b: ``asyncio.create_task`` / ``ensure_future`` whose result is
+    dropped (bare expression statement) — the event loop keeps only a
+    weak reference, so the task can be garbage-collected mid-flight
+    (the PR 7 orphan-task class).
+  - R5c: ``except asyncio.CancelledError`` that neither re-raises nor
+    raises the caught name — swallowing cancellation breaks
+    ``task.cancel()``-based shutdown.
+  - R5d: ``for`` over a shared container (name / ``self.x``, incl.
+    ``.items()``/``.keys()``/``.values()``) whose body both awaits AND
+    mutates that container — the await yields to handlers that may also
+    mutate it (RuntimeError at best, the PR 7 ghost-request class at
+    worst).  Iterating a snapshot (``list(...)``) is the sanctioned
+    pattern.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+Raw = tuple[int, int, str]     # (line, col, message)
+
+_JIT_NAMES = {"jax.jit", "jax.pjit", "pjit.pjit",
+              "jax.experimental.pjit.pjit"}
+_PROGRAM_TABLE_BUILDERS = ("build_program_table", "build_link_program_table")
+_SYNC_CALLS = {"jax.device_get", "jax.block_until_ready",
+               "numpy.asarray", "numpy.array", "numpy.copy"}
+_SYNC_BUILTINS = {"float", "int", "bool"}
+_BLOCKING_IN_ASYNC = {"time.sleep", "os.system", "subprocess.run",
+                      "subprocess.call", "subprocess.check_output",
+                      "subprocess.check_call", "socket.create_connection"}
+_TASK_SPAWNERS = {"create_task", "ensure_future"}
+_MUTATORS = {"pop", "append", "remove", "clear", "update", "extend",
+             "insert", "popitem", "setdefault", "add", "discard"}
+
+
+# ---------------------------------------------------------------------------
+# shared AST plumbing
+# ---------------------------------------------------------------------------
+
+def _attach_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._repro_parent = node  # type: ignore[attr-defined]
+
+
+def _parent(node: ast.AST) -> ast.AST | None:
+    return getattr(node, "_repro_parent", None)
+
+
+def _ancestors(node: ast.AST) -> Iterator[ast.AST]:
+    cur = _parent(node)
+    while cur is not None:
+        yield cur
+        cur = _parent(cur)
+
+
+def _enclosing_function(node: ast.AST):
+    for anc in _ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return anc
+    return None
+
+
+def _in_loop_same_function(node: ast.AST) -> bool:
+    """True when a loop encloses ``node`` WITHIN its own function scope
+    (a loop outside the enclosing ``def`` does not re-execute it)."""
+    for anc in _ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            return False
+        if isinstance(anc, (ast.For, ast.AsyncFor, ast.While)):
+            return True
+    return False
+
+
+class _Imports(ast.NodeVisitor):
+    """Alias map so ``jnp.asarray`` resolves to ``jax.numpy.asarray``,
+    ``from jax import jit`` resolves bare ``jit``, etc."""
+
+    def __init__(self):
+        self.aliases: dict[str, str] = {}
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            self.aliases[a.asname or a.name.split(".")[0]] = \
+                a.name if a.asname else a.name.split(".")[0]
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.module is None:
+            return
+        for a in node.names:
+            self.aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+
+
+def _dotted(node: ast.AST, aliases: dict[str, str]) -> str | None:
+    """Best-effort dotted name of an expression, aliases resolved:
+    ``jnp.asarray`` -> ``jax.numpy.asarray``, ``self._reset`` ->
+    ``self._reset``.  None for anything not a Name/Attribute chain."""
+    parts: list[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if not isinstance(cur, ast.Name):
+        return None
+    head = aliases.get(cur.id, cur.id)
+    return ".".join([head, *reversed(parts)])
+
+
+def _call_base(func: ast.AST, aliases: dict[str, str]) -> str | None:
+    """The dispatchable base of a call target, subscripts peeled:
+    ``step_fns[key](...)`` -> ``step_fns``;
+    ``self._programs[b]["window"](...)`` -> ``self._programs``."""
+    while isinstance(func, ast.Subscript):
+        func = func.value
+    return _dotted(func, aliases)
+
+
+def _is_jit_call(node: ast.AST, aliases: dict[str, str]) -> bool:
+    return (isinstance(node, ast.Call)
+            and _dotted(node.func, aliases) in _JIT_NAMES)
+
+
+def _target_names(target: ast.AST, aliases: dict[str, str]) -> list[str]:
+    """Dotted names bound by an assignment target (tuples flattened)."""
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: list[str] = []
+        for elt in target.elts:
+            out.extend(_target_names(elt, aliases))
+        return out
+    if isinstance(target, ast.Starred):
+        return _target_names(target.value, aliases)
+    name = _dotted(target, aliases)
+    return [name] if name is not None else []
+
+
+def _prep(tree: ast.AST) -> dict[str, str]:
+    _attach_parents(tree)
+    imp = _Imports()
+    imp.visit(tree)
+    return imp.aliases
+
+
+# ---------------------------------------------------------------------------
+# R1 — recompile hazards
+# ---------------------------------------------------------------------------
+
+def check_r1(tree: ast.AST, source: str, path: str) -> Iterable[Raw]:
+    aliases = _prep(tree)
+    for node in ast.walk(tree):
+        if not _is_jit_call(node, aliases):
+            continue
+        parent = _parent(node)
+        immediate = isinstance(parent, ast.Call) and parent.func is node
+        if immediate and node.args and isinstance(node.args[0], ast.Lambda):
+            yield (node.lineno, node.col_offset,
+                   "jax.jit(<lambda>)(...) can never hit the jit cache "
+                   "(a fresh lambda object per execution retraces every "
+                   "call); name the function and jit it once, or build a "
+                   "program table")
+            continue
+        if _in_loop_same_function(node):
+            yield (node.lineno, node.col_offset,
+                   "jit wrapper created inside a loop — a fresh wrapper "
+                   "(and trace cache) per iteration; hoist it out of the "
+                   "loop or pre-build a program table "
+                   "(codecs.build_program_table) and dispatch host-side")
+
+
+# ---------------------------------------------------------------------------
+# R2 — use-after-donate
+# ---------------------------------------------------------------------------
+
+def _donated_positions(call: ast.Call) -> tuple[list[int], list[str]]:
+    """Literal donate_argnums positions / donate_argnames names."""
+    positions: list[int] = []
+    names: list[str] = []
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+            for e in elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                    positions.append(e.value)
+        elif kw.arg == "donate_argnames":
+            v = kw.value
+            elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+            for e in elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    names.append(e.value)
+    return positions, names
+
+
+def check_r2(tree: ast.AST, source: str, path: str) -> Iterable[Raw]:
+    aliases = _prep(tree)
+    # pass 1: names bound (anywhere) to a donating jit wrapper
+    donors: dict[str, tuple[list[int], list[str]]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+            continue
+        value = node.value
+        if value is None or not _is_jit_call(value, aliases):
+            continue
+        pos, names = _donated_positions(value)
+        if not pos and not names:
+            continue
+        targets = (node.targets if isinstance(node, ast.Assign)
+                   else [node.target])
+        for t in targets:
+            for name in _target_names(t, aliases):
+                donors[name] = (pos, names)
+    if not donors:
+        return
+    # pass 2: per function, order donate/store/load events by line
+    funcs = [n for n in ast.walk(tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for fn in funcs:
+        events: dict[str, list[tuple[int, int, str, ast.AST]]] = {}
+
+        def note(var: str, line: int, col: int, kind: str, node: ast.AST):
+            events.setdefault(var, []).append((line, col, kind, node))
+
+        for node in ast.walk(fn):
+            if node is not fn and isinstance(
+                    node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue                     # nested scopes stand alone
+            if _enclosing_function(node) is not fn:
+                continue
+            if isinstance(node, ast.Call):
+                callee = _dotted(node.func, aliases)
+                if callee in donors:
+                    pos, kwnames = donors[callee]
+                    donated_args = [node.args[p] for p in pos
+                                    if p < len(node.args)]
+                    donated_args += [kw.value for kw in node.keywords
+                                     if kw.arg in kwnames]
+                    for arg in donated_args:
+                        var = _dotted(arg, aliases)
+                        if var is not None:
+                            note(var, node.lineno, node.col_offset,
+                                 "donate", node)
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                var = _dotted(node, aliases)
+                if var is None:
+                    continue
+                ctx = getattr(node, "ctx", None)
+                if isinstance(ctx, ast.Store):
+                    note(var, node.lineno, node.col_offset, "store", node)
+                elif isinstance(ctx, ast.Load):
+                    note(var, node.lineno, node.col_offset, "load", node)
+
+        for var, evs in events.items():
+            evs.sort(key=lambda e: (e[0], e[1]))
+            for line, col, kind, node in evs:
+                if kind != "donate":
+                    continue
+                # the first later load with no intervening store is a read
+                # of a possibly-reused buffer.  A store on the DONATING
+                # line is the wrapping assignment (`cache = step(cache)`,
+                # the engine idiom) and forgives; same-line loads are the
+                # call's own arguments.
+                if any(l2 == line and k2 == "store"
+                       for l2, _c2, k2, _n2 in evs):
+                    continue
+                for l2, c2, k2, _n2 in evs:
+                    if l2 <= line:
+                        continue
+                    if k2 == "store":
+                        break
+                    if k2 == "load":
+                        yield (l2, c2,
+                               f"{var!r} was donated to a jitted call on "
+                               f"line {line} (donate_argnums) and read "
+                               f"again without rebinding — the buffer may "
+                               f"have been reused in place; rebind it "
+                               f"from the call's result")
+                        break
+
+
+# ---------------------------------------------------------------------------
+# R3 — hidden host syncs
+# ---------------------------------------------------------------------------
+
+def _traced_functions(tree: ast.AST, aliases: dict[str, str]) -> set[ast.AST]:
+    """Function defs that jit traces: decorated with jax.jit (bare or
+    called), or passed by name to a jax.jit(...) call in this module —
+    plus every def nested inside one."""
+    traced: set[ast.AST] = set()
+    by_name: dict[str, list[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, []).append(node)
+            for dec in node.decorator_list:
+                if _dotted(dec, aliases) in _JIT_NAMES:
+                    traced.add(node)
+                elif isinstance(dec, ast.Call) \
+                        and _dotted(dec.func, aliases) in _JIT_NAMES:
+                    traced.add(node)
+                elif (isinstance(dec, ast.Call)
+                      and _dotted(dec.func, aliases)
+                      in ("functools.partial", "partial")
+                      and dec.args
+                      and _dotted(dec.args[0], aliases) in _JIT_NAMES):
+                    traced.add(node)
+    for node in ast.walk(tree):
+        if _is_jit_call(node, aliases) and node.args:
+            arg = node.args[0]
+            name = _dotted(arg, aliases)
+            if name in by_name:
+                traced.update(by_name[name])
+    # nested defs trace with their parent
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(a in traced for a in _ancestors(node)):
+                traced.add(node)
+    return traced
+
+
+def _program_names(tree: ast.AST, aliases: dict[str, str]) -> set[str]:
+    """Names bound to compiled programs: ``x = jax.jit(f)``, ``x =
+    <...>.build_program_table(...)``, or a def decorated @jax.jit."""
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            value = node.value
+            if value is None or not isinstance(value, ast.Call):
+                continue
+            callee = _dotted(value.func, aliases)
+            is_builder = callee is not None and callee.rsplit(".", 1)[-1] \
+                in _PROGRAM_TABLE_BUILDERS
+            if not (_is_jit_call(value, aliases) or is_builder):
+                continue
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                names.update(_target_names(t, aliases))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if _dotted(dec, aliases) in _JIT_NAMES or (
+                        isinstance(dec, ast.Call)
+                        and _dotted(dec.func, aliases) in _JIT_NAMES):
+                    names.add(node.name)
+    return names
+
+
+def _sync_construct(node: ast.AST, aliases: dict[str, str]) -> str | None:
+    """Describe ``node`` if it is a host-sync construct, else None."""
+    if not isinstance(node, ast.Call):
+        return None
+    if isinstance(node.func, ast.Attribute) and node.func.attr == "item" \
+            and not node.args:
+        return ".item() forces a device->host transfer"
+    callee = _dotted(node.func, aliases)
+    if callee in _SYNC_CALLS:
+        return f"{callee}() blocks on device results"
+    if callee in _SYNC_BUILTINS and len(node.args) == 1 \
+            and not isinstance(node.args[0], ast.Constant):
+        return f"{callee}() on a device value forces a host sync"
+    return None
+
+
+def check_r3(tree: ast.AST, source: str, path: str) -> Iterable[Raw]:
+    aliases = _prep(tree)
+    traced = _traced_functions(tree, aliases)
+    programs = _program_names(tree, aliases)
+
+    # (a) host syncs / truthiness inside traced functions
+    for fn in traced:
+        params = {a.arg for a in [*fn.args.args, *fn.args.posonlyargs,
+                                  *fn.args.kwonlyargs]}
+        for node in ast.walk(fn):
+            desc = _sync_construct(node, aliases)
+            if desc is not None:
+                yield (node.lineno, node.col_offset,
+                       f"{desc} inside jit-traced function {fn.name!r} "
+                       f"(raises or constant-folds at trace time)")
+            if isinstance(node, (ast.If, ast.While)):
+                test = node.test
+                if isinstance(test, ast.Name) and test.id in params:
+                    yield (test.lineno, test.col_offset,
+                           f"truthiness on traced argument {test.id!r} "
+                           f"inside jit-traced function {fn.name!r} — use "
+                           f"jnp.where / lax.cond (or make it static)")
+
+    # (b) per-iteration host syncs in loops that dispatch compiled programs
+    if not programs:
+        return
+    for loop in ast.walk(tree):
+        if not isinstance(loop, (ast.For, ast.AsyncFor, ast.While)):
+            continue
+        body_nodes = [n for stmt in loop.body for n in ast.walk(stmt)]
+        dispatches = any(
+            isinstance(n, ast.Call)
+            and _call_base(n.func, aliases) in programs
+            for n in body_nodes)
+        if not dispatches:
+            continue
+        for n in body_nodes:
+            desc = _sync_construct(n, aliases)
+            if desc is not None:
+                yield (n.lineno, n.col_offset,
+                       f"{desc} every iteration of a loop that dispatches "
+                       f"a compiled program — the sync serializes dispatch "
+                       f"with compute; accumulate device values and "
+                       f"convert after the loop (or gate it on the "
+                       f"logging cadence)")
+
+
+# ---------------------------------------------------------------------------
+# R4 — codec accounting completeness
+# ---------------------------------------------------------------------------
+
+_R4_REQUIRED = {"transform": ("payload_shape", "wire_bytes", "flops"),
+                "wire": ("wire_bytes", "flops", "apply")}
+
+
+def check_r4(tree: ast.AST, source: str, path: str) -> Iterable[Raw]:
+    aliases = _prep(tree)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for dec in node.decorator_list:
+            if not isinstance(dec, ast.Call):
+                continue
+            callee = _dotted(dec.func, aliases)
+            if callee is None or callee.rsplit(".", 1)[-1] != "register":
+                continue
+            kind = "transform"
+            for kw in dec.keywords:
+                if kw.arg == "kind" and isinstance(kw.value, ast.Constant):
+                    kind = str(kw.value.value)
+            required = _R4_REQUIRED.get(kind, _R4_REQUIRED["transform"])
+            defined = {n.name for n in node.body
+                       if isinstance(n, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))}
+            missing = [m for m in required if m not in defined]
+            if missing:
+                yield (node.lineno, node.col_offset,
+                       f"registered {kind} codec {node.name!r} does not "
+                       f"implement {', '.join(missing)} in its own body — "
+                       f"every wire stage must carry the exact byte/FLOP "
+                       f"accounting surface (BENCH_comm and the HLO "
+                       f"cross-checks depend on it)")
+
+
+# ---------------------------------------------------------------------------
+# R5 — asyncio race / hygiene
+# ---------------------------------------------------------------------------
+
+def _handles_cancelled(handler: ast.ExceptHandler,
+                       aliases: dict[str, str]) -> bool:
+    t = handler.type
+    types = t.elts if isinstance(t, ast.Tuple) else ([t] if t else [])
+    for typ in types:
+        name = _dotted(typ, aliases)
+        if name is not None and name.rsplit(".", 1)[-1] == "CancelledError":
+            return True
+    return False
+
+
+def _reraises(handler: ast.ExceptHandler) -> bool:
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            if node.exc is None:
+                return True
+            if isinstance(node.exc, ast.Name) and node.exc.id == handler.name:
+                return True
+            # raising ANYTHING keeps the cancellation path loud enough
+            return True
+    return False
+
+
+def _container_key(node: ast.AST, aliases: dict[str, str]) -> str | None:
+    """The shared-container identity an async loop iterates: a bare
+    name / attribute, or the same with .items()/.keys()/.values()."""
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+            and node.func.attr in ("items", "keys", "values") \
+            and not node.args:
+        node = node.func.value
+    return _dotted(node, aliases)
+
+
+def check_r5(tree: ast.AST, source: str, path: str) -> Iterable[Raw]:
+    aliases = _prep(tree)
+    async_fns = [n for n in ast.walk(tree)
+                 if isinstance(n, ast.AsyncFunctionDef)]
+
+    for fn in async_fns:
+        for node in ast.walk(fn):
+            if _enclosing_function(node) is not fn:
+                continue
+            # R5a: blocking call on the event loop thread
+            if isinstance(node, ast.Call):
+                callee = _dotted(node.func, aliases)
+                if callee in _BLOCKING_IN_ASYNC:
+                    yield (node.lineno, node.col_offset,
+                           f"blocking {callee}() inside async def "
+                           f"{fn.name!r} stalls the single-threaded event "
+                           f"loop (every tenant pays); use the asyncio "
+                           f"equivalent or run_in_executor")
+            # R5c: swallowed cancellation
+            if isinstance(node, ast.ExceptHandler) \
+                    and _handles_cancelled(node, aliases) \
+                    and not _reraises(node):
+                yield (node.lineno, node.col_offset,
+                       f"except CancelledError without re-raise in async "
+                       f"def {fn.name!r} — swallowing cancellation breaks "
+                       f"task.cancel()-based shutdown (the PR 7 orphan-"
+                       f"task cleanup relies on it propagating)")
+            # R5d: mutate-while-iterating across an await
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                key = _container_key(node.iter, aliases)
+                if key is None:
+                    continue
+                body = [n for stmt in node.body for n in ast.walk(stmt)]
+                if not any(isinstance(n, ast.Await) for n in body):
+                    continue
+                mutated = False
+                for n in body:
+                    if isinstance(n, (ast.Delete, ast.Assign)):
+                        targets = (n.targets if isinstance(n, (ast.Delete,
+                                                               ast.Assign))
+                                   else [])
+                        for t in targets:
+                            if isinstance(t, ast.Subscript) \
+                                    and _dotted(t.value, aliases) == key:
+                                mutated = True
+                    if isinstance(n, ast.Call) \
+                            and isinstance(n.func, ast.Attribute) \
+                            and n.func.attr in _MUTATORS \
+                            and _dotted(n.func.value, aliases) == key:
+                        mutated = True
+                if mutated:
+                    yield (node.lineno, node.col_offset,
+                           f"iterating {key!r} with an await in the body "
+                           f"while also mutating it — the await yields to "
+                           f"handlers that may touch the same container; "
+                           f"iterate a snapshot (list({key})) instead")
+
+    # R5b: dropped task reference (any scope, not just async defs —
+    # a sync helper can spawn tasks too)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Expr) or not isinstance(node.value,
+                                                            ast.Call):
+            continue
+        call = node.value
+        callee = _dotted(call.func, aliases)
+        tail = callee.rsplit(".", 1)[-1] if callee else (
+            call.func.attr if isinstance(call.func, ast.Attribute) else None)
+        if tail in _TASK_SPAWNERS:
+            yield (node.lineno, node.col_offset,
+                   "task spawned and its reference dropped — the event "
+                   "loop holds only a weak ref, so the task can be "
+                   "garbage-collected mid-flight and its exceptions are "
+                   "never observed; retain it (self._tasks.add / await)")
+
+
+CHECKERS = {"R1": check_r1, "R2": check_r2, "R3": check_r3,
+            "R4": check_r4, "R5": check_r5}

@@ -1,0 +1,242 @@
+"""Opt-in runtime sanitizers (the ``--sanitize`` tier).
+
+Static analysis (:mod:`repro.analysis.rules`) catches what an AST can
+see; this module checks what only a running system can — behind an
+explicit flag, because every check here costs host syncs or extra
+dispatches that the production paths refuse to pay:
+
+* :func:`enable_debug_nans` / :func:`checkify_jit` — jax-level float
+  sanitizers for the train step.
+
+* :class:`EngineSanitizer` — per-tick :class:`~repro.serving.engine
+  .BatchedEngine` invariant checks, attached via
+  ``engine.attach_sanitizer``:
+
+  - **pool accounting**: every page is on the free list or owned by
+    exactly one slot (``free + in_use == total``);
+  - **slot-state hygiene**: a slot with no resident request must be
+    inert device-side (``active``/``done`` False, ``pos``/``out_len``
+    zero) — the state analogue of the cache-zeroing reset;
+  - **live-slot zeroing pre-encode**: the PR 7 C3-SL fix pinned as a
+    CHECKED invariant.  A probe program re-runs the real
+    ``lm.decode_step`` front half (``return_cut=True``, non-donating)
+    and asserts dead rows contribute EXACTLY zero to the cut-layer
+    tensor entering ``codec.encode`` — any nonzero means stale
+    allocation-history garbage is back in the batch-wise superposition,
+    perturbing live rows through HRR cross-talk.
+
+* :class:`SlowCallbackDetector` — event-loop stall diagnostics for the
+  front door (jit warmup legitimately blocks the loop, so stalls are
+  recorded and reported, not fatal).
+
+* :class:`TrainSanitizer` — per-step finite checks for the train loops
+  (loss/grad-norm NaN/Inf trips immediately, with the step index).
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import checkify
+
+
+class SanitizerError(AssertionError):
+    """A checked runtime invariant was violated."""
+
+
+# ---------------------------------------------------------------------------
+# jax-level float sanitizers
+# ---------------------------------------------------------------------------
+
+def enable_debug_nans(on: bool = True) -> None:
+    """Global NaN trap: any jitted computation producing a NaN re-runs
+    un-jitted and raises at the producing primitive."""
+    jax.config.update("jax_debug_nans", on)
+
+
+def checkify_jit(fn, *, errors=None):
+    """jit ``fn`` under checkify float checks; the wrapper re-raises any
+    accumulated error host-side (``err.throw()``) and returns ``fn``'s
+    plain outputs, so it drops into existing call sites."""
+    errors = checkify.float_checks if errors is None else errors
+    checked = jax.jit(checkify.checkify(fn, errors=errors))
+
+    def wrapper(*args, **kwargs):
+        err, out = checked(*args, **kwargs)
+        err.throw()
+        return out
+
+    return wrapper
+
+
+class TrainSanitizer:
+    """Per-step host-side finite checks for the train loops.  Syncs on
+    every step by design — sanitize mode trades throughput for checks."""
+
+    def __init__(self):
+        self.steps_checked = 0
+
+    def check_step(self, step: int, **scalars) -> None:
+        import math
+        for name, value in scalars.items():
+            if value is None:
+                continue
+            v = float(value)  # lint-ok: R3 sanitize mode trades throughput for per-step checks
+            if not math.isfinite(v):
+                raise SanitizerError(
+                    f"[sanitize] step {step}: {name} is {v!r} — "
+                    f"non-finite training signal")
+        self.steps_checked += 1
+
+
+# ---------------------------------------------------------------------------
+# engine invariants
+# ---------------------------------------------------------------------------
+
+class EngineSanitizer:
+    """Per-tick invariant checks for a :class:`BatchedEngine`.
+
+    Attach with ``engine.attach_sanitizer(EngineSanitizer(engine))``;
+    the engine then calls :meth:`on_tick` after every tick/run
+    iteration.  ``every`` thins the expensive cut-probe (the cheap
+    host-side checks always run).  ``counts`` records how often each
+    check actually fired, so tests can assert the invariant was
+    EXERCISED, not just never tripped.
+    """
+
+    def __init__(self, engine, *, every: int = 1):
+        from repro import codecs as codecs_lib
+        from repro.models import lm as lm_lib
+        self.every = max(1, int(every))
+        self.ticks = 0
+        self.counts = {"pool": 0, "slot_state": 0, "cut_zeroing": 0}
+        self._probes = None
+        if engine.codec is not None:
+            cfg, paged = engine.cfg, engine.paged
+
+            def make_probe(codec, codec_params):
+                def probe(params, cache, state):
+                    live = state["active"] & ~state["done"]
+                    _, _, cut = lm_lib.decode_step(
+                        params, cache, state["last_tok"][:, None],
+                        state["pos"], cfg, codec=codec,
+                        codec_params=codec_params, paged=paged, live=live,
+                        return_cut=True)
+                    dead = (~live).astype(cut.dtype)[:, None]
+                    return jnp.sum(jnp.abs(cut) * dead), live.sum()
+                # non-donating on purpose: the probe reads the same
+                # cache/state the next real dispatch will consume
+                return jax.jit(probe)
+
+            self._probes = codecs_lib.build_program_table(
+                engine.codec, engine.codec_params, make_probe)
+
+    # -- individual checks -------------------------------------------------
+
+    def check_pool(self, engine) -> None:
+        acct = engine.pool_accounting()
+        if acct["total"] and acct["free"] + acct["in_use"] != acct["total"]:
+            raise SanitizerError(
+                f"[sanitize] page-pool accounting broken: free "
+                f"{acct['free']} + in_use {acct['in_use']} != total "
+                f"{acct['total']} — a page leaked or is double-owned")
+        self.counts["pool"] += 1
+
+    def check_slot_state(self, engine) -> None:
+        empty = [i for i, s in enumerate(engine.slots) if s.req is None]
+        if not empty:
+            return
+        st = jax.device_get({k: engine.state[k]
+                             for k in ("active", "done", "pos", "out_len")})
+        for i in empty:
+            if bool(st["active"][i]) or bool(st["done"][i]) \
+                    or int(st["pos"][i]) or int(st["out_len"][i]):
+                raise SanitizerError(
+                    f"[sanitize] empty slot {i} is not inert: "
+                    f"active={bool(st['active'][i])} "
+                    f"done={bool(st['done'][i])} pos={int(st['pos'][i])} "
+                    f"out_len={int(st['out_len'][i])} — stale device "
+                    f"state survived a retire/evict")
+        self.counts["slot_state"] += 1
+
+    def check_cut_zeroing(self, engine) -> None:
+        """The PR 7 invariant: rows that are not live contribute EXACTLY
+        zero to the cut-layer tensor entering the batch-wise codec.
+        ``jnp.where`` writes exact zeros, so any tolerance would only
+        mask a regression — the threshold is 0.0."""
+        if self._probes is None:
+            return
+        live = engine.state["active"] & ~engine.state["done"]
+        n_live = int(jnp.sum(live))
+        if n_live == 0 or n_live == engine.num_slots:
+            return          # no dead/live mix: the invariant is vacuous
+        from repro import codecs as codecs_lib
+        probe = self._probes[codecs_lib.program_key(engine.codec)]
+        dead_mag, _ = probe(engine.params, engine.cache, engine.state)
+        dead_mag = float(dead_mag)
+        if dead_mag != 0.0:
+            raise SanitizerError(
+                f"[sanitize] live-slot zeroing violated: dead rows "
+                f"contribute |cut| sum = {dead_mag!r} (expected exactly "
+                f"0.0) to the C3-SL superposition — stale slot state is "
+                f"leaking into live rows through HRR cross-talk")
+        self.counts["cut_zeroing"] += 1
+
+    # -- engine hook -------------------------------------------------------
+
+    def on_tick(self, engine) -> None:
+        self.ticks += 1
+        self.check_pool(engine)
+        self.check_slot_state(engine)
+        if self.ticks % self.every == 0:
+            self.check_cut_zeroing(engine)
+
+
+# ---------------------------------------------------------------------------
+# event-loop stall diagnostics
+# ---------------------------------------------------------------------------
+
+class SlowCallbackDetector:
+    """Record event-loop stalls: a probe task sleeps ``interval_s`` and
+    measures how late it wakes; anything beyond ``threshold_s`` of lag
+    is one stall.  Diagnostic, not fatal — jit compilation legitimately
+    blocks the loop at warmup.  Also turns on asyncio debug slow-
+    callback logging at the same threshold."""
+
+    def __init__(self, *, threshold_s: float = 0.25,
+                 interval_s: float = 0.05):
+        self.threshold_s = threshold_s
+        self.interval_s = interval_s
+        self.max_lag_s = 0.0
+        self.stalls: list[float] = []
+        self._task: asyncio.Task | None = None
+
+    def install(self) -> "SlowCallbackDetector":
+        loop = asyncio.get_running_loop()
+        loop.slow_callback_duration = self.threshold_s
+        self._task = asyncio.create_task(self._probe())
+        return self
+
+    async def _probe(self):
+        while True:
+            t0 = time.perf_counter()
+            await asyncio.sleep(self.interval_s)
+            lag = time.perf_counter() - t0 - self.interval_s
+            self.max_lag_s = max(self.max_lag_s, lag)
+            if lag > self.threshold_s:
+                self.stalls.append(lag)
+
+    async def stop(self) -> None:
+        if self._task is not None:
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:  # lint-ok: R5 reaping the probe task WE just cancelled
+                pass
+            self._task = None
+
+    def report(self) -> str:
+        return (f"event-loop lag: max {self.max_lag_s * 1e3:.1f}ms, "
+                f"{len(self.stalls)} stall(s) over {self.threshold_s}s")

@@ -164,7 +164,7 @@ class FrontDoorClient:
             self._read_task.cancel()
             try:
                 await self._read_task
-            except (asyncio.CancelledError, Exception):
+            except (asyncio.CancelledError, Exception):  # lint-ok: R5 reaping a task WE just cancelled: its CancelledError is the expected result, not our own cancellation
                 pass
         if self._stream is not None:
             self._stream.close()
@@ -203,7 +203,7 @@ class FrontDoorClient:
                 self._read_task.cancel()
                 try:
                     await self._read_task
-                except (asyncio.CancelledError, Exception):
+                except (asyncio.CancelledError, Exception):  # lint-ok: R5 reaping a task WE just cancelled before reconnecting
                     pass
             failed.close()
             last: Exception = err

@@ -57,7 +57,11 @@ CHAOS_TENANTS = [("tenant-a", BUCKET_SPEC), ("tenant-b", BUCKET_SPEC),
 
 
 def build_engine(num_slots: int = 4, max_len: int = 64,
-                 spec: str = ENGINE_SPEC) -> BatchedEngine:
+                 spec: str = ENGINE_SPEC,
+                 sync_every: int = 8) -> BatchedEngine:
+    # sanitize mode shrinks sync_every below max_new so decode spans tick
+    # boundaries: the per-tick cut probe then observes slots mid-decode
+    # (a dead/live mix) instead of every window running to completion
     cfg = reduced(get_config("deepseek-7b"), num_layers=2, d_model=128,
                   d_ff=256, vocab_size=256, num_heads=4, num_kv_heads=2,
                   head_dim=32)
@@ -66,7 +70,7 @@ def build_engine(num_slots: int = 4, max_len: int = 64,
                          codec=spec, greedy=True, seed=0,
                          kv_layout="paged", page_size=8,
                          num_pages=num_slots * (max_len // 8),
-                         preemption=True)
+                         sync_every=sync_every, preemption=True)
 
 
 def chaos_plan() -> FaultPlan:
@@ -99,8 +103,37 @@ async def _tenant(host, port, tenant, codec, requests, vocab, seed,
     return tenant, results, stats
 
 
-async def amain(requests: int = 3) -> dict:
-    eng = build_engine()
+def _arm_sanitizers(eng):
+    """Attach the runtime sanitizer tier to a selfcheck engine: per-tick
+    invariant checks (a trip raises out of the server's tick loop, which
+    cancels every tenant and exits the selfcheck NONZERO via stop()) plus
+    the event-loop stall detector (diagnostic only — jit warmup blocks
+    the loop legitimately)."""
+    from repro.analysis.sanitize import EngineSanitizer, SlowCallbackDetector
+    san = EngineSanitizer(eng)
+    eng.attach_sanitizer(san)
+    det = SlowCallbackDetector().install()
+    return san, det
+
+
+async def _report_sanitizers(san, det, *, require_cut_checks: bool):
+    await det.stop()
+    print(f"[selfcheck] sanitize: {san.ticks} ticks checked "
+          f"(pool {san.counts['pool']}, slot-state "
+          f"{san.counts['slot_state']}, cut-zeroing "
+          f"{san.counts['cut_zeroing']}); {det.report()}")
+    if require_cut_checks:
+        assert san.counts["cut_zeroing"] > 0, (
+            "the live-slot-zeroing invariant was never exercised — no "
+            "tick observed a dead/live slot mix; the sanitize run is "
+            "vacuous")
+
+
+async def amain(requests: int = 3, sanitize: bool = False) -> dict:
+    eng = build_engine(sync_every=2 if sanitize else 8)
+    san = det = None
+    if sanitize:
+        san, det = _arm_sanitizers(eng)
     server = FrontDoorServer(
         eng,
         admission=AdmissionController(
@@ -123,6 +156,9 @@ async def amain(requests: int = 3) -> dict:
         sys.exit(1)
     stats = outs[-1][2]          # last tenant's STATS snapshot
     await server.stop()
+    assert server.tick_error is None, server.tick_error
+    if sanitize:
+        await _report_sanitizers(san, det, require_cut_checks=True)
 
     for name, results, _ in outs:
         assert len(results) == requests, (name, len(results))
@@ -145,12 +181,16 @@ async def amain(requests: int = 3) -> dict:
     return stats
 
 
-async def _sequential_run(requests: int, faults: FaultPlan | None) -> dict:
+async def _sequential_run(requests: int, faults: FaultPlan | None,
+                          sanitize: bool = False) -> dict:
     """One full sequential pass (every tenant, every request, one at a
     time) against a FRESH static-bucket engine; returns
     {tenant: [token lists]} plus the final server stats under the
     "_stats" key."""
-    eng = build_engine(spec=BUCKET_SPEC)
+    eng = build_engine(spec=BUCKET_SPEC, sync_every=2 if sanitize else 8)
+    san = det = None
+    if sanitize:
+        san, det = _arm_sanitizers(eng)
     server = FrontDoorServer(
         eng,
         admission=AdmissionController(
@@ -169,17 +209,22 @@ async def _sequential_run(requests: int, faults: FaultPlan | None) -> dict:
             tokens[name_] = [r["tokens"] for r in results]
     finally:
         await server.stop()
+    assert server.tick_error is None, server.tick_error
+    if sanitize:
+        # sequential tenants leave 3 of 4 slots empty while one decodes,
+        # so the cut probe always sees a dead/live mix here
+        await _report_sanitizers(san, det, require_cut_checks=True)
     assert not eng.queue and eng.active == 0, "engine not drained"
     tokens["_stats"] = stats
     return tokens
 
 
-async def amain_chaos(requests: int = 3) -> None:
+async def amain_chaos(requests: int = 3, sanitize: bool = False) -> None:
     print("[selfcheck] chaos: recording the fault-free sequential reference")
-    ref = await _sequential_run(requests, faults=None)
+    ref = await _sequential_run(requests, faults=None, sanitize=sanitize)
     plan = chaos_plan()
     print(f"[selfcheck] chaos: replaying under {plan}")
-    got = await _sequential_run(requests, faults=plan)
+    got = await _sequential_run(requests, faults=plan, sanitize=sanitize)
     bad = []
     for name, _ in CHAOS_TENANTS:
         if got[name] != ref[name]:
@@ -209,11 +254,16 @@ def main():
     ap.add_argument("--chaos", action="store_true",
                     help="seeded fault-injection run: sequential tenants, "
                          "outputs must be bit-identical to fault-free")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run the loopback tenants under the runtime "
+                         "sanitizer tier (per-tick engine invariants + "
+                         "event-loop stall detection); any invariant trip "
+                         "exits nonzero")
     args = ap.parse_args()
     if args.chaos:
-        asyncio.run(amain_chaos(args.requests))
+        asyncio.run(amain_chaos(args.requests, sanitize=args.sanitize))
     else:
-        asyncio.run(amain(args.requests))
+        asyncio.run(amain(args.requests, sanitize=args.sanitize))
     print("[selfcheck] PASS")
 
 

@@ -171,6 +171,7 @@ class FrontDoorServer:
         self._conn_tasks: set[asyncio.Task] = set()
         self._server: asyncio.base_events.Server | None = None
         self._tick_task: asyncio.Task | None = None
+        self._tick_error: BaseException | None = None
         self._closing = False
 
     # ------------------------------------------------------------------
@@ -185,6 +186,12 @@ class FrontDoorServer:
             self._tick_task = asyncio.create_task(self._tick_loop())
         return self.host, self.port
 
+    @property
+    def tick_error(self) -> BaseException | None:
+        """The exception that killed the tick loop, if any — checked by
+        selfcheck (and surfaced by stop(), which re-raises it)."""
+        return self._tick_error
+
     async def stop(self, *, drain: bool = True):
         """Clean shutdown: optionally finish all admitted work (results
         delivered), then stop ticking, cancel every in-flight connection
@@ -197,7 +204,7 @@ class FrontDoorServer:
             self._tick_task.cancel()
             try:
                 await self._tick_task
-            except asyncio.CancelledError:
+            except asyncio.CancelledError:  # lint-ok: R5 reaping the tick task WE just cancelled at shutdown
                 pass
             self._tick_task = None
         for task in list(self._conn_tasks):
@@ -221,6 +228,8 @@ class FrontDoorServer:
         """Tick until the engine is idle and every finished request has
         been delivered (or its connection is gone)."""
         eng = self.engine
+        if self._tick_error is not None:
+            return            # engine crashed: nothing will drain; stop()
         while eng.queue or eng.active or eng.finished or self._routes:
             worked = await self._pump()
             if not worked:
@@ -229,11 +238,23 @@ class FrontDoorServer:
                 await asyncio.sleep(0)
 
     async def _tick_loop(self):
-        while not self._closing:
-            worked = await self._pump()
-            # yield even after useful work so handlers get to run between
-            # dispatches; park on the idle sleep otherwise
-            await asyncio.sleep(0 if worked else self.idle_sleep_s)
+        try:
+            while not self._closing:
+                worked = await self._pump()
+                # yield even after useful work so handlers get to run between
+                # dispatches; park on the idle sleep otherwise
+                await asyncio.sleep(0 if worked else self.idle_sleep_s)
+        except asyncio.CancelledError:
+            raise
+        except BaseException as e:
+            # An engine (or sanitizer-invariant) exception used to kill
+            # this task SILENTLY: tenants hung forever on results that
+            # would never come.  Record it and fail every connection fast
+            # so callers (selfcheck, real clients) observe the crash.
+            self._tick_error = e
+            for task in list(self._conn_tasks):
+                task.cancel()
+            raise
 
     async def _pump(self) -> bool:
         """One engine tick plus result delivery; True if anything moved."""
@@ -449,7 +470,7 @@ class FrontDoorServer:
             stream.close()
             try:
                 await stream.wait_closed()
-            except asyncio.CancelledError:
+            except asyncio.CancelledError:  # lint-ok: R5 teardown path: this handler task is already being cancelled by stop(); the socket close must still finish
                 pass
 
     async def _handshake(self, stream: FrameStream):

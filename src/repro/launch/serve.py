@@ -104,6 +104,13 @@ def _build_engine(cfg, params, args):
         if not isinstance(eng.codec, codecs.AdaptiveC3SL):
             raise SystemExit("--pin-R needs an 'adaptive:...' --codec spec")
         eng.codec.pin(args.pin_R)
+    if getattr(args, "sanitize", False):
+        from repro.analysis.sanitize import EngineSanitizer, enable_debug_nans
+        enable_debug_nans()
+        eng.attach_sanitizer(EngineSanitizer(eng))
+        print("[sanitize] debug_nans + per-tick engine invariant checks "
+              "armed (pool accounting, slot hygiene, live-slot cut "
+              "zeroing)", flush=True)
     return eng
 
 
@@ -124,6 +131,10 @@ def _run_frontdoor(cfg, params, args):
             default_policy=TenantPolicy(max_inflight=args.max_inflight)))
 
     async def serve():
+        detector = None
+        if getattr(args, "sanitize", False):
+            from repro.analysis.sanitize import SlowCallbackDetector
+            detector = SlowCallbackDetector().install()
         host, port = await server.start()
         spec = eng.codec.spec() if eng.codec is not None else "none"
         print(f"[serve] front door on {host}:{port} arch={cfg.name} "
@@ -132,6 +143,9 @@ def _run_frontdoor(cfg, params, args):
         try:
             await asyncio.Event().wait()
         finally:
+            if detector is not None:
+                await detector.stop()
+                print(f"[sanitize] {detector.report()}", flush=True)
             await server.stop(drain=False)
 
     try:
@@ -210,6 +224,12 @@ def main():
     ap.add_argument("--max-queue-depth", type=int, default=64,
                     help="server-wide backlog cap before BUSY shedding "
                          "(front door)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="runtime sanitizer tier (repro.analysis.sanitize): "
+                         "jax_debug_nans + per-tick engine invariant checks "
+                         "(--engine/--frontdoor paths; an invariant trip "
+                         "raises out of the serving loop) and event-loop "
+                         "stall diagnostics on the front door")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -58,7 +58,21 @@ def make_codec(spec: str, D: int, *, R: int = 4, quant=None, unitary=False,
     return codec, codec.init(jax.random.PRNGKey(7))
 
 
+def _arm_train_sanitizers(args):
+    """The --sanitize tier for the train loops: global NaN trap, checkify
+    float checks compiled into every step branch, and per-step host-side
+    finite checks.  Returns None when sanitize mode is off."""
+    if not getattr(args, "sanitize", False):
+        return None
+    from repro.analysis import sanitize as sanitize_lib
+    sanitize_lib.enable_debug_nans()
+    print("[sanitize] debug_nans + checkify float checks + per-step "
+          "finite checks armed", flush=True)
+    return sanitize_lib
+
+
 def run_standard(args, cfg):
+    sanitize_lib = _arm_train_sanitizers(args)
     rng = jax.random.PRNGKey(args.seed)
     params = lm_lib.init_lm_params(rng, cfg)
     opt = adamw(args.lr)
@@ -116,12 +130,17 @@ def run_standard(args, cfg):
             updates, opt_state2 = opt.update(grads, opt_state, params)
             return (apply_updates(params, updates), opt_state2, loss, gn,
                     metrics.get("cut_snr"), bwd_snr)
-        if fault_link is not None:
-            return jax.jit(_body)
-        return jax.jit(functools.partial(_body, erasure=None))
+        fn = _body if fault_link is not None \
+            else functools.partial(_body, erasure=None)
+        if sanitize_lib is not None:
+            # each bucket branch compiles WITH checkify's float checks;
+            # the wrapper throws host-side on the first NaN/Inf/div0
+            return sanitize_lib.checkify_jit(fn)
+        return jax.jit(fn)
 
     step_fns = transport.build_link_program_table(codec, codec_params,
                                                   make_step)
+    train_san = sanitize_lib.TrainSanitizer() if sanitize_lib else None
 
     data = SyntheticTokenDataset(cfg.vocab_size, args.seq, seed=args.seed)
     it = make_batch_iterator(data, args.batch)
@@ -157,7 +176,9 @@ def run_standard(args, cfg):
         else:
             params, opt_state, loss, gn, snr, bwd_snr = step_fns[key](
                 params, opt_state, batch, probe0, erasure)
-        losses.append(float(loss))
+        losses.append(loss)       # device value; one sync after the loop
+        if train_san is not None:
+            train_san.check_step(step, loss=loss, gnorm=gn)
         # actual bytes this step put on the boundary, per direction: the
         # backward payload has the forward's compressed shape (mirrored /
         # bare codecs) or its own channel's wire format (asymmetric links)
@@ -172,16 +193,16 @@ def run_standard(args, cfg):
         if fault_info is not None:
             # retransmissions inflate the actual wire traffic
             if fault_info.get("fwd"):
-                wf = int(round(wf * fault_info["fwd"]["wire_mult"]))
+                wf = int(round(wf * fault_info["fwd"]["wire_mult"]))  # lint-ok: R3 host ints from the fault schedule, no device value
             if fault_info.get("bwd"):
-                wb = int(round(wb * fault_info["bwd"]["wire_mult"]))
+                wb = int(round(wb * fault_info["bwd"]["wire_mult"]))  # lint-ok: R3 host ints from the fault schedule, no device value
         wire_fwd_total += wf
         wire_bwd_total += wb
         if link is not None:
-            link.observe(fwd_snr=float(snr) if snr is not None else None,
-                         bwd_snr=(float(bwd_snr) if adaptive_bwd else None))
+            link.observe(fwd_snr=float(snr) if snr is not None else None,  # lint-ok: R3 adaptive controller is host-side by design: it must see this step's SNR before the next dispatch
+                         bwd_snr=(float(bwd_snr) if adaptive_bwd else None))  # lint-ok: R3 adaptive controller is host-side by design
         elif adaptive:
-            codec.observe(float(snr))      # EMA + ladder walk for NEXT step
+            codec.observe(float(snr))      # EMA + ladder walk for NEXT step  # lint-ok: R3 adaptive controller is host-side by design
         if step % args.log_every == 0 or step == args.steps - 1:
             dt = time.time() - t0
             tps = tokens_per_step * (step + 1) / dt
@@ -196,21 +217,24 @@ def run_standard(args, cfg):
                     rb = key[1] if key[1] is not None \
                         else getattr(link.bwd.codec, "R", 1)
                     sched = (f" R={rf}>>bwd:{rb}"
-                             f" snr {float(snr):.1f}dB"
-                             f" grad-snr {float(bwd_snr):.1f}dB" + sched)
+                             f" snr {float(snr):.1f}dB"  # lint-ok: R3 log-gated (log_every cadence)
+                             f" grad-snr {float(bwd_snr):.1f}dB" + sched)  # lint-ok: R3 log-gated (log_every cadence)
                 elif adaptive:
-                    sched = (f" R={key} snr {float(snr):.1f}dB "
+                    sched = (f" R={key} snr {float(snr):.1f}dB "  # lint-ok: R3 log-gated (log_every cadence)
                              f"(ema {codec.ema_snr:.1f})" + sched)
                 elif snr is not None:
-                    sched = f" snr {float(snr):.1f}dB" + sched
+                    sched = f" snr {float(snr):.1f}dB" + sched  # lint-ok: R3 log-gated (log_every cadence)
                 if fault_info is not None and fault_info.get("fwd"):
                     fi = fault_info["fwd"]
                     sched += (f" [erased {fi['erased_frac']:.0%} "
                               f"x{fi['wire_mult']:.2f} wire]")
-            print(f"step {step:5d} loss {float(loss):.4f} gnorm {float(gn):.3f}"
+            print(f"step {step:5d} loss {float(loss):.4f} gnorm {float(gn):.3f}"  # lint-ok: R3 log-gated (log_every cadence)
                   f"{sched} | {tps:,.0f} tok/s, "
                   f"{step_flops*(step+1)/dt/1e9:.1f} "
                   f"GFLOP/s model-flops ({dt:.1f}s)", flush=True)
+    # single deferred device->host sync for the whole run: the per-step
+    # float(loss) serialized every dispatch with the previous step's compute
+    losses = [float(l) for l in losses]
     if codec is not None:
         print(f"boundary traffic: {wire_fwd_total:,d} B fwd + "
               f"{wire_bwd_total:,d} B bwd = "
@@ -230,6 +254,7 @@ def run_standard(args, cfg):
 
 def run_pipeline(args, cfg):
     """2-stage pod pipeline with the compressed channel (repro.core.split)."""
+    sanitize_lib = _arm_train_sanitizers(args)
     n_dev = len(jax.devices())
     assert n_dev >= 2 and n_dev % 2 == 0, \
         "pipeline mode needs an even device count (set --xla_force_host_platform_device_count)"
@@ -279,12 +304,15 @@ def run_pipeline(args, cfg):
     opt = adamw(args.lr)
     opt_state = opt.init(params)
 
-    @jax.jit
-    def step_fn(params, opt_state, batch):
+    def _step(params, opt_state, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         grads, gn = clip_by_global_norm(grads, 1.0)
         updates, opt_state2 = opt.update(grads, opt_state, params)
         return apply_updates(params, updates), opt_state2, loss, gn
+
+    step_fn = (sanitize_lib.checkify_jit(_step) if sanitize_lib
+               else jax.jit(_step))
+    train_san = sanitize_lib.TrainSanitizer() if sanitize_lib else None
 
     data = SyntheticTokenDataset(cfg.vocab_size, args.seq, seed=args.seed)
     it = make_batch_iterator(data, args.batch)
@@ -295,10 +323,13 @@ def run_pipeline(args, cfg):
             b = next(it)
             batch = {"x": b["tokens"], "y": b["labels"]}
             params, opt_state, loss, gn = step_fn(params, opt_state, batch)
-            losses.append(float(loss))
+            losses.append(loss)   # device value; one sync after the loop
+            if train_san is not None:
+                train_san.check_step(step, loss=loss, gnorm=gn)
             if step % args.log_every == 0 or step == args.steps - 1:
-                print(f"[pipeline] step {step:5d} loss {float(loss):.4f} "
+                print(f"[pipeline] step {step:5d} loss {float(loss):.4f} "  # lint-ok: R3 log-gated (log_every cadence)
                       f"({time.time()-t0:.1f}s)", flush=True)
+    losses = [float(l) for l in losses]   # one deferred sync for the run
     wf = transport.split_comm_bytes(codec, mb, directions=1)
     wb = transport.split_comm_bytes(codec, mb) - wf
     print(f"[pipeline] channel: async_depth={args.async_depth}, per-microbatch "
@@ -350,6 +381,11 @@ def main():
                          "the adaptive controller), 'retransmit' NACKs "
                          "until complete and pays the wire bytes")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--sanitize", action="store_true",
+                    help="runtime sanitizer tier (repro.analysis.sanitize): "
+                         "jax_debug_nans, checkify float checks compiled "
+                         "into every step branch, per-step finite checks "
+                         "on loss/grad-norm; trades throughput for checks")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
     if args.pipeline and (args.fault_drop > 0.0 or args.fault_corrupt > 0.0):

@@ -236,7 +236,8 @@ def abstract_decode_cache(cfg: ModelConfig, batch: int, length: int,
 
 
 def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
-                codec=None, codec_params=None, paged=None, live=None):
+                codec=None, codec_params=None, paged=None, live=None,
+                return_cut=False):
     """tokens (B, 1) int32; pos scalar int32.  Returns (logits (B,1,V), cache').
 
     With a codec, the cut-layer feature (B, d_model) is compressed batch-wise
@@ -246,6 +247,13 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
     masks every cache/state write for rows that are not decoding AND zeroes
     their cut-layer contribution to the batch-wise codec, so a dead slot's
     stale cache state can never perturb live rows through cross-talk.
+
+    ``return_cut=True`` (static) additionally returns the (B, d_model)
+    cut-layer feature exactly as it enters ``codec.encode`` — the
+    post-live-mask tensor — so the sanitizer tier can check the
+    superposition-hygiene invariant (dead rows contribute exactly zero)
+    against the REAL code path rather than a reimplementation.  None on
+    the codec-free path, which has no cut.
     """
     h = params["embed"][tokens]
     memory = cache.get("memory")
@@ -253,6 +261,7 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
     kw = dict(memory=memory, paged=paged, pages=pages, pages_swa=pages_swa,
               live=live)
     new_cache = dict(cache)
+    cut = None
     if cfg.first_dense_layers:
         h, new_cache["first"] = stack_lib.apply_superblock_decode(
             params["first"], cache["first"], cfg, h, pos, **kw)
@@ -274,7 +283,8 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
             # batch-wise superposition: zero it so dead slots contribute
             # nothing and live outputs are a function of live state only.
             h = jnp.where(live[:, None, None], h, 0.0)
-        payload = codec.encode(codec_params, h.reshape(B, d))
+        cut = h.reshape(B, d)
+        payload = codec.encode(codec_params, cut)
         h = codec.decode(codec_params, payload).reshape(B, 1, d)
         h, nc_back = stack_lib.apply_stack_decode(p_back, c_back, cfg, h, pos,
                                                   **kw)
@@ -282,6 +292,8 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
             lambda f, b: jnp.concatenate([f, b], axis=0), nc_front, nc_back)
 
     h = _apply_norm(cfg, params["final_norm"], h)
+    if return_cut:
+        return h @ params["head"], new_cache, cut
     return h @ params["head"], new_cache
 
 

@@ -277,6 +277,9 @@ class BatchedEngine:
         self._adaptive = isinstance(self.codec, codecs_lib.AdaptiveC3SL)
         self.state = self._init_state()
         self._build_programs()
+        # opt-in runtime invariant checks (repro.analysis.sanitize); None
+        # in production — every check costs host syncs or extra dispatches
+        self._sanitizer = None
 
     # ------------------------------------------------------------------
     # compiled programs
@@ -555,6 +558,13 @@ class BatchedEngine:
         one layer's cache; see benchmarks/README.md)."""
         return sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache))
 
+    def attach_sanitizer(self, sanitizer) -> None:
+        """Install per-tick invariant checks (an object with an
+        ``on_tick(engine)`` method — see
+        :class:`repro.analysis.sanitize.EngineSanitizer`).  A violated
+        invariant raises out of tick()/run(); pass None to detach."""
+        self._sanitizer = sanitizer
+
     def run(self, max_steps: int = 10_000) -> list[Request]:
         if self.prefill_mode == "decode":
             return self._run_legacy(max_steps)
@@ -564,6 +574,8 @@ class BatchedEngine:
             if not (self.queue or self.active):
                 break
             steps += self._tick_body(max_steps - steps)
+            if self._sanitizer is not None:
+                self._sanitizer.on_tick(self)
         self._boundary()
         return self.finished
 
@@ -582,6 +594,10 @@ class BatchedEngine:
         if not (self.queue or self.active):
             return False
         self._tick_body(self.sync_every)
+        if self._sanitizer is not None:
+            # before the trailing boundary: done-but-unretired slots are
+            # still resident, so the dead/live cut probe sees the mix
+            self._sanitizer.on_tick(self)
         self._boundary()
         return True
 

@@ -1,0 +1,618 @@
+"""repro.analysis: lint rules R1-R5 (fixture positives + negatives),
+suppression, baseline diffing, self-application, and — behind the
+``sanitize`` marker — the runtime sanitizer tier (engine invariant
+checks, checkify wiring, front-door tick-error surfacing).
+
+The static half is pure-stdlib (ast) and fast; it runs under tier-1.
+The sanitize-marked half compiles real engine programs and is excluded
+from tier-1 timing (see conftest.py: set REPRO_SANITIZE=1 to run it, as
+the CI analysis-gate job does).
+"""
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (BASELINE_NAME, diff_against_baseline,
+                            lint_paths, lint_source, load_baseline,
+                            write_baseline)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def findings(source: str, rule: str):
+    report = lint_source(textwrap.dedent(source))
+    assert not report.errors, report.errors
+    return [f for f in report.findings if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# R1: recompile hazards
+# ---------------------------------------------------------------------------
+
+def test_r1_flags_jit_built_in_loop():
+    hits = findings("""
+        import jax
+        def train(steps, f):
+            for i in range(steps):
+                step = jax.jit(f)
+                step(i)
+    """, "R1")
+    assert len(hits) == 1 and "loop" in hits[0].message
+
+
+def test_r1_flags_immediately_invoked_jit_lambda():
+    hits = findings("""
+        import jax
+        def f(x):
+            return jax.jit(lambda y: y * 2)(x)
+    """, "R1")
+    assert len(hits) == 1 and "lambda" in hits[0].message
+
+
+def test_r1_clean_on_hoisted_jit_and_program_table():
+    assert findings("""
+        import jax
+        from repro import codecs
+
+        def make(codec, params):
+            def body(x):
+                return x
+            return jax.jit(body)
+
+        def build(codec, params):
+            table = codecs.build_program_table(codec, params, make)
+            step = jax.jit(lambda_free_fn)
+            for key in (2, 4):
+                table[key](key)          # dispatch in a loop is FINE
+            return table, step
+    """, "R1") == []
+
+
+def test_r1_clean_jit_in_loop_outside_function_scope_boundary():
+    # the loop is OUTSIDE the def: the wrapper is built once per loop
+    # iteration of the OUTER scope, not once per call of the inner fn
+    assert findings("""
+        import jax
+        def build(f):
+            return jax.jit(f)
+        for name in ("a", "b"):
+            pass
+    """, "R1") == []
+
+
+# ---------------------------------------------------------------------------
+# R2: use-after-donate
+# ---------------------------------------------------------------------------
+
+def test_r2_flags_read_after_donating_call():
+    hits = findings("""
+        import jax
+        step = jax.jit(body, donate_argnums=(0,))
+        def loop(cache, x):
+            out = step(cache, x)
+            return cache["k"]          # donated buffer read
+    """, "R2")
+    assert len(hits) == 1 and "donated" in hits[0].message
+
+
+def test_r2_clean_when_rebound_from_result():
+    assert findings("""
+        import jax
+        step = jax.jit(body, donate_argnums=(0,))
+        def loop(cache, x):
+            cache = step(cache, x)     # same-line rebind (engine idiom)
+            return cache["k"]
+    """, "R2") == []
+
+
+def test_r2_clean_without_donation():
+    assert findings("""
+        import jax
+        step = jax.jit(body)
+        def loop(cache, x):
+            out = step(cache, x)
+            return cache["k"]
+    """, "R2") == []
+
+
+def test_r2_donate_argnames_variant():
+    hits = findings("""
+        import jax
+        step = jax.jit(body, donate_argnames=("cache",))
+        def loop(cache, x):
+            out = step(x, cache=cache)
+            return cache
+    """, "R2")
+    assert len(hits) == 1
+
+
+# ---------------------------------------------------------------------------
+# R3: hidden host syncs
+# ---------------------------------------------------------------------------
+
+def test_r3_flags_item_inside_jitted_function():
+    hits = findings("""
+        import jax
+        @jax.jit
+        def step(x):
+            return x.item()
+    """, "R3")
+    assert len(hits) == 1 and ".item()" in hits[0].message
+
+
+def test_r3_flags_float_in_program_dispatch_loop():
+    hits = findings("""
+        import jax
+        from repro import transport
+        step_fns = transport.build_link_program_table(c, p, make)
+        def train(steps, params, batch):
+            losses = []
+            for step in range(steps):
+                params, loss = step_fns[key](params, batch)
+                losses.append(float(loss))
+            return losses
+    """, "R3")
+    assert len(hits) == 1 and "serializes dispatch" in hits[0].message
+
+
+def test_r3_flags_truthiness_on_traced_argument():
+    hits = findings("""
+        import jax
+        @jax.jit
+        def step(x):
+            if x:
+                return x
+            return -x
+    """, "R3")
+    assert len(hits) == 1 and "truthiness" in hits[0].message
+
+
+def test_r3_clean_float_outside_dispatch_loop():
+    assert findings("""
+        import jax
+        step = jax.jit(body)
+        def train(steps, params, batch):
+            losses = []
+            for i in range(steps):
+                params, loss = step(params, batch)
+                losses.append(loss)
+            return [float(l) for l in losses]   # one deferred sync
+    """, "R3") == []
+
+
+def test_r3_clean_float_in_plain_loop():
+    # no compiled program dispatched in the loop: host-side math is fine
+    assert findings("""
+        def accumulate(items):
+            total = 0.0
+            for x in items:
+                total += float(x)
+            return total
+    """, "R3") == []
+
+
+# ---------------------------------------------------------------------------
+# R4: codec accounting completeness
+# ---------------------------------------------------------------------------
+
+def test_r4_flags_transform_missing_accounting():
+    hits = findings("""
+        from repro.codecs.base import register
+        @register("broken")
+        class Broken:
+            def encode(self, params, x):
+                return x
+            def decode(self, params, y):
+                return y
+    """, "R4")
+    assert len(hits) == 1
+    for m in ("payload_shape", "wire_bytes", "flops"):
+        assert m in hits[0].message
+
+
+def test_r4_flags_wire_stage_missing_apply():
+    hits = findings("""
+        from repro.codecs.base import register
+        @register("w", kind="wire")
+        class W:
+            def wire_bytes(self, shape):
+                return 0
+            def flops(self, shape):
+                return 0
+    """, "R4")
+    assert len(hits) == 1 and "apply" in hits[0].message
+
+
+def test_r4_clean_full_surface():
+    assert findings("""
+        from repro.codecs.base import register
+        @register("ok")
+        class Ok:
+            def encode(self, params, x): return x
+            def decode(self, params, y): return y
+            def payload_shape(self, B): return (B,)
+            def wire_bytes(self, B): return 4 * B
+            def flops(self, B): return 0
+    """, "R4") == []
+
+
+def test_r4_ignores_unregistered_classes():
+    assert findings("""
+        class Helper:
+            def encode(self, x): return x
+    """, "R4") == []
+
+
+# ---------------------------------------------------------------------------
+# R5: asyncio race / hygiene
+# ---------------------------------------------------------------------------
+
+def test_r5a_flags_blocking_sleep_in_async_def():
+    hits = findings("""
+        import asyncio, time
+        async def handler():
+            time.sleep(1.0)
+    """, "R5")
+    assert len(hits) == 1 and "blocking" in hits[0].message
+
+
+def test_r5a_clean_asyncio_sleep():
+    assert findings("""
+        import asyncio
+        async def handler():
+            await asyncio.sleep(1.0)
+    """, "R5") == []
+
+
+def test_r5b_flags_dropped_create_task():
+    hits = findings("""
+        import asyncio
+        def spawn(coro):
+            asyncio.create_task(coro)
+    """, "R5")
+    assert len(hits) == 1 and "weak ref" in hits[0].message
+
+
+def test_r5b_clean_retained_task():
+    assert findings("""
+        import asyncio
+        def spawn(self, coro):
+            task = asyncio.create_task(coro)
+            self._tasks.add(task)
+            return task
+    """, "R5") == []
+
+
+def test_r5c_flags_swallowed_cancellation():
+    hits = findings("""
+        import asyncio
+        async def worker(task):
+            try:
+                await task
+            except asyncio.CancelledError:
+                pass
+    """, "R5")
+    assert len(hits) == 1 and "cancellation" in hits[0].message
+
+
+def test_r5c_clean_reraised_cancellation():
+    assert findings("""
+        import asyncio
+        async def worker(task):
+            try:
+                await task
+            except asyncio.CancelledError:
+                cleanup()
+                raise
+    """, "R5") == []
+
+
+def test_r5d_flags_mutation_while_iterating_across_await():
+    hits = findings("""
+        import asyncio
+        async def sweep(self):
+            for sid, sess in self.sessions.items():
+                await sess.flush()
+                self.sessions.pop(sid)
+    """, "R5")
+    assert len(hits) == 1 and "snapshot" in hits[0].message
+
+
+def test_r5d_clean_snapshot_iteration():
+    assert findings("""
+        import asyncio
+        async def sweep(self):
+            for sid, sess in list(self.sessions.items()):
+                await sess.flush()
+                self.sessions.pop(sid)
+    """, "R5") == []
+
+
+# ---------------------------------------------------------------------------
+# suppression + baseline
+# ---------------------------------------------------------------------------
+
+def test_inline_suppression_moves_finding_to_suppressed():
+    src = textwrap.dedent("""
+        import asyncio, time
+        async def handler():
+            time.sleep(1.0)  # lint-ok: R5 measured: sub-ms on this path
+    """)
+    report = lint_source(src)
+    assert report.findings == []
+    assert len(report.suppressed) == 1
+    assert report.suppressed[0].reason == "measured: sub-ms on this path"
+
+
+def test_suppression_is_rule_specific():
+    src = textwrap.dedent("""
+        import asyncio, time
+        async def handler():
+            time.sleep(1.0)  # lint-ok: R3 wrong rule id
+    """)
+    report = lint_source(src)
+    assert len(report.findings) == 1     # R5 still fires
+
+
+def test_suppression_multiple_rules_one_comment():
+    src = textwrap.dedent("""
+        import asyncio, time
+        async def handler():
+            time.sleep(1.0)  # lint-ok: R3, R5 both quiet
+    """)
+    assert lint_source(src).findings == []
+
+
+def test_baseline_roundtrip_and_diffing(tmp_path):
+    src = textwrap.dedent("""
+        import asyncio
+        def spawn(coro):
+            asyncio.create_task(coro)
+    """)
+    report = lint_source(src, path="pkg/mod.py")
+    assert len(report.findings) == 1
+    bl = tmp_path / BASELINE_NAME
+    write_baseline(report, bl)
+
+    # identical findings: nothing new, nothing fixed
+    new, fixed = diff_against_baseline(report, load_baseline(bl))
+    assert new == [] and not fixed
+
+    # the finding moved lines (edits above it): fingerprint still matches
+    moved = lint_source("\n\n\n" + src, path="pkg/mod.py")
+    new, fixed = diff_against_baseline(moved, load_baseline(bl))
+    assert new == [] and not fixed
+
+    # a NEW violation of the same rule elsewhere is new
+    grown = lint_source(src + textwrap.dedent("""
+        def spawn2(coro):
+            asyncio.ensure_future(coro)
+    """), path="pkg/mod.py")
+    new, _ = diff_against_baseline(grown, load_baseline(bl))
+    assert len(new) == 1 and "ensure_future" in new[0].code
+
+    # the violation got fixed: the baseline reports it as stale
+    clean = lint_source("x = 1\n", path="pkg/mod.py")
+    new, fixed = diff_against_baseline(clean, load_baseline(bl))
+    assert new == [] and sum(fixed.values()) == 1
+
+
+def test_syntax_error_is_reported_not_crashed():
+    report = lint_source("def broken(:\n")
+    assert report.errors and report.findings == []
+
+
+# ---------------------------------------------------------------------------
+# self-application: the shipped tree is clean vs the committed baseline
+# ---------------------------------------------------------------------------
+
+def test_src_tree_is_clean_against_committed_baseline():
+    report = lint_paths([REPO_ROOT / "src"], root=REPO_ROOT)
+    assert not report.errors, report.errors
+    baseline = load_baseline(REPO_ROOT / BASELINE_NAME)
+    new, _ = diff_against_baseline(report, baseline)
+    assert new == [], "new lint findings vs baseline:\n" + "\n".join(
+        str(f) for f in new)
+
+
+def test_committed_baseline_has_no_grandfathered_findings():
+    # the shipped baseline is EMPTY by policy: fix or suppress, never
+    # grandfather (suppressions are recorded separately, with rationale)
+    assert sum(load_baseline(REPO_ROOT / BASELINE_NAME).values()) == 0
+
+
+def test_cli_check_gate_passes_on_src():
+    from repro.analysis.__main__ import main
+    assert main(["--check", str(REPO_ROOT / "src")]) == 0
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizers (sanitize-marked: excluded from tier-1 timing)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_engine_factory():
+    import jax
+    from repro.configs.base import get_config, reduced
+    from repro.models import lm as lm_lib
+    from repro.serving.engine import BatchedEngine
+
+    cfg = reduced(get_config("deepseek-7b"), num_layers=2, d_model=128,
+                  d_ff=256, vocab_size=256, num_heads=4, num_kv_heads=2,
+                  head_dim=32)
+    params = lm_lib.init_lm_params(jax.random.PRNGKey(0), cfg)
+
+    def build(**kw):
+        kw.setdefault("num_slots", 4)
+        kw.setdefault("max_len", 64)
+        kw.setdefault("codec", "c3sl:R=2|int8")
+        kw.setdefault("kv_layout", "paged")
+        kw.setdefault("page_size", 8)
+        kw.setdefault("num_pages", 32)
+        kw.setdefault("sync_every", 2)
+        kw.setdefault("preemption", True)
+        return BatchedEngine(params, cfg, greedy=True, seed=0, **kw)
+
+    return build
+
+
+@pytest.mark.sanitize
+def test_engine_sanitizer_clean_run_exercises_all_checks(
+        tiny_engine_factory):
+    from repro.analysis.sanitize import EngineSanitizer
+    from repro.serving.engine import Request
+    eng = tiny_engine_factory()
+    san = EngineSanitizer(eng)
+    eng.attach_sanitizer(san)
+    # staggered lengths on 3 of 4 slots: ticks see a dead/live mix, so
+    # the cut probe actually runs (not just the cheap host checks)
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=[1 + i, 2, 3, 4],
+                           max_new_tokens=4 + 4 * i))
+    done = eng.run()
+    assert len(done) == 3
+    assert san.counts["pool"] > 0
+    assert san.counts["slot_state"] > 0
+    assert san.counts["cut_zeroing"] > 0, (
+        "live-slot-zeroing invariant never exercised", san.counts)
+
+
+@pytest.mark.sanitize
+def test_engine_sanitizer_trips_on_dirty_empty_slot(tiny_engine_factory):
+    from repro.analysis.sanitize import EngineSanitizer, SanitizerError
+    from repro.serving.engine import Request
+    eng = tiny_engine_factory()
+    san = EngineSanitizer(eng)
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=2))
+    eng.run()
+    # emulate a broken retire: device state says an empty slot is active
+    eng.state["active"] = eng.state["active"].at[1].set(True)
+    with pytest.raises(SanitizerError, match="not inert"):
+        san.check_slot_state(eng)
+
+
+@pytest.mark.sanitize
+def test_engine_sanitizer_trips_on_pool_leak(tiny_engine_factory):
+    from repro.analysis.sanitize import EngineSanitizer, SanitizerError
+    eng = tiny_engine_factory()
+    san = EngineSanitizer(eng)
+
+    class LeakyAllocator:
+        free_pages = 1               # pages vanished: free+in_use < total
+
+    eng.allocator = LeakyAllocator()
+    with pytest.raises(SanitizerError, match="accounting"):
+        san.check_pool(eng)
+
+
+@pytest.mark.sanitize
+def test_cut_zeroing_check_detects_unmasked_encode(tiny_engine_factory):
+    """The negative control for the PR 7 invariant: a probe built WITHOUT
+    the live mask (the pre-fix code path) must report nonzero dead-row
+    contribution on a half-occupied batch — proving the check would have
+    caught the original bug, and still guards the fixed path."""
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.sanitize import EngineSanitizer, SanitizerError
+    from repro.models import lm as lm_lib
+    from repro.serving.engine import Request
+
+    eng = tiny_engine_factory()
+    san = EngineSanitizer(eng)
+    eng.attach_sanitizer(san)
+    eng.submit(Request(uid=0, prompt=[1, 2, 3, 4], max_new_tokens=8))
+    eng.submit(Request(uid=1, prompt=[5, 6, 7, 8], max_new_tokens=8))
+    eng.tick(); eng.tick()           # rows mid-decode, 2 of 4 slots live
+    live = eng.state["active"] & ~eng.state["done"]
+    assert 0 < int(jnp.sum(live)) < eng.num_slots
+
+    cfg, paged = eng.cfg, eng.paged
+
+    def unmasked_probe(params, cache, state):
+        liv = state["active"] & ~state["done"]
+        # live=None reproduces the pre-PR7 encode: no zeroing of dead rows
+        _, _, cut = lm_lib.decode_step(
+            params, cache, state["last_tok"][:, None], state["pos"], cfg,
+            codec=eng.codec, codec_params=eng.codec_params, paged=paged,
+            live=None, return_cut=True)
+        dead = (~liv).astype(cut.dtype)[:, None]
+        return jnp.sum(jnp.abs(cut) * dead), liv.sum()
+
+    san._probes = {None: jax.jit(unmasked_probe)}
+    with pytest.raises(SanitizerError, match="live-slot zeroing"):
+        san.check_cut_zeroing(eng)
+    # and the REAL path passes the same check on the same state
+    fixed = EngineSanitizer(eng)
+    fixed.check_cut_zeroing(eng)
+    assert fixed.counts["cut_zeroing"] == 1
+
+
+@pytest.mark.sanitize
+def test_checkify_jit_catches_nonfinite():
+    import jax.numpy as jnp
+    from jax.experimental import checkify
+    from repro.analysis.sanitize import checkify_jit
+
+    def bad(x):
+        return jnp.log(x)            # log(-1) -> nan under float_checks
+
+    fn = checkify_jit(bad)
+    assert float(fn(jnp.float32(1.0))) == 0.0
+    with pytest.raises(checkify.JaxRuntimeError):
+        fn(jnp.float32(-1.0))
+
+
+@pytest.mark.sanitize
+def test_train_sanitizer_trips_on_nan():
+    from repro.analysis.sanitize import SanitizerError, TrainSanitizer
+    ts = TrainSanitizer()
+    ts.check_step(0, loss=1.25, gnorm=0.5)
+    assert ts.steps_checked == 1
+    with pytest.raises(SanitizerError, match="loss"):
+        ts.check_step(1, loss=float("nan"), gnorm=0.5)
+
+
+@pytest.mark.sanitize
+def test_frontdoor_surfaces_tick_loop_crash(tiny_engine_factory):
+    """PR 7-class latent bug, now fixed: an engine exception inside the
+    auto-tick loop used to kill the task silently and hang every tenant.
+    It must now cancel the connections (clients fail fast) and surface
+    the original exception through server.stop()."""
+    import asyncio
+    from repro.analysis.sanitize import SanitizerError
+    from repro.frontdoor import (AdmissionController, FrontDoorClient,
+                                 FrontDoorServer, TenantPolicy)
+
+    eng = tiny_engine_factory()
+
+    class TrippingSanitizer:
+        def on_tick(self, engine):
+            raise SanitizerError("injected invariant trip")
+
+    eng.attach_sanitizer(TrippingSanitizer())
+    server = FrontDoorServer(
+        eng, admission=AdmissionController(
+            max_queue_depth=8, default_policy=TenantPolicy(max_inflight=2)))
+
+    async def go():
+        host, port = await server.start()
+        client = await FrontDoorClient.open(host, port, tenant="t",
+                                            codec="c3sl:R=2|int8")
+        try:
+            with pytest.raises(Exception):
+                # the submit admits work -> the next tick trips -> the
+                # conn task is cancelled -> the pending call fails fast
+                # instead of hanging forever
+                await asyncio.wait_for(
+                    client.generate([1, 2, 3], max_new=4), timeout=30)
+        finally:
+            try:
+                await client.close()
+            except Exception:
+                pass
+        assert isinstance(server.tick_error, SanitizerError)
+        with pytest.raises(SanitizerError, match="injected"):
+            await server.stop()
+
+    asyncio.run(go())
