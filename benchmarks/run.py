@@ -28,6 +28,8 @@ def main() -> None:
         ("codec_latency", bench_codec_latency.main),
         # --fast runs the smoke variant (seconds); both write BENCH_serving.json
         ("serving_throughput", lambda: bench_serving.main(smoke=args.fast)),
+        # backend + paged-read sweeps; both write BENCH_roofline.json
+        ("roofline_sweeps", lambda: bench_roofline.main(smoke=args.fast)),
     ]
     for name, fn in sections:
         print(f"\n==== {name} ====", flush=True)
@@ -37,7 +39,7 @@ def main() -> None:
 
     print("\n==== roofline (from dry-run artifacts, if present) ====", flush=True)
     try:
-        bench_roofline.main()
+        bench_roofline.aggregate()
     except Exception as e:  # dry-run artifacts may not exist yet
         print(f"# roofline aggregation skipped: {e}")
 

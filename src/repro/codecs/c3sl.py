@@ -89,6 +89,22 @@ class C3SLCodec(SpecMixin):
         G, R, D = Zhat.shape
         return Zhat.reshape(*payload.shape[:-2], payload.shape[-2] * R, D)
 
+    def execution_mode(self) -> str:
+        """How this codec's HRR ops ACTUALLY execute on this host — unlike
+        ``spec()`` (the canonical registry string, which must round-trip
+        through ``build`` and so never changes per-host): ``"fft"`` /
+        ``"direct"`` for the jnp backends, ``"pallas-compiled"`` on a real
+        TPU, ``"pallas-interpret"`` when the kernel is CPU-emulated, and
+        ``"fft-fallback"`` when a non-MXU-alignable D reroutes the pallas
+        request (repro.core.hrr).  Benchmarks must record this tag —
+        bench_roofline refuses interpret-mode rows labeled as kernels."""
+        if self.backend != "pallas":
+            return self.backend
+        from repro.kernels import circconv
+        if not circconv.mxu_alignable(self.D):
+            return "fft-fallback"
+        return circconv.execution_mode()
+
     def param_count(self) -> int:
         return self.R * self.D  # paper Table 2
 

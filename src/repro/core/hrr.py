@@ -16,9 +16,27 @@ in stop_gradient.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
+
+
+def _pallas_usable(D: int, op: str) -> bool:
+    """Gate for ``backend="pallas"``: the Toeplitz-tiled kernel needs an
+    MXU-alignable D (see repro.kernels.circconv.mxu_alignable).  For a
+    prime/odd D the tile degrades to 1 and the kernel would be slower than
+    the direct path — route to the fft backend instead, LOUDLY (a silent
+    reroute would let benchmark rows masquerade as kernel numbers)."""
+    from repro.kernels import circconv
+    if circconv.mxu_alignable(D):
+        return True
+    warnings.warn(
+        f"backend='pallas' {op}: D={D} is not MXU-alignable "
+        f"(largest tile <= 128 is {circconv._pick_tile(D)}); falling back "
+        f"to the fft backend.  Codec.execution_mode() reports "
+        f"'fft-fallback' for this configuration.", stacklevel=3)
+    return False
 
 
 def generate_keys(rng: jax.Array, R: int, D: int, dtype=jnp.float32,
@@ -192,8 +210,10 @@ def bind_superpose(Z: jax.Array, K: jax.Array, backend: str = "fft",
     """
     K = jax.lax.stop_gradient(K)
     if backend == "pallas":
-        from repro.kernels import ops as kops
-        return kops.bind_superpose_pallas(Z, K)
+        if _pallas_usable(Z.shape[-1], "bind_superpose"):
+            from repro.kernels import ops as kops
+            return kops.bind_superpose_pallas(Z, K)
+        backend = "fft"
     if K_fft is not None and backend == "fft":
         K_fft = jax.lax.stop_gradient(K_fft)
     else:
@@ -209,8 +229,10 @@ def unbind(S: jax.Array, K: jax.Array, backend: str = "fft",
     """
     K = jax.lax.stop_gradient(K)
     if backend == "pallas":
-        from repro.kernels import ops as kops
-        return kops.unbind_pallas(S, K)
+        if _pallas_usable(S.shape[-1], "unbind"):
+            from repro.kernels import ops as kops
+            return kops.unbind_pallas(S, K)
+        backend = "fft"
     if K_fft is not None and backend == "fft":
         K_fft = jax.lax.stop_gradient(K_fft)
     else:

@@ -34,6 +34,31 @@ def _pick_tile(D: int, target: int = 128) -> int:
     return t
 
 
+# The smallest tile the MXU/VPU lanes amortize: below this the Toeplitz
+# grid degrades toward (G, D, D) single-element "contractions" — slower
+# than the direct backend and liable to blow the grid-size limit for a
+# prime D (tile 1 -> D^2 grid steps).
+MIN_TILE = 8
+
+
+def mxu_alignable(D: int, target: int = 128) -> bool:
+    """Whether the Toeplitz tiling has a usable tile for this D: the
+    largest divisor <= target must itself be lane-aligned (multiple of
+    MIN_TILE).  False for prime/odd D like 4097 (largest divisor 17)."""
+    return _pick_tile(D, target) % MIN_TILE == 0
+
+
+def _check_tile(D: int, T: int):
+    if T % MIN_TILE:
+        raise ValueError(
+            f"D={D} is not MXU-alignable: its largest tile <= 128 is {T}, "
+            f"so the Toeplitz-tiled pallas backend would degrade to "
+            f"{T}x{T} contractions over a (G, {D // T}, {D // T}) grid — "
+            f"slower than backend='direct' and liable to blow the grid "
+            f"limit.  Use backend='fft' (O(D log D), any D), or pad D to "
+            f"a multiple of {MIN_TILE * MIN_TILE}.")
+
+
 def _window_indices(T: int):
     ia = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)  # tile-local j (rows)
     ib = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)  # tile-local d (cols)
@@ -91,12 +116,27 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def interpret_mode() -> bool:
+    """True when pallas_call runs the kernels in INTERPRET mode (any
+    non-TPU backend): the math is the kernel's, the speed is not."""
+    return _interpret()
+
+
+def execution_mode() -> str:
+    """How a ``backend=pallas`` request actually executes here:
+    ``"pallas-compiled"`` (real Mosaic kernels) or ``"pallas-interpret"``
+    (CPU emulation — honest benchmarks must tag rows with this; see
+    benchmarks/bench_roofline.py)."""
+    return "pallas-interpret" if _interpret() else "pallas-compiled"
+
+
 @functools.partial(jax.jit, static_argnames=("tile",))
 def bind_superpose_kernel(Z: jax.Array, Kext: jax.Array, tile: int | None = None) -> jax.Array:
     """Z (G, R, D), Kext (R, 2D) -> S (G, D).  Requires divisible tiles."""
     G, R, D = Z.shape
     assert Kext.shape == (R, 2 * D), (Kext.shape, (R, 2 * D))
     T = tile or _pick_tile(D)
+    _check_tile(D, T)
     GT = _pick_tile(G, 8)
     grid = (G // GT, D // T, D // T)
     kernel = functools.partial(_bind_kernel, T=T, R=R, D=D)
@@ -120,6 +160,7 @@ def unbind_kernel(S: jax.Array, Kext: jax.Array, tile: int | None = None) -> jax
     R = Kext.shape[0]
     assert Kext.shape == (R, 2 * D)
     T = tile or _pick_tile(D)
+    _check_tile(D, T)
     GT = _pick_tile(G, 8)
     grid = (G // GT, D // T, D // T)
     kernel = functools.partial(_unbind_kernel, T=T, R=R, D=D)

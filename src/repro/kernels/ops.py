@@ -56,3 +56,33 @@ def _unbind_bwd(K, dZhat):
 
 
 unbind_pallas.defvjp(_unbind_fwd, _unbind_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Paged-attention decode (repro.kernels.paged_attention)
+# ---------------------------------------------------------------------------
+
+def paged_attention_decode(q, cache, table, pos, *, length: int,
+                           sliding_window=None, compute_dtype=None,
+                           interpret=None):
+    """Decode-step attention over paged KV pools, page-table walk in-kernel.
+
+    ``q`` (B, 1, H, hd) post-rope; ``cache`` the attn sublayer's pool dict
+    ({"k", "v"} float pools, plus {"k_scale", "v_scale"} when int8-
+    quantized); ``table`` (B, P) int32 page table; ``pos`` (B,) int32
+    per-slot positions.  Returns (B, 1, H*hd), bit-identical to
+    ``_sdpa[_quant]`` over ``gather_pages`` of the same pools.
+
+    Inference-only (no custom VJP): decode never differentiates through
+    the cache read.  Quantized vs float dispatch mirrors
+    ``apply_gqa_decode``'s ``"k_scale" in cache`` seam.
+    """
+    from repro.kernels import paged_attention as pa
+    if "k_scale" in cache:
+        return pa.paged_attention_quant(
+            q, cache["k"], cache["k_scale"], cache["v"], cache["v_scale"],
+            table, pos, length=length, sliding_window=sliding_window,
+            compute_dtype=compute_dtype, interpret=interpret)
+    return pa.paged_attention(q, cache["k"], cache["v"], table, pos,
+                              length=length, sliding_window=sliding_window,
+                              interpret=interpret)

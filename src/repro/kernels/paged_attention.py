@@ -1,0 +1,210 @@
+"""Pallas paged-attention decode kernel: page-table walk INSIDE the kernel.
+
+The gather path (``repro.models.paging.gather_pages``) re-materializes a
+contiguous ``(B, T, KV, hd)`` view of the page pools on every decode step —
+one full pool read plus a same-size write and re-read per cache leaf, the
+materialization tax ROADMAP names as the biggest raw-speed lever left in
+the repo.  This kernel walks the per-slot page table with
+``PrefetchScalarGridSpec`` instead: grid ``(B, P)``, and the block index
+map of each pool operand is ``table[b, p]`` — the pages stream
+HBM -> VMEM directly in page-table order, and the contiguous view never
+exists (vLLM's PagedAttention, expressed in Pallas).
+
+Bit-identical equivalence with the gather path is the design constraint
+(the serving suite pins greedy outputs, not tolerances), so the reduction
+is NOT a flash-style online softmax: once a slot's pages sit in VMEM
+scratch, the kernel runs the literal op sequence of
+``repro.models.attention._sdpa`` / ``_sdpa_quant`` — same einsum strings
+with B=1/Sq=1 singleton axes, same f32 casts, same ``hd ** -0.5``
+placement, same ``NEG_INF`` masking, same ``jax.nn.softmax`` — on the
+same values the gathered view would hold.  Decode-step VMEM comfortably
+fits the whole per-slot K/V strip (see kernels/README.md for the budget),
+so tiling the T axis buys nothing at these shapes and would cost the
+bitwise guarantee.
+
+Coverage: GQA/MHA decode (linear caches and ring-buffer SWA) with float
+or int8-quantized KV pools.  MLA latent caches and prefill stay on the
+gather path — the serving engine falls back LOUDLY (see
+``BatchedEngine(kv_read=...)``), never silently.
+
+Like the circconv kernels, this runs in interpret mode off-TPU
+(``circconv._interpret``); callers surface the effective execution mode
+instead of pretending interpret numbers are kernel numbers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.circconv import _interpret
+
+# Must match repro.models.attention.NEG_INF or masked scores differ bitwise.
+NEG_INF = -1e30
+
+
+def _decode_mask(pos_b, T: int, sliding_window):
+    """The (1, 1, 1, T) decode validity mask for one slot — the literal
+    mask math of ``apply_gqa_decode`` at B=1 (linear: written positions;
+    ring: the last min(pos+1, T) writes)."""
+    idx = jnp.arange(T)[None, :]
+    if sliding_window is not None:
+        slots = pos_b % T
+        age = (slots[:, None] - idx) % T
+        valid = age < jnp.minimum(pos_b + 1, T)[:, None]
+    else:
+        valid = idx <= pos_b[:, None]
+    return valid[:, None, None, :]
+
+
+def _attn_kernel(table_ref, pos_ref, q_ref, k_pool_ref, v_pool_ref, out_ref,
+                 k_acc, v_acc, *, T: int, ps: int, P: int, H: int, KV: int,
+                 hd: int, sliding_window):
+    """Float-KV body.  Grid (B, P): step (b, p) lands page table[b, p] in
+    VMEM via the block index map and appends it to the slot's scratch
+    strip; the last page step runs the full ``_sdpa`` op sequence."""
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    k_acc[pl.ds(p * ps, ps)] = k_pool_ref[0]
+    v_acc[pl.ds(p * ps, ps)] = v_pool_ref[0]
+
+    @pl.when(p == P - 1)
+    def _compute():
+        q = q_ref[...].reshape(1, 1, H, hd)
+        k = k_acc[...][:T][None]                       # (1, T, KV, hd)
+        v = v_acc[...][:T][None]
+        pos_b = pos_ref[b][None]
+        mask = _decode_mask(pos_b, T, sliding_window)
+        groups = H // KV
+        qg = q.reshape(1, 1, KV, groups, hd)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+        scores = scores * (hd ** -0.5)
+        scores = jnp.where(mask[:, :, None, :, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+        out_ref[0] = out.reshape(H * hd)
+
+
+def _attn_kernel_quant(table_ref, pos_ref, q_ref, k_pool_ref, ks_pool_ref,
+                       v_pool_ref, vs_pool_ref, out_ref, k_acc, ks_acc,
+                       v_acc, vs_acc, *, T: int, ps: int, P: int, H: int,
+                       KV: int, hd: int, sliding_window, compute_dtype):
+    """int8-KV body: pages stream as int8 + per-(pos, kv-head) scales, and
+    the compute step is the literal ``_sdpa_quant`` sequence (scales folded
+    into scores/probs; the dequantized cache is never materialized)."""
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    k_acc[pl.ds(p * ps, ps)] = k_pool_ref[0]
+    v_acc[pl.ds(p * ps, ps)] = v_pool_ref[0]
+    ks_acc[pl.ds(p * ps, ps)] = ks_pool_ref[0]
+    vs_acc[pl.ds(p * ps, ps)] = vs_pool_ref[0]
+
+    @pl.when(p == P - 1)
+    def _compute():
+        q = q_ref[...].reshape(1, 1, H, hd)
+        k_q = k_acc[...][:T][None]
+        v_q = v_acc[...][:T][None]
+        k_scale = ks_acc[...][:T][None]                # (1, T, KV, 1)
+        v_scale = vs_acc[...][:T][None]
+        pos_b = pos_ref[b][None]
+        mask = _decode_mask(pos_b, T, sliding_window)
+        groups = H // KV
+        qg = q.reshape(1, 1, KV, groups, hd)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                            k_q.astype(jnp.float32))
+        scores = scores * k_scale[:, :, :, 0].transpose(0, 2, 1)[:, :, None, None, :]
+        scores = scores * (hd ** -0.5)
+        scores = jnp.where(mask[:, :, None, :, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        probs = probs * v_scale[:, :, :, 0].transpose(0, 2, 1)[:, :, None, None, :]
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_q.astype(jnp.float32))
+        out_ref[0] = out.reshape(H * hd).astype(compute_dtype)
+
+
+def _check_geometry(q, pool, table, length):
+    B, Sq, H, hd = q.shape
+    if Sq != 1:
+        raise ValueError(f"decode kernel takes one query token, got Sq={Sq}")
+    P = table.shape[1]
+    ps, KV = pool.shape[1], pool.shape[2]
+    if table.shape[0] != B:
+        raise ValueError(f"page table batch {table.shape[0]} != query batch {B}")
+    if length > P * ps:
+        raise ValueError(f"length {length} exceeds table capacity {P}x{ps}")
+    if H % KV:
+        raise ValueError(f"H={H} not a multiple of KV={KV}")
+    return B, H, hd, P, ps, KV
+
+
+def paged_attention(q, k_pool, v_pool, table, pos, *, length: int,
+                    sliding_window=None, interpret=None):
+    """q (B, 1, H, hd) post-rope; k/v pools (num_pages, ps, KV, hd); table
+    (B, P) int32; pos (B,) int32.  Returns the (B, 1, H*hd) attention
+    output — bit-identical to ``_sdpa(q, *gather_pages(...), mask)``."""
+    B, H, hd, P, ps, KV = _check_geometry(q, k_pool, table, length)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, H * hd), lambda b, p, tab, pos: (b, 0)),
+            pl.BlockSpec((1, ps, KV, hd),
+                         lambda b, p, tab, pos: (tab[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, ps, KV, hd),
+                         lambda b, p, tab, pos: (tab[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H * hd), lambda b, p, tab, pos: (b, 0)),
+        scratch_shapes=[pltpu.VMEM((P * ps, KV, hd), k_pool.dtype),
+                        pltpu.VMEM((P * ps, KV, hd), v_pool.dtype)],
+    )
+    kernel = functools.partial(_attn_kernel, T=length, ps=ps, P=P, H=H,
+                               KV=KV, hd=hd, sliding_window=sliding_window)
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H * hd), q.dtype),
+        interpret=_interpret() if interpret is None else interpret,
+    )(table.astype(jnp.int32), pos.astype(jnp.int32),
+      q.reshape(B, H * hd), k_pool, v_pool)
+    return out.reshape(B, 1, H * hd)
+
+
+def paged_attention_quant(q, k_pool, k_scale_pool, v_pool, v_scale_pool,
+                          table, pos, *, length: int, sliding_window=None,
+                          compute_dtype=None, interpret=None):
+    """int8-KV variant: scale pools (num_pages, ps, KV, 1) ride the same
+    page table.  Bit-identical to ``_sdpa_quant`` over the gathered view."""
+    B, H, hd, P, ps, KV = _check_geometry(q, k_pool, table, length)
+    compute_dtype = compute_dtype or q.dtype
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, H * hd), lambda b, p, tab, pos: (b, 0)),
+            pl.BlockSpec((1, ps, KV, hd),
+                         lambda b, p, tab, pos: (tab[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, ps, KV, 1),
+                         lambda b, p, tab, pos: (tab[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, ps, KV, hd),
+                         lambda b, p, tab, pos: (tab[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, ps, KV, 1),
+                         lambda b, p, tab, pos: (tab[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H * hd), lambda b, p, tab, pos: (b, 0)),
+        scratch_shapes=[pltpu.VMEM((P * ps, KV, hd), k_pool.dtype),
+                        pltpu.VMEM((P * ps, KV, 1), k_scale_pool.dtype),
+                        pltpu.VMEM((P * ps, KV, hd), v_pool.dtype),
+                        pltpu.VMEM((P * ps, KV, 1), v_scale_pool.dtype)],
+    )
+    kernel = functools.partial(_attn_kernel_quant, T=length, ps=ps, P=P,
+                               H=H, KV=KV, hd=hd,
+                               sliding_window=sliding_window,
+                               compute_dtype=compute_dtype)
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H * hd), compute_dtype),
+        interpret=_interpret() if interpret is None else interpret,
+    )(table.astype(jnp.int32), pos.astype(jnp.int32),
+      q.reshape(B, H * hd), k_pool, k_scale_pool, v_pool, v_scale_pool)
+    return out.reshape(B, 1, H * hd)

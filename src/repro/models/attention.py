@@ -15,6 +15,9 @@ Every decode/prefill function supports two cache layouts:
   Reads gather the pool into the exact contiguous (B, T, ...) view
   (repro.models.paging.gather_pages) so masks and SDPA are the same code
   on both layouts — that is what keeps paged outputs bit-identical.
+  GQA decode additionally takes ``kv_read="kernel"``: the Pallas
+  paged-attention kernel walks the page table in-kernel (no contiguous
+  gather) while reproducing the gather path's values bit-for-bit.
 
 Decode functions also take ``live`` (B,) bool: rows marked False write
 NOTHING to the cache (the serving engine decodes while other slots are
@@ -234,7 +237,7 @@ def _view(cache, pages, T):
 
 def apply_gqa_decode(p, x, cache, pos, *, num_heads, num_kv_heads, head_dim,
                      rotary_dim, rope_theta=10000.0, sliding_window=None,
-                     pages=None, length=None, live=None):
+                     pages=None, length=None, live=None, kv_read="gather"):
     """One-token decode. x (B,1,D); cache k/v (B,T,KV,hd) (T=window for SWA),
     or pooled (num_pages, ps, KV, hd) when ``pages`` is given.
 
@@ -242,9 +245,23 @@ def apply_gqa_decode(p, x, cache, pos, *, num_heads, num_kv_heads, head_dim,
     every slot at its own position).  ``live`` (B,) masks cache writes (a
     non-live row attends garbage the caller must ignore but writes nothing).
     Returns (y (B,1,D), new_cache).
+
+    ``kv_read`` selects how a PAGED cache is read: ``"gather"``
+    materializes the contiguous view (paging.gather_pages) and reuses the
+    contiguous SDPA; ``"kernel"`` walks the page table inside the Pallas
+    paged-attention kernel (repro.kernels.paged_attention) — no contiguous
+    gather, bit-identical outputs by construction (the kernel runs the
+    literal _sdpa/_sdpa_quant op sequence on the same values).
     """
     B = x.shape[0]
     paged = pages is not None
+    if kv_read not in ("gather", "kernel"):
+        raise ValueError(f"unknown kv_read {kv_read!r} "
+                         "(expected 'gather' | 'kernel')")
+    if kv_read == "kernel" and not paged:
+        raise ValueError("kv_read='kernel' requires the paged cache layout "
+                         "(the kernel is a page-table walk; contiguous "
+                         "caches have no table to walk)")
     T = length if paged else cache["k"].shape[1]
     q, k, v = _qkv(p, x, num_heads, num_kv_heads, head_dim)
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
@@ -260,6 +277,15 @@ def apply_gqa_decode(p, x, cache, pos, *, num_heads, num_kv_heads, head_dim,
     else:
         new = {"k": k, "v": v}
     new_cache = _write_rows(cache, new, slots, T, pages=pages, live=live)
+    if kv_read == "kernel":
+        # in-kernel page-table walk: reads the SAME post-write pools the
+        # gather path would view, applies the same mask math in-kernel
+        from repro.kernels import ops as kops
+        att = kops.paged_attention_decode(q, new_cache, pages, pos_b,
+                                          length=T,
+                                          sliding_window=sliding_window,
+                                          compute_dtype=x.dtype)
+        return att @ p["w_o"], new_cache
     view = _view(new_cache, pages, T)
     idx = jnp.arange(T)[None, :]
     if sliding_window is not None:

@@ -237,7 +237,7 @@ def abstract_decode_cache(cfg: ModelConfig, batch: int, length: int,
 
 def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
                 codec=None, codec_params=None, paged=None, live=None,
-                return_cut=False):
+                return_cut=False, kv_read="gather"):
     """tokens (B, 1) int32; pos scalar int32.  Returns (logits (B,1,V), cache').
 
     With a codec, the cut-layer feature (B, d_model) is compressed batch-wise
@@ -254,6 +254,12 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
     superposition-hygiene invariant (dead rows contribute exactly zero)
     against the REAL code path rather than a reimplementation.  None on
     the codec-free path, which has no cut.
+
+    ``kv_read="kernel"`` (static) routes the stacked superblocks' GQA cache
+    reads through the Pallas paged-attention kernel (bit-identical to the
+    gather read — see repro.kernels.paged_attention).  The unstacked
+    first-dense superblock stays on the gather read: its cache is a
+    separate, non-scanned pytree the kernel tier does not cover yet.
     """
     h = params["embed"][tokens]
     memory = cache.get("memory")
@@ -268,13 +274,14 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
 
     if codec is None:
         h, new_cache["stack"] = stack_lib.apply_stack_decode(
-            params["stack"], cache["stack"], cfg, h, pos, **kw)
+            params["stack"], cache["stack"], cfg, h, pos, kv_read=kv_read,
+            **kw)
     else:
         n_cut = cfg.num_superblocks // 2
         p_front, p_back = _split_stacked(params["stack"], n_cut)
         c_front, c_back = _split_stacked(cache["stack"], n_cut)
         h, nc_front = stack_lib.apply_stack_decode(p_front, c_front, cfg, h, pos,
-                                                   **kw)
+                                                   kv_read=kv_read, **kw)
         B, _, d = h.shape
         if live is not None:
             # A non-live row's cut-layer feature is attention over whatever
@@ -287,7 +294,7 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
         payload = codec.encode(codec_params, cut)
         h = codec.decode(codec_params, payload).reshape(B, 1, d)
         h, nc_back = stack_lib.apply_stack_decode(p_back, c_back, cfg, h, pos,
-                                                  **kw)
+                                                  kv_read=kv_read, **kw)
         new_cache["stack"] = jax.tree.map(
             lambda f, b: jnp.concatenate([f, b], axis=0), nc_front, nc_back)
 

@@ -84,6 +84,22 @@ def gather_pages(pool, table, length: int):
     unchanged.  Logical pages past a slot's allocation read whatever page
     their table entry names (0 when unallocated); callers mask those
     positions exactly like the contiguous path masks unwritten ones.
+
+    Trailing-page semantics (audited; the kernel read path reproduces
+    them exactly): ``length`` is NOT required to be a page multiple.  The
+    last page a slot uses is always read IN FULL and then sliced —
+    ``length % ps != 0`` means positions in ``[length - length % ps,
+    length)`` come from a page whose tail entries (``>= length % ps``)
+    are cut off by the ``[:, :length]`` slice, while a ``length`` exactly
+    on a page boundary reads its final page whole with nothing sliced.
+    Either way every position ``t < length`` that the slot has not yet
+    WRITTEN (``t > pos[b]``) still appears in the view — as stale pool
+    contents or page-0 rows — and is hidden downstream by the causal
+    ``idx <= pos`` mask, never by this function.  The in-kernel path
+    (repro.kernels.paged_attention) mirrors this by fetching whole pages
+    into scratch, slicing ``[:length]``, and applying the identical mask,
+    so both boundary parities are covered by the same regression tests
+    (tests/test_paged_kernel.py).
     """
     B, P = table.shape
     ps = pool.shape[1]

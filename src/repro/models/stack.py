@@ -272,14 +272,18 @@ def _paged_args(kind: str, cfg: ModelConfig, paged, pages, pages_swa):
 
 def apply_sublayer_decode(kind: str, p, cache, cfg: ModelConfig, h, pos, *,
                           memory=None, paged=None, pages=None, pages_swa=None,
-                          live=None):
+                          live=None, kv_read="gather"):
     x = _apply_norm(cfg, p["norm"], h)
     if kind == "attn":
+        # kv_read="kernel" only reaches GQA decode on the paged layout;
+        # MLA (below) and every prefill path stay on the gather read —
+        # the serving engine warns about those fallbacks up front.
         y, new_cache = attn_lib.apply_gqa_decode(
             p, x, cache, pos, num_heads=cfg.num_heads,
             num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim_,
             rotary_dim=cfg.rotary_dim, rope_theta=cfg.rope_theta,
             sliding_window=cfg.sliding_window, live=live,
+            kv_read=kv_read if paged is not None else "gather",
             **_paged_args(kind, cfg, paged, pages, pages_swa))
     elif kind == "mla":
         y, new_cache = attn_lib.apply_mla_decode(
@@ -328,7 +332,7 @@ def apply_sublayer_decode(kind: str, p, cache, cfg: ModelConfig, h, pos, *,
 
 def apply_superblock_decode(p_sb, cache_sb, cfg: ModelConfig, h, pos, *,
                             pattern=None, memory=None, paged=None, pages=None,
-                            pages_swa=None, live=None):
+                            pages_swa=None, live=None, kv_read="gather"):
     pattern = pattern or cfg.block_pattern
     new_cache = {}
     for li, layer in enumerate(pattern):
@@ -336,13 +340,15 @@ def apply_superblock_decode(p_sb, cache_sb, cfg: ModelConfig, h, pos, *,
             key = f"l{li}_{si}_{kind}"
             y, new_cache[key] = apply_sublayer_decode(
                 kind, p_sb[key], cache_sb[key], cfg, h, pos, memory=memory,
-                paged=paged, pages=pages, pages_swa=pages_swa, live=live)
+                paged=paged, pages=pages, pages_swa=pages_swa, live=live,
+                kv_read=kv_read)
             h = h + y
     return h, new_cache
 
 
 def apply_stack_decode(stacked, cache, cfg: ModelConfig, h, pos, *, memory=None,
-                       paged=None, pages=None, pages_swa=None, live=None):
+                       paged=None, pages=None, pages_swa=None, live=None,
+                       kv_read="gather"):
     """One-token decode through the whole stack; cache leaves have leading
     superblock dim.  Returns (h, new_cache).  Page tables (``pages`` /
     ``pages_swa``) are shared by every superblock — the scan closes over
@@ -354,7 +360,7 @@ def apply_stack_decode(stacked, cache, cfg: ModelConfig, h, pos, *, memory=None,
                                                   memory=memory, paged=paged,
                                                   pages=pages,
                                                   pages_swa=pages_swa,
-                                                  live=live)
+                                                  live=live, kv_read=kv_read)
         return h, new_cache_sb
 
     h, new_cache = jax.lax.scan(body, h, (stacked, cache))

@@ -38,6 +38,19 @@ Two KV-cache layouts (``kv_layout``):
   the exact contiguous layout inside the jitted step, so outputs are
   bit-identical to the contiguous baseline (same masks, same reductions).
 
+Two paged read paths (``kv_read``, paged layout only):
+
+* ``"gather"`` (default) — materialize the contiguous view via
+  ``gather_pages`` and run the stock attention reduction over it.
+* ``"kernel"`` — the Pallas paged-attention kernel walks the page table
+  IN-KERNEL for the stacked superblocks' GQA decode reads (no contiguous
+  gather), bit-identical to the gather path (pinned in
+  tests/test_paged_kernel.py).  Not every read is covered: MLA latents,
+  the unstacked first-dense superblock, and every prefill read stay on
+  gather — the engine warns LOUDLY about each fallback at construction
+  (never silently), and ``stats["kv_read_execution_mode"]`` reports
+  whether the kernel is compiled or CPU-interpreted.
+
 Prefill/decode interleaving (``interleave``): 0 prefills every admitted
 prompt to completion before decoding resumes (lowest time-to-first-token
 for the admitted request, but running slots stall for the whole prompt);
@@ -104,6 +117,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import Counter, deque
 
 import jax
@@ -115,6 +129,21 @@ from repro.configs.base import ModelConfig
 from repro.models import lm as lm_lib
 from repro.models.paging import PagedLayout
 from repro.serving.paging import PageAllocator
+
+
+def _codec_execution_mode(codec) -> str:
+    """How the codec's transform ACTUALLY executes on this host ("none"
+    without a codec).  Unwraps the Adaptive-R scheduler (``.current``) and
+    wire-stage chains (``.transform``) down to the transform codec, whose
+    ``execution_mode()`` distinguishes pallas-compiled / pallas-interpret /
+    fft-fallback from the canonical ``spec()`` backend tag."""
+    if codec is None:
+        return "none"
+    codec = getattr(codec, "current", codec)   # Adaptive-R wrapper
+    codec = getattr(codec, "transform", codec)  # Chain of wire stages
+    if hasattr(codec, "execution_mode"):
+        return codec.execution_mode()
+    return "unknown"
 
 
 @dataclasses.dataclass
@@ -152,7 +181,7 @@ class BatchedEngine:
                  chunk_size: int = 16, sync_every: int = 8,
                  kv_layout: str = "contiguous", page_size: int = 16,
                  num_pages: int | None = None, interleave: int = 0,
-                 preemption: bool = False):
+                 preemption: bool = False, kv_read: str = "gather"):
         # `codec` may be a ready codec object, a registry spec string
         # (e.g. "c3sl:R=4|int8"), or a per-direction link spec/SplitLink
         # ("c3sl:R=8|int8 >> bwd:c3sl:R=4").  Serving is forward-only —
@@ -193,6 +222,14 @@ class BatchedEngine:
         if kv_layout not in ("contiguous", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r} "
                              "(expected 'contiguous' | 'paged')")
+        if kv_read not in ("gather", "kernel"):
+            raise ValueError(f"unknown kv_read {kv_read!r} "
+                             "(expected 'gather' | 'kernel')")
+        if kv_read == "kernel" and kv_layout != "paged":
+            raise ValueError(
+                "kv_read='kernel' requires kv_layout='paged': the Pallas "
+                "paged-attention kernel is a page-table walk, and a "
+                "contiguous cache has no table to walk")
         if preemption and prefill_mode != "chunked":
             raise ValueError("preemption requires prefill_mode='chunked' "
                              "(eviction re-queues the request for chunked "
@@ -226,6 +263,30 @@ class BatchedEngine:
         kinds = {k for layer in cfg.block_pattern for k in layer}
         self._linear_backed = ("mla" in kinds
                                or ("attn" in kinds and not cfg.sliding_window))
+        self.kv_read = kv_read
+        if kv_read == "kernel":
+            if "attn" not in kinds:
+                raise ValueError(
+                    "kv_read='kernel' covers GQA ('attn') decode reads only, "
+                    f"but block_pattern {cfg.block_pattern!r} has no attn "
+                    "sublayer — every cache read would silently stay on the "
+                    "gather path; use kv_read='gather'")
+            fallbacks = []
+            if "mla" in kinds:
+                fallbacks.append("MLA latent reads")
+            if cfg.first_dense_layers:
+                fallbacks.append("the unstacked first-dense superblock")
+            if prefill_mode == "chunked":
+                fallbacks.append("chunked-prefill reads")
+            if fallbacks:
+                # loud by design: the silent-fallback bug class this tier
+                # fixes.  The uncovered reads stay on gather_pages and are
+                # still bit-identical — but the operator must know the
+                # kernel is not serving them.
+                warnings.warn(
+                    "kv_read='kernel': " + ", ".join(fallbacks) + " stay on "
+                    "the gather read path (kernel tier covers stacked GQA "
+                    "decode only)", stacklevel=2)
         if kv_layout == "paged":
             len_swa = min(max_len, cfg.sliding_window) if cfg.sliding_window else 0
             pps = -(-max_len // page_size)
@@ -267,6 +328,19 @@ class BatchedEngine:
                       "payload_wire_bytes": 0, "wire_bytes_fwd": 0,
                       "wire_bytes_bwd": 0, "eos_early_exits": 0,
                       "evictions": 0, "withdrawn": 0}
+        # effective-execution-mode surfacing (the silent-fallback fix):
+        # kv_read_execution_mode says how the paged read ACTUALLY runs on
+        # this host ("gather" | "pallas-compiled" | "pallas-interpret") and
+        # codec_execution_mode the same for the HRR codec ("none" without
+        # one) — benchmarks must record these tags, and bench_roofline
+        # refuses interpret-mode rows labeled as compiled kernels.
+        if kv_read == "kernel":
+            from repro.kernels import circconv
+            self.stats["kv_read_execution_mode"] = circconv.execution_mode()
+        else:
+            self.stats["kv_read_execution_mode"] = "gather"
+        self.stats["kv_read"] = kv_read
+        self.stats["codec_execution_mode"] = _codec_execution_mode(self.codec)
         # the served R schedule under an adaptive codec, as {R: count} with
         # one count per EXECUTED decode step + one per prefill chunk, so
         # total() == decode_steps + prefill_chunks (not dispatches — a
@@ -347,7 +421,7 @@ class BatchedEngine:
         chunked-prefill dispatch, and the legacy prefill-as-decode step."""
         cfg = self.cfg
         greedy, eos_id, max_len = self.greedy, self.eos_id, self.max_len
-        paged = self.paged
+        paged, kv_read = self.paged, self.kv_read
 
         def pick(logits, key):
             if greedy:
@@ -368,7 +442,8 @@ class BatchedEngine:
             live = state["active"] & ~state["done"]
             logits, cache = lm_lib.decode_step(
                 params, cache, state["last_tok"][:, None], state["pos"], cfg,
-                codec=codec, codec_params=codec_params, paged=paged, live=live)
+                codec=codec, codec_params=codec_params, paged=paged, live=live,
+                kv_read=kv_read)
             nxt = jnp.where(live, pick(logits[:, -1], key), state["last_tok"])
             B, cap = state["out_buf"].shape
             col = jnp.where(live, jnp.minimum(state["out_len"], cap - 1), cap)
@@ -426,7 +501,8 @@ class BatchedEngine:
             logits, cache = lm_lib.decode_step(params, cache, tokens, pos, cfg,
                                                codec=codec,
                                                codec_params=codec_params,
-                                               paged=paged, live=live)
+                                               paged=paged, live=live,
+                                               kv_read=kv_read)
             return pick(logits[:, -1], key), cache
 
         return {"window": jax.jit(window_fn, donate_argnums=(1, 2)),

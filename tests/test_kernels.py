@@ -98,3 +98,85 @@ def test_keys_get_no_gradient():
     Z, K = _data(2, 2, 128, jnp.float32)
     g = jax.grad(lambda k: kops.bind_superpose_pallas(Z, k).sum())(K)
     np.testing.assert_array_equal(np.asarray(g), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# degenerate tile shapes: non-MXU-alignable D must fail loudly, not run a
+# T=1 Toeplitz grid (the _pick_tile degradation bug)
+# ---------------------------------------------------------------------------
+
+def test_mxu_alignable_classifier():
+    from repro.kernels import circconv
+    for D in (64, 96, 128, 256, 512, 1024, 4096):
+        assert circconv.mxu_alignable(D), D
+    # 4097 = 17 x 241: largest divisor <= 128 is 17, not 8-aligned
+    for D in (4097, 127, 241):
+        assert not circconv.mxu_alignable(D), D
+
+
+@pytest.mark.parametrize("op", ["bind", "unbind"])
+def test_kernel_raises_on_degenerate_tile_D4097(op):
+    """Direct kernel calls with D=4097 (prime-ish: tile degrades to 17)
+    must raise a clear error instead of silently running a 17x17-tile
+    grid slower than backend='direct'."""
+    from repro.kernels import circconv
+    D = 4097
+    Z = jnp.zeros((1, 2, D), jnp.float32)
+    K = jnp.zeros((2, 2 * D), jnp.float32)
+    with pytest.raises(ValueError, match="not MXU-alignable"):
+        if op == "bind":
+            circconv.bind_superpose_kernel(Z, K)
+        else:
+            circconv.unbind_kernel(jnp.zeros((1, D)), K)
+
+
+def test_hrr_pallas_falls_back_to_fft_for_degenerate_D():
+    """The high-level hrr entry points reroute pallas -> fft for
+    non-alignable D — with a warning (loud), and values equal to the fft
+    backend (the reroute really is the fft path, not a broken kernel)."""
+    Z, K = _data(2, 2, 127, jnp.float32)
+    with pytest.warns(UserWarning, match="falling back to the fft backend"):
+        S = hrr.bind_superpose(Z, K, backend="pallas")
+    np.testing.assert_array_equal(
+        np.asarray(S), np.asarray(hrr.bind_superpose(Z, K, backend="fft")))
+    with pytest.warns(UserWarning, match="falling back to the fft backend"):
+        Zh = hrr.unbind(S, K, backend="pallas")
+    np.testing.assert_array_equal(
+        np.asarray(Zh), np.asarray(hrr.unbind(S, K, backend="fft")))
+
+
+def test_alignable_pallas_does_not_warn():
+    Z, K = _data(2, 2, 128, jnp.float32)
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        kops.bind_superpose_pallas(Z, K)
+        hrr.bind_superpose(Z, K, backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# effective execution mode: spec() stays canonical, execution_mode() tells
+# the truth (the silent interpret-mode bug)
+# ---------------------------------------------------------------------------
+
+def test_circconv_execution_mode_matches_host():
+    from repro.kernels import circconv
+    mode = circconv.execution_mode()
+    if jax.default_backend() == "tpu":
+        assert mode == "pallas-compiled"
+    else:
+        assert mode == "pallas-interpret"
+    assert circconv.interpret_mode() == (mode == "pallas-interpret")
+
+
+def test_codec_execution_mode_vs_spec():
+    from repro.codecs import build
+    c = build("c3sl:R=2,backend=pallas", D=256)
+    # spec stays the canonical registry string regardless of host
+    assert "backend=pallas" in c.spec()
+    assert c.execution_mode() in ("pallas-compiled", "pallas-interpret")
+    assert build("c3sl:R=2,backend=fft", D=256).execution_mode() == "fft"
+    assert build("c3sl:R=2,backend=direct", D=256).execution_mode() == "direct"
+    # degenerate D: the pallas spec executes as fft — and says so
+    assert build("c3sl:R=2,backend=pallas",
+                 D=4097).execution_mode() == "fft-fallback"
