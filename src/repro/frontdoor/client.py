@@ -60,13 +60,16 @@ class BusyError(Exception):
 
 class FrontDoorClient:
     def __init__(self, host: str, port: int, *, tenant: str,
-                 codec: str = "none", faults=None, reconnect: bool = True,
+                 codec: str = "none", draft: str | None = None,
+                 on_tokens=None, faults=None, reconnect: bool = True,
                  reconnect_tries: int = 4, reconnect_backoff_s: float = 0.05,
                  handshake_timeout_s: float = 10.0,
                  handshake_ping_s: float = 0.5):
         self.host, self.port = host, port
         self.tenant = tenant
         self.codec = codec
+        self.draft = draft                   # pin the draft-channel spec too
+        self.on_tokens = on_tokens           # (rid, [tokens]) per burst
         self.faults = faults                 # FaultPlan on the c2s direction
         self.reconnect = reconnect
         self.reconnect_tries = reconnect_tries
@@ -81,6 +84,10 @@ class FrontDoorClient:
         self._read_task: asyncio.Task | None = None
         self._acks: dict[int, asyncio.Future] = {}
         self._results: dict[int, asyncio.Future] = {}
+        # incremental TOKENS bursts by rid — best-effort preview (a burst
+        # riding a dying connection is dropped, not retransmitted), so
+        # this may be a PROPER prefix of the RESULT after a reconnect
+        self._streamed: dict[int, list[int]] = {}
         # un-ACKed SUBMITs by rid, re-sent verbatim after a reconnect
         self._unacked: dict[int, tuple[dict, bytes]] = {}
         self._stats: list[asyncio.Future] = []
@@ -110,6 +117,8 @@ class FrontDoorClient:
                              faults=self.faults, epoch=self._epoch)
         self._epoch += 1
         hello = {"tenant": self.tenant, "codec": self.codec}
+        if self.draft is not None:
+            hello["draft"] = self.draft
         if self.session is not None:
             hello["resume"] = self.session
         try:
@@ -263,13 +272,18 @@ class FrontDoorClient:
         except BaseException:
             self._results.pop(rid, None)
             self._unacked.pop(rid, None)
+            self._streamed.pop(rid, None)
             raise
         finally:
             self._acks.pop(rid, None)
         return rid
 
     async def result(self, rid: int) -> dict:
-        """Await one rid's RESULT: {"tokens", "ttft_s", "evictions"}."""
+        """Await one rid's RESULT: {"tokens", "streamed", "ttft_s",
+        "ttlt_s", "accepted", "rejected", "rollbacks", "evictions"}.
+        ``streamed`` is the incremental TOKENS preview actually received —
+        always a prefix of ``tokens`` (and a proper prefix if a burst rode
+        a dying connection)."""
         fut = self._results[rid]
         try:
             return await fut
@@ -359,21 +373,41 @@ class FrontDoorClient:
             self._unacked.pop(rid, None)
             fut = self._acks.get(rid)
             self._results.pop(rid, None)
+            self._streamed.pop(rid, None)
             if fut and not fut.done():
                 fut.set_exception(BusyError(header.get("reason", "busy"),
                                             header.get("retry_after_ms", 50)))
+        elif mtype == MsgType.TOKENS:
+            burst = [int(t) for t in proto.unpack_array(header, payload)]
+            have = self._streamed.setdefault(rid, [])
+            off = header.get("off", len(have))
+            # bursts carry their absolute offset: a burst that was lost on
+            # a dying connection leaves a GAP — keep the contiguous prefix
+            # instead of silently splicing tokens at the wrong positions
+            if off <= len(have) and off + len(burst) > len(have):
+                fresh = burst[len(have) - off:]
+                have.extend(fresh)
+                if self.on_tokens is not None:
+                    self.on_tokens(rid, fresh)
         elif mtype == MsgType.RESULT:
             self._unacked.pop(rid, None)
+            streamed = self._streamed.pop(rid, [])
             fut = self._results.get(rid)
             if fut and not fut.done():
                 tokens = proto.unpack_array(header, payload)
                 fut.set_result({"tokens": [int(t) for t in tokens],
+                                "streamed": streamed,
                                 "ttft_s": header.get("ttft_s"),
+                                "ttlt_s": header.get("ttlt_s"),
+                                "accepted": header.get("accepted", 0),
+                                "rejected": header.get("rejected", 0),
+                                "rollbacks": header.get("rollbacks", 0),
                                 "evictions": header.get("evictions", 0)})
         elif mtype == MsgType.ERROR:
             err = FrontDoorError(header.get("reason", "server error"))
             if rid is not None:
                 self._unacked.pop(rid, None)
+                self._streamed.pop(rid, None)
                 for book in (self._acks, self._results):
                     fut = book.get(rid)
                     if fut and not fut.done():

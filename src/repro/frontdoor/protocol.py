@@ -52,8 +52,19 @@ Message flow::
                                   <-   ACCEPTED {rid}
                                        | BUSY {rid, retry_after_ms}
                                        | ERROR {rid, reason}
+                                  <-   TOKENS {rid, off, n}
+                                       + int32 token payload  (0 or more:
+                                       incremental bursts as the engine
+                                       emits them — one per verify round
+                                       under speculative decoding; ``off``
+                                       is the burst's absolute offset in
+                                       the output, so a receiver detects
+                                       a lost burst as a gap)
                                   <-   RESULT {rid, ttft_s, ...}
-                                       + int32 token payload
+                                       + int32 token payload  (the FULL
+                                       output; TOKENS frames are a
+                                       prefix of it, so a client may
+                                       ignore either)
       STATS {}                    ->
                                   <-   STATS_OK {stats}
       BYE {}                      ->
@@ -116,6 +127,7 @@ class MsgType(enum.IntEnum):
     NACK = 12
     PING = 13
     PONG = 14
+    TOKENS = 15
 
 #: message types that ride outside the data sequence space
 CTRL_TYPES = frozenset({MsgType.NACK, MsgType.PING, MsgType.PONG})

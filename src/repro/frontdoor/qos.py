@@ -73,6 +73,7 @@ class TenantQoS:
     def __init__(self, tenant: str):
         self.tenant = tenant
         self.ttft_s = LogHistogram()              # submit -> first token
+        self.ttlt_s = LogHistogram()              # submit -> last token
         self.tokens_per_s = LogHistogram(lo=1e-2, hi=1e7)   # decode rate
         self.wire_bytes = LogHistogram(lo=1.0, hi=1e10)     # per request
         self.requests = 0          # completed requests
@@ -89,12 +90,15 @@ class TenantQoS:
         self.nacks = 0             # NACKs received from this tenant's stream
 
     def record_result(self, *, ttft_s: float | None, gen_tokens: int,
-                      decode_s: float, wire_bytes: int, evictions: int = 0):
+                      decode_s: float, wire_bytes: int, evictions: int = 0,
+                      ttlt_s: float | None = None):
         self.requests += 1
         self.tokens_out += gen_tokens
         self.evictions += evictions
         if ttft_s is not None:
             self.ttft_s.record(ttft_s)
+        if ttlt_s is not None:
+            self.ttlt_s.record(ttlt_s)
         if gen_tokens and decode_s > 0:
             self.tokens_per_s.record(gen_tokens / decode_s)
         self.wire_bytes.record(wire_bytes)
@@ -113,6 +117,7 @@ class TenantQoS:
                 "retransmits": self.retransmits,
                 "nacks": self.nacks,
                 "ttft_s": self.ttft_s.snapshot(),
+                "ttlt_s": self.ttlt_s.snapshot(),
                 "tokens_per_s": self.tokens_per_s.snapshot(),
                 "wire_bytes": self.wire_bytes.snapshot()}
 

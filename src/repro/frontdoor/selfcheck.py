@@ -56,9 +56,14 @@ CHAOS_TENANTS = [("tenant-a", BUCKET_SPEC), ("tenant-b", BUCKET_SPEC),
                  ("tenant-c", BUCKET_SPEC)]
 
 
+#: draft-channel spec for the --spec-decode run: batch-wise like the cut
+#: codec, int8 on the wire — the cheap server->client feedback channel
+SPEC_DRAFT = "c3sl:R=2|int8"
+
+
 def build_engine(num_slots: int = 4, max_len: int = 64,
                  spec: str = ENGINE_SPEC,
-                 sync_every: int = 8) -> BatchedEngine:
+                 sync_every: int = 8, spec_decode=None) -> BatchedEngine:
     # sanitize mode shrinks sync_every below max_new so decode spans tick
     # boundaries: the per-tick cut probe then observes slots mid-decode
     # (a dead/live mix) instead of every window running to completion
@@ -70,7 +75,8 @@ def build_engine(num_slots: int = 4, max_len: int = 64,
                          codec=spec, greedy=True, seed=0,
                          kv_layout="paged", page_size=8,
                          num_pages=num_slots * (max_len // 8),
-                         sync_every=sync_every, preemption=True)
+                         sync_every=sync_every, preemption=True,
+                         spec_decode=spec_decode)
 
 
 def chaos_plan() -> FaultPlan:
@@ -85,9 +91,10 @@ def chaos_plan() -> FaultPlan:
 
 
 async def _tenant(host, port, tenant, codec, requests, vocab, seed,
-                  faults=None):
+                  faults=None, draft=None):
     client = await FrontDoorClient.open(host, port, tenant=tenant,
-                                        codec=codec, faults=faults)
+                                        codec=codec, draft=draft,
+                                        faults=faults)
     rng = np.random.RandomState(seed)
     results = []
     try:
@@ -96,6 +103,9 @@ async def _tenant(host, port, tenant, codec, requests, vocab, seed,
             out = await client.generate(prompt, max_new=4)
             assert out["tokens"], f"{tenant} got an empty result"
             assert all(0 <= t < vocab for t in out["tokens"]), out
+            # incremental TOKENS frames must preview the final output
+            assert out["streamed"] == out["tokens"][:len(out["streamed"])], \
+                (tenant, out["streamed"], out["tokens"])
             results.append(out)
         stats = await client.stats()
     finally:
@@ -182,12 +192,15 @@ async def amain(requests: int = 3, sanitize: bool = False) -> dict:
 
 
 async def _sequential_run(requests: int, faults: FaultPlan | None,
-                          sanitize: bool = False) -> dict:
+                          sanitize: bool = False, spec_decode=None,
+                          draft: str | None = None) -> dict:
     """One full sequential pass (every tenant, every request, one at a
     time) against a FRESH static-bucket engine; returns
     {tenant: [token lists]} plus the final server stats under the
-    "_stats" key."""
-    eng = build_engine(spec=BUCKET_SPEC, sync_every=2 if sanitize else 8)
+    "_stats" key and the total streamed-token-preview count under
+    "_streamed"."""
+    eng = build_engine(spec=BUCKET_SPEC, sync_every=2 if sanitize else 8,
+                       spec_decode=spec_decode)
     san = det = None
     if sanitize:
         san, det = _arm_sanitizers(eng)
@@ -201,12 +214,14 @@ async def _sequential_run(requests: int, faults: FaultPlan | None,
     host, port = await server.start()
     tokens: dict = {}
     stats = None
+    streamed = 0
     try:
         for i, (name, codec) in enumerate(CHAOS_TENANTS):
             name_, results, stats = await _tenant(
                 host, port, name, codec, requests, eng.cfg.vocab_size, 7 + i,
-                faults=faults)
+                faults=faults, draft=draft)
             tokens[name_] = [r["tokens"] for r in results]
+            streamed += sum(len(r["streamed"]) for r in results)
     finally:
         await server.stop()
     assert server.tick_error is None, server.tick_error
@@ -216,6 +231,7 @@ async def _sequential_run(requests: int, faults: FaultPlan | None,
         await _report_sanitizers(san, det, require_cut_checks=True)
     assert not eng.queue and eng.active == 0, "engine not drained"
     tokens["_stats"] = stats
+    tokens["_streamed"] = streamed
     return tokens
 
 
@@ -247,6 +263,49 @@ async def amain_chaos(requests: int = 3, sanitize: bool = False) -> None:
           f"({recovered} recovery events)")
 
 
+async def amain_spec(requests: int = 3) -> None:
+    """The CI ``spec-smoke`` job: speculative decoding end-to-end over
+    the front door.  Sequential tenants (schedule-independent occupancy,
+    same reasoning as the chaos run) decode once on a vanilla
+    static-bucket engine to record the reference, then again with a
+    draft/verify channel at each k — greedy verification must make every
+    speculative run BIT-IDENTICAL to the vanilla one, while the engine
+    counters prove speculation actually happened (verify rounds ran,
+    drafts were accepted/rejected, TOKENS frames streamed bursts)."""
+    from repro.serving.spec import SpecConfig
+    print("[selfcheck] spec: recording the non-speculative reference")
+    ref = await _sequential_run(requests, faults=None)
+    for k in (2, 4):
+        print(f"[selfcheck] spec: replaying with k={k} "
+              f"(draft {SPEC_DRAFT!r}, pinned by the client handshake)")
+        got = await _sequential_run(
+            requests, faults=None,
+            spec_decode=SpecConfig(k=k, draft=SPEC_DRAFT), draft=SPEC_DRAFT)
+        bad = [(name, ref[name], got[name]) for name, _ in CHAOS_TENANTS
+               if got[name] != ref[name]]
+        if bad:
+            for name, want, have in bad:
+                print(f"[selfcheck] SPEC MISMATCH for {name} at k={k}:\n"
+                      f"  vanilla:     {want}\n  speculative: {have}",
+                      file=sys.stderr)
+            sys.exit(1)
+        est = got["_stats"]["engine"]
+        acc, rej = est["spec_accepted"], est["spec_rejected"]
+        assert est["spec_rounds"] > 0 and acc + rej > 0, (
+            f"k={k} run never speculated: {est}")
+        assert got["_streamed"] > 0, (
+            f"k={k} run streamed no TOKENS previews")
+        wpt = est["wire_per_token"]
+        rate = acc / (acc + rej)
+        print(f"[selfcheck] spec: k={k} bit-identical; acceptance "
+              f"{rate:.2f} over {est['spec_rounds']} rounds, "
+              f"{wpt['wire_bytes_per_token']:.1f} wire B/token, "
+              f"{got['_streamed']} tokens streamed incrementally")
+    n = len(CHAOS_TENANTS) * requests
+    print(f"[selfcheck] spec: {n} requests per run bit-identical to "
+          f"vanilla decode at every k")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=3,
@@ -254,6 +313,10 @@ def main():
     ap.add_argument("--chaos", action="store_true",
                     help="seeded fault-injection run: sequential tenants, "
                          "outputs must be bit-identical to fault-free")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative-decoding run: sequential tenants "
+                         "decode over a draft/verify channel; outputs must "
+                         "be bit-identical to the vanilla engine")
     ap.add_argument("--sanitize", action="store_true",
                     help="run the loopback tenants under the runtime "
                          "sanitizer tier (per-tick engine invariants + "
@@ -262,6 +325,8 @@ def main():
     args = ap.parse_args()
     if args.chaos:
         asyncio.run(amain_chaos(args.requests, sanitize=args.sanitize))
+    elif args.spec_decode:
+        asyncio.run(amain_spec(args.requests))
     else:
         asyncio.run(amain(args.requests, sanitize=args.sanitize))
     print("[selfcheck] PASS")

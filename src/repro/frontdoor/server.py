@@ -163,6 +163,15 @@ class FrontDoorServer:
         self.max_misses = max_misses
         self.resume_ttl_s = resume_ttl_s
         self._spec, self._compat_specs = engine_codec_specs(engine)
+        # speculative-decoding contract (None when the engine decodes
+        # vanilla): the draft channel's canonical codec spec plus the
+        # pinned k/head, advertised in HELLO_OK and validated against any
+        # draft spec the client supplies — a draft-channel mismatch is a
+        # handshake failure exactly like a cut-layer codec mismatch.
+        self._draft_spec = None
+        if engine.spec_cfg is not None:
+            self._draft_spec = (engine.draft_codec.spec()
+                                if engine.draft_codec is not None else "none")
         self._uids = itertools.count()
         self._tokens = itertools.count()
         self._epochs = itertools.count()     # s2c fault epoch per connection
@@ -262,9 +271,41 @@ class FrontDoorServer:
         worked = False
         if eng.queue or eng.active:
             worked = eng.tick()
+        worked |= await self._stream_tokens()
         worked |= await self._deliver()
         self._sweep_expired()
         return worked
+
+    async def _stream_tokens(self) -> bool:
+        """Forward the engine's incremental token bursts as TOKENS frames.
+
+        Each burst is the tokens one request emitted since its last burst
+        (one per verify round under speculative decoding — that is what
+        makes the client-visible latency profile show the k-token
+        amortization).  Delivery is best-effort: RESULT still carries the
+        FULL output, so a dead connection just drops the preview — the
+        burst is NOT parked."""
+        events = self.engine.pop_stream_events()
+        if not events:
+            return False
+        for uid, start, tokens in events:
+            route = self._routes.get(uid)
+            if route is None:
+                continue                      # not ours (direct submit)
+            conn = route.sess.conn
+            if conn is None or not conn.open:
+                continue
+            header = {"rid": route.rid, "off": start, "n": len(tokens)}
+            arr_header, payload = proto.pack_array(
+                np.asarray(tokens, dtype=np.int32))
+            header.update(arr_header)
+            try:
+                sent = await conn.stream.send(MsgType.TOKENS, header,
+                                              payload)
+                self.qos.tenant(route.tenant).bytes_out += sent
+            except (ConnectionError, RuntimeError, OSError):
+                conn.open = False
+        return True
 
     async def _deliver(self) -> bool:
         eng = self.engine
@@ -281,8 +322,11 @@ class FrontDoorServer:
             ttft = (req.t_first - req.t_submit
                     if req.t_first is not None else None)
             decode_s = (now - req.t_first) if req.t_first is not None else 0.0
-            header = {"rid": route.rid, "ttft_s": ttft,
-                      "evictions": req.evictions}
+            ttlt = now - req.t_submit
+            header = {"rid": route.rid, "ttft_s": ttft, "ttlt_s": ttlt,
+                      "evictions": req.evictions,
+                      "accepted": req.accepted, "rejected": req.rejected,
+                      "rollbacks": req.rollbacks}
             arr_header, payload = proto.pack_array(
                 np.asarray(req.out, dtype=np.int32))
             header.update(arr_header)
@@ -306,7 +350,7 @@ class FrontDoorServer:
             tq.record_result(ttft_s=ttft, gen_tokens=len(req.out),
                              decode_s=decode_s,
                              wire_bytes=route.bytes_in + sent,
-                             evictions=req.evictions)
+                             evictions=req.evictions, ttlt_s=ttlt)
         return True
 
     # ------------------------------------------------------------------
@@ -503,6 +547,23 @@ class FrontDoorServer:
                 f"codec mismatch: client {spec!r} (canonical {canon!r}) vs "
                 f"engine {self._spec!r}; compatible specs: {compat} — "
                 "refusing the connection rather than decoding garbage")
+        draft = header.get("draft")
+        if draft is not None:
+            # the client pins the draft channel too — same refusal rule
+            if self._draft_spec is None:
+                raise ProtocolError(
+                    f"client pinned draft spec {draft!r} but the engine "
+                    "does not speculate — refusing the connection")
+            try:
+                dcanon = canonical_codec_spec(draft, self.engine.cfg.d_model,
+                                              self.engine.num_slots)
+            except Exception as e:
+                raise ProtocolError(f"unbuildable draft spec {draft!r}: {e}")
+            if dcanon != self._draft_spec:
+                raise ProtocolError(
+                    f"draft-channel mismatch: client {draft!r} (canonical "
+                    f"{dcanon!r}) vs engine {self._draft_spec!r} — refusing "
+                    "the connection rather than decoding garbage")
         conn = _Conn(stream=stream, tenant=tenant)
         resume = header.get("resume")
         resumed = False
@@ -524,14 +585,18 @@ class FrontDoorServer:
             self._sessions[token] = sess
         tq = self.qos.tenant(tenant)
         tq.bytes_in += nbytes
-        tq.bytes_out += await stream.send(
-            MsgType.HELLO_OK,
-            {"codec": self._spec, "num_slots": self.engine.num_slots,
-             "max_len": self.engine.max_len,
-             "kv_layout": self.engine.kv_layout,
-             "preemption": self.engine.preemption,
-             "session": sess.token, "resumed": resumed,
-             "heartbeat_s": self.heartbeat_s})
+        hello_ok = {"codec": self._spec, "num_slots": self.engine.num_slots,
+                    "max_len": self.engine.max_len,
+                    "kv_layout": self.engine.kv_layout,
+                    "preemption": self.engine.preemption,
+                    "session": sess.token, "resumed": resumed,
+                    "heartbeat_s": self.heartbeat_s}
+        if self._draft_spec is not None:
+            scfg = self.engine.spec_cfg
+            hello_ok.update({"draft": self._draft_spec,
+                             "spec_k": scfg.k, "draft_head": scfg.draft_head,
+                             "spec_adaptive": scfg.adaptive})
+        tq.bytes_out += await stream.send(MsgType.HELLO_OK, hello_ok)
         if resumed:
             await self._resume(sess, conn)
         return conn, sess
@@ -598,6 +663,11 @@ class FrontDoorServer:
                            "r_served": {str(k): v
                                         for k, v in sorted(
                                             eng.r_served.items())},
+                           "k_served": {str(k): v
+                                        for k, v in sorted(
+                                            eng.k_served.items())},
+                           "wire_per_token": eng.wire_per_token(),
+                           "draft": self._draft_spec,
                            "codec": self._spec,
                            "active_slots": eng.active,
                            "queued": len(eng.queue),

@@ -32,17 +32,18 @@ from repro.models import lm as lm_lib
 
 def _serving_codec(spec: str, D: int, R: int, batch: int):
     """Build the serving-side codec from a spec.  Per-direction link specs
-    (``... >> bwd:...``) resolve to the FORWARD channel — serving ships no
-    gradient, so the backward codec has nothing to compress (accounted as
-    wire_bytes_bwd == 0 in the engine stats)."""
+    (``... >> bwd:...``) keep the LINK: the engine serves the forward
+    channel — no gradient crosses the cut at inference, so the backward
+    codec is accounted as wire_bytes_bwd == 0 — and a ``draft:`` segment
+    becomes the speculative feedback channel (auto-enables spec decode)."""
     if transport.is_link_spec(spec):
-        link = transport.build_link(spec, D=D, R=R)
+        link = transport.build_link(spec, D=D, R=R).with_max_R(batch)
         print(f"[serve] link spec {link.spec()!r}: forward channel serves "
-              f"(no gradient crosses the cut at inference)", flush=True)
-        spec_codec = link.fwd.codec
-    else:
-        spec_codec = codecs.build(spec, D=D, R=R)
-    return codecs.clamp_R(spec_codec, batch)
+              f"(no gradient crosses the cut at inference)"
+              + ("; draft channel feeds speculative decode"
+                 if link.draft is not None else ""), flush=True)
+        return link
+    return codecs.clamp_R(codecs.build(spec, D=D, R=R), batch)
 
 
 def _run_engine(cfg, params, args):
@@ -72,6 +73,19 @@ def _run_engine(cfg, params, args):
             hist = dict(sorted(eng.r_served.items()))
             line += f"; served R schedule {hist} (decode steps + chunks)"
         print(line)
+    if eng.spec_cfg is not None:
+        s = eng.stats
+        tried = s["spec_accepted"] + s["spec_rejected"]
+        wpt = eng.wire_per_token()
+        print(f"speculative: k={eng._k_ctl.current_k} "
+              f"head={eng.spec_cfg.draft_head} "
+              f"draft={eng.draft_codec.spec() if eng.draft_codec else 'raw'} "
+              f"rounds={s['spec_rounds']} accepted={s['spec_accepted']} "
+              f"rejected={s['spec_rejected']} rollbacks={s['spec_rollbacks']} "
+              f"(acceptance {s['spec_accepted'] / max(tried, 1):.2f}); "
+              f"wire {wpt['wire_bytes_per_token']:.1f} B/token "
+              f"(fwd {wpt['wire_bytes_fwd']:,d} + "
+              f"draft {wpt['wire_bytes_draft']:,d} B)")
     if eng.paged is not None:
         print(f"paged pool: {eng.paged.num_pages} pages x "
               f"{eng.paged.page_size} positions "
@@ -85,11 +99,36 @@ def _run_engine(cfg, params, args):
     print("sample output:", done[0].out[:16])
 
 
+def _spec_config(args):
+    """SpecConfig from the --draft-* flags; None when none were given (a
+    --codec link spec with a draft: segment still auto-enables in the
+    engine with defaults)."""
+    from repro.serving.spec import SpecConfig
+    if (args.draft_k is None and args.draft_spec is None
+            and args.draft_head is None and not args.draft_adaptive):
+        return None
+    kw = {}
+    if args.draft_k is not None:
+        kw["k"] = args.draft_k
+    if args.draft_spec is not None and args.draft_spec != "none":
+        kw["draft"] = args.draft_spec
+    if args.draft_head is not None:
+        kw["draft_head"] = args.draft_head
+    if args.draft_adaptive:
+        kw["adaptive"] = True
+    return SpecConfig(**kw)
+
+
 def _build_engine(cfg, params, args):
     from repro.serving.engine import BatchedEngine
     codec = None
     if args.codec != "none":
         codec = _serving_codec(args.codec, cfg.d_model, args.R, args.batch)
+    spec_decode = _spec_config(args)
+    if spec_decode is not None and not args.greedy:
+        raise SystemExit("--draft-* speculative decoding needs --greedy "
+                         "(greedy verification is the bit-identity "
+                         "guarantee)")
     eng = BatchedEngine(params, cfg, num_slots=args.batch,
                         max_len=args.cache_len, codec=codec,
                         codec_params=(codec.init(jax.random.PRNGKey(7))
@@ -99,7 +138,7 @@ def _build_engine(cfg, params, args):
                         chunk_size=args.chunk_size, sync_every=args.sync_every,
                         kv_layout=args.kv_layout, page_size=args.page_size,
                         num_pages=args.num_pages, interleave=args.interleave,
-                        preemption=args.preemption)
+                        preemption=args.preemption, spec_decode=spec_decode)
     if args.pin_R is not None:
         if not isinstance(eng.codec, codecs.AdaptiveC3SL):
             raise SystemExit("--pin-R needs an 'adaptive:...' --codec spec")
@@ -206,6 +245,21 @@ def main():
                     help="decode steps interleaved after each prefill chunk "
                          "(0 = prefill admitted prompts to completion; the "
                          "TTFT vs inter-token-latency knob)")
+    ap.add_argument("--draft-k", type=int, default=None,
+                    help="speculative decoding: draft tokens per verify "
+                         "round (k positions advance per round trip; "
+                         "engine/frontdoor modes, needs --greedy)")
+    ap.add_argument("--draft-spec", default=None,
+                    help="draft feedback channel codec spec, e.g. "
+                         "'c3sl:R=8|int8' ('none' = raw f32 feedback); "
+                         "overrides a --codec link spec's 'draft:' segment")
+    ap.add_argument("--draft-head", choices=["tied", "copy"], default=None,
+                    help="client-side draft proposer: 'tied' (tied-embedding "
+                         "head over the fed-back cut feature) or 'copy' "
+                         "(repeat last token, zero feedback bytes)")
+    ap.add_argument("--draft-adaptive", action="store_true",
+                    help="adapt k from the measured acceptance rate "
+                         "(EMA deadband over the {1,2,4,8} ladder)")
     ap.add_argument("--preemption", action="store_true",
                     help="evict lower-priority slots (pages freed, request "
                          "re-queued for re-prefill) instead of FIFO-blocking "
@@ -252,6 +306,11 @@ def main():
     if args.codec != "none":
         codec = _serving_codec(args.codec, cfg.d_model, args.R, args.batch)
         codec_params = codec.init(jax.random.PRNGKey(7))
+        if isinstance(codec, transport.SplitLink):
+            # lockstep loop serves the forward channel (same fwd params —
+            # link.init feeds every channel the same rng)
+            codec_params = codec.fwd_params(codec_params)
+            codec = codec.fwd.codec
     adaptive = isinstance(codec, codecs.AdaptiveC3SL)
     if args.pin_R is not None:
         if not adaptive:

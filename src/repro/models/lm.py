@@ -308,30 +308,27 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
 # serving (chunked prefill: C prompt tokens per dispatch)
 # ---------------------------------------------------------------------------
 
-def prefill_chunk(params, cache, tokens, pos, cfg: ModelConfig, *,
+def chunk_forward(params, cache, tokens, pos, cfg: ModelConfig, *,
                   codec=None, codec_params=None, valid=None, paged=None):
-    """Ingest C prompt tokens per row in ONE dispatch (vs C decode dispatches).
+    """Shared C-positions-per-dispatch forward: the write path under both
+    chunked prefill and the speculative verify/commit round.
 
     tokens (B,C) int32; pos (B,) int32 per-row start positions; valid (B,C)
-    bool marks real tokens — False entries (ragged chunk tails, or rows that
-    are not prefilling at all) write nothing to the KV cache and advance no
-    recurrent state.  Returns (logits (B,V) at each row's LAST VALID
-    position, new_cache); rows with no valid token get garbage logits the
-    caller must ignore.
+    bool marks real tokens — False entries (ragged chunk tails, rows that
+    are not ingesting, rejected draft positions) write nothing to the KV
+    cache and advance no recurrent state.  Returns
+    ``(h, new_cache, cut_seq)`` with ``h`` (B,C,d) the PRE-NORM final
+    hidden states and ``cut_seq`` the (B,C,d) cut-layer features exactly
+    as they entered the codec (post valid-mask; None without a codec).
 
-    With a codec, the cut-layer features (B,C,d) are compressed batch-wise
-    PER POSITION: transposing into the ``sequence_group_encode`` layout
+    With a codec, the cut-layer features are compressed batch-wise PER
+    POSITION: transposing into the ``sequence_group_encode`` layout
     (C,B,d) makes each group of R consecutive rows R slots at the same
     position — the same group shape the decode path forms from its (B,d)
-    features (B divisible by R).  Chunked prefill then reproduces
-    prefill-as-decode outputs token-for-token when the group CONTENTS also
-    match, i.e. every slot ingests in lockstep (full batch, equal prompt
-    lengths).  Non-valid positions (idle slots, ragged chunk tails)
-    contribute exact ZEROS to the superposition — mirroring decode's
-    ``live`` masking — so padding never injects cache-history-dependent
-    cross-talk; with ragged prompts the two paths still group different
-    LIVE contents per step, so outputs agree only up to codec cross-talk —
-    same as any occupancy change does under batch-wise compression.
+    features (B divisible by R).  Non-valid positions contribute exact
+    ZEROS to the superposition — mirroring decode's ``live`` masking — so
+    padding and rejected speculation never inject cache-history-dependent
+    cross-talk.
     """
     B, C = tokens.shape
     if valid is None:
@@ -341,6 +338,7 @@ def prefill_chunk(params, cache, tokens, pos, cfg: ModelConfig, *,
     pages, pages_swa = cache.get("pages"), cache.get("pages_swa")
     kw = dict(memory=memory, paged=paged, pages=pages, pages_swa=pages_swa)
     new_cache = dict(cache)
+    cut_seq = None
     if cfg.first_dense_layers:
         h, new_cache["first"] = stack_lib.apply_superblock_prefill(
             params["first"], cache["first"], cfg, h, pos, valid, **kw)
@@ -361,6 +359,7 @@ def prefill_chunk(params, cache, tokens, pos, cfg: ModelConfig, *,
         # features that would otherwise superpose onto live rows — and vary
         # with cache/page history.  Zero them before the encode.
         h = jnp.where(valid[:, :, None], h, 0.0)
+        cut_seq = h
         payload = sequence_group_encode(codec, codec_params, h.swapaxes(0, 1))
         h = sequence_group_decode(codec, codec_params, payload,
                                   C, B).swapaxes(0, 1)
@@ -368,11 +367,69 @@ def prefill_chunk(params, cache, tokens, pos, cfg: ModelConfig, *,
                                                    pos, valid, **kw)
         new_cache["stack"] = jax.tree.map(
             lambda f, b: jnp.concatenate([f, b], axis=0), nc_front, nc_back)
+    return h, new_cache, cut_seq
 
+
+def prefill_chunk(params, cache, tokens, pos, cfg: ModelConfig, *,
+                  codec=None, codec_params=None, valid=None, paged=None):
+    """Ingest C prompt tokens per row in ONE dispatch (vs C decode dispatches).
+
+    tokens (B,C) int32; pos (B,) int32 per-row start positions; valid (B,C)
+    bool marks real tokens — False entries (ragged chunk tails, or rows that
+    are not prefilling at all) write nothing to the KV cache and advance no
+    recurrent state.  Returns (logits (B,V) at each row's LAST VALID
+    position, new_cache); rows with no valid token get garbage logits the
+    caller must ignore.
+
+    Chunked prefill reproduces prefill-as-decode outputs token-for-token
+    when the codec group CONTENTS also match, i.e. every slot ingests in
+    lockstep (full batch, equal prompt lengths); with ragged prompts the
+    two paths group different LIVE contents per step, so outputs agree
+    only up to codec cross-talk — same as any occupancy change does under
+    batch-wise compression.  See :func:`chunk_forward` for the masking
+    and per-position grouping semantics.
+    """
+    B, C = tokens.shape
+    if valid is None:
+        valid = jnp.ones((B, C), bool)
+    h, new_cache, _ = chunk_forward(params, cache, tokens, pos, cfg,
+                                    codec=codec, codec_params=codec_params,
+                                    valid=valid, paged=paged)
     last = jnp.maximum(valid.sum(-1).astype(jnp.int32) - 1, 0)
     h_last = h[jnp.arange(B), last]                              # (B,d)
     h_last = _apply_norm(cfg, params["final_norm"], h_last)
     return h_last @ params["head"], new_cache
+
+
+def verify_chunk(params, cache, tokens, pos, cfg: ModelConfig, *,
+                 codec=None, codec_params=None, valid=None, paged=None):
+    """Speculative VERIFY phase: k-position forward, per-position logits,
+    cache writes DISCARDED.
+
+    tokens (B,k) carries each row's last verified token followed by its
+    k-1 draft proposals; ``valid`` should mark live rows (all k positions
+    — acceptance is decided from the returned logits, after the fact).
+    Returns ``(logits (B,k,V), feat (B,k,d))`` where ``feat`` is the
+    cut-layer feature sequence (post valid-mask, exactly what the codec
+    encoded) or, without a codec, the pre-norm final hidden states — the
+    position-(e-1) row of it is the draft head's feedback feature for the
+    next round.
+
+    The updated cache is intentionally NOT returned: no speculative write
+    may survive — the commit phase re-ingests only the accepted prefix
+    through :func:`chunk_forward` with a ``j < e`` valid mask, so
+    rejection rollback is pure position truncation and partially-written
+    pages can never leak into later superpositions.  Per-position logits
+    at position j are exact (equal to vanilla decode's) whenever every
+    earlier position's input matched vanilla's — the acceptance rule only
+    consumes logits inside that prefix.
+    """
+    h, _, cut_seq = chunk_forward(params, cache, tokens, pos, cfg,
+                                  codec=codec, codec_params=codec_params,
+                                  valid=valid, paged=paged)
+    feat = cut_seq if codec is not None else h
+    hn = _apply_norm(cfg, params["final_norm"], h)
+    return hn @ params["head"], feat
 
 
 # ---------------------------------------------------------------------------

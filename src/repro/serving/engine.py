@@ -128,7 +128,9 @@ from repro import codecs as codecs_lib
 from repro.configs.base import ModelConfig
 from repro.models import lm as lm_lib
 from repro.models.paging import PagedLayout
+from repro.serving import spec as spec_lib
 from repro.serving.paging import PageAllocator
+from repro.serving.spec import AdaptiveK, SpecConfig
 
 
 def _codec_execution_mode(codec) -> str:
@@ -157,6 +159,12 @@ class Request:
     t_submit: float = 0.0   # set by submit()
     t_first: float | None = None  # first token observed (TTFT = t_first - t_submit)
     evictions: int = 0      # times this request was preempted mid-flight
+    # speculative-decoding per-request stats (0 unless the engine ran with
+    # spec_decode): tokens emitted through verify rounds, draft positions
+    # the verify rejected, and rounds that truncated (accepted < k)
+    accepted: int = 0
+    rejected: int = 0
+    rollbacks: int = 0
 
 
 @dataclasses.dataclass
@@ -181,7 +189,8 @@ class BatchedEngine:
                  chunk_size: int = 16, sync_every: int = 8,
                  kv_layout: str = "contiguous", page_size: int = 16,
                  num_pages: int | None = None, interleave: int = 0,
-                 preemption: bool = False, kv_read: str = "gather"):
+                 preemption: bool = False, kv_read: str = "gather",
+                 spec_decode: SpecConfig | bool | None = None):
         # `codec` may be a ready codec object, a registry spec string
         # (e.g. "c3sl:R=4|int8"), or a per-direction link spec/SplitLink
         # ("c3sl:R=8|int8 >> bwd:c3sl:R=4").  Serving is forward-only —
@@ -192,6 +201,10 @@ class BatchedEngine:
         # codec off, matching the launch CLIs.
         from repro import transport
         self.link_spec = None
+        # a link spec's "draft:" segment is the speculative feedback
+        # channel's codec — captured here, consumed by the spec_decode
+        # resolution below (its presence auto-enables speculation)
+        draft_codec = draft_params = None
         if isinstance(codec, str):
             if codec == "none":
                 codec = codec_params = None
@@ -203,6 +216,9 @@ class BatchedEngine:
                         # caller-supplied params follow the LINK's tree;
                         # the engine serves the forward channel only
                         codec_params = link.fwd_params(codec_params)
+                    if link.draft is not None:
+                        draft_codec = codecs_lib.clamp_R(link.draft.codec,
+                                                         num_slots)
                     codec = link.fwd.codec
                 codec = codecs_lib.clamp_R(
                     codecs_lib.build(codec, D=cfg.d_model)
@@ -213,6 +229,10 @@ class BatchedEngine:
             # link OBJECT: caller owns clamping/init (as for codec objects);
             # slice the forward channel's params out of the link tree
             self.link_spec = codec.spec()
+            if codec.draft is not None:
+                draft_codec = codec.draft.codec
+                if codec_params is not None:
+                    draft_params = codec.draft_params(codec_params)
             if codec_params is not None:
                 codec_params = codec.fwd_params(codec_params)
             codec = codec.fwd.codec
@@ -234,6 +254,48 @@ class BatchedEngine:
             raise ValueError("preemption requires prefill_mode='chunked' "
                              "(eviction re-queues the request for chunked "
                              "re-prefill of its generated context)")
+        # ---- speculative decoding (repro.serving.spec) -------------------
+        # spec_decode may be a SpecConfig, True (defaults), or None; a link
+        # spec carrying a "draft:" segment auto-enables it with defaults.
+        if spec_decode is True:
+            spec_decode = SpecConfig()
+        if spec_decode is None and draft_codec is not None:
+            spec_decode = SpecConfig()
+        self.spec_cfg: SpecConfig | None = spec_decode
+        if spec_decode is not None:
+            if prefill_mode != "chunked":
+                raise ValueError(
+                    "spec_decode requires prefill_mode='chunked': the verify "
+                    "round is a k-position chunk dispatch")
+            if not greedy:
+                raise ValueError(
+                    "spec_decode requires greedy=True: greedy verification "
+                    "is what makes speculative output bit-identical to "
+                    "vanilla decode (sampled verification would need the "
+                    "rejection-sampling correction, which this engine does "
+                    "not implement)")
+            if cfg.sliding_window and spec_decode.ladder[-1] > cfg.sliding_window:
+                raise ValueError(
+                    f"spec_decode ladder max k={spec_decode.ladder[-1]} "
+                    f"exceeds sliding_window={cfg.sliding_window}: a verify "
+                    f"round must not write any ring slot twice; use a "
+                    f"smaller ladder")
+            if spec_decode.draft is not None:
+                # SpecConfig's draft spec overrides a link's draft: segment
+                draft_codec = codecs_lib.clamp_R(
+                    codecs_lib.build(spec_decode.draft, D=cfg.d_model),
+                    num_slots)
+                draft_params = None
+            if draft_codec is not None and draft_params is None:
+                # a distinct key: the draft channel's superposition basis
+                # must not collide with the forward channel's
+                draft_params = draft_codec.init(jax.random.PRNGKey(seed + 1))
+            self._k_ctl = AdaptiveK(spec_decode)
+        else:
+            draft_codec = draft_params = None
+            self._k_ctl = None
+        self.draft_codec = draft_codec
+        self.draft_params = draft_params
         self.preemption = preemption
         self.codec = codec
         self.codec_params = codec_params
@@ -278,6 +340,8 @@ class BatchedEngine:
                 fallbacks.append("the unstacked first-dense superblock")
             if prefill_mode == "chunked":
                 fallbacks.append("chunked-prefill reads")
+            if self.spec_cfg is not None:
+                fallbacks.append("speculative verify/commit reads")
             if fallbacks:
                 # loud by design: the silent-fallback bug class this tier
                 # fixes.  The uncovered reads stay on gather_pages and are
@@ -324,10 +388,21 @@ class BatchedEngine:
         # short because a slot finished while the page pool was starved
         # (the boundary then frees its pages immediately instead of holding
         # them for the rest of the window).
+        # speculative counters (0 while spec_decode is off): wire_bytes_draft
+        # is the draft channel's total — the server->client feedback payload
+        # plus the client->server draft token ids, per verify round; fwd
+        # bytes stay at the ONE _account_fwd_bytes entry (a verify round
+        # ships NO forward payload — decode-time token ids are already
+        # server-visible, so the server replays the bottom stack itself).
+        # spec_accepted counts tokens emitted through verify rounds,
+        # spec_rejected the draft positions the verify threw away, and
+        # spec_rollbacks the rounds that truncated (accepted < k).
         self.stats = {"dispatches": 0, "decode_steps": 0, "prefill_chunks": 0,
                       "payload_wire_bytes": 0, "wire_bytes_fwd": 0,
-                      "wire_bytes_bwd": 0, "eos_early_exits": 0,
-                      "evictions": 0, "withdrawn": 0}
+                      "wire_bytes_bwd": 0, "wire_bytes_draft": 0,
+                      "eos_early_exits": 0, "evictions": 0, "withdrawn": 0,
+                      "spec_windows": 0, "spec_rounds": 0, "spec_accepted": 0,
+                      "spec_rejected": 0, "spec_rollbacks": 0}
         # effective-execution-mode surfacing (the silent-fallback fix):
         # kv_read_execution_mode says how the paged read ACTUALLY runs on
         # this host ("gather" | "pallas-compiled" | "pallas-interpret") and
@@ -348,6 +423,15 @@ class BatchedEngine:
         # log: a long-lived engine serves millions of steps.  Kept out of
         # stats so stats stay scalar-valued.
         self.r_served: Counter[int] = Counter()
+        # the served k schedule under spec_decode, as {k: verify rounds}
+        # (k=1 windows are vanilla decode and counted by decode_steps only)
+        self.k_served: Counter[int] = Counter()
+        # streamed-token harvest: (uid, start, [tokens]) bursts collected
+        # at host syncs the engine already performs (boundaries, early
+        # retires) — drained by pop_stream_events() for the frontdoor's
+        # TOKENS frames
+        self.stream_events: list[tuple[int, int, list[int]]] = []
+        self._stream_mark: dict[int, int] = {}
         self._adaptive = isinstance(self.codec, codecs_lib.AdaptiveC3SL)
         self.state = self._init_state()
         self._build_programs()
@@ -364,7 +448,7 @@ class BatchedEngine:
         back only at admit/retire boundaries."""
         B = self.num_slots
         z = lambda dt: jnp.zeros((B,), dt)  # noqa: E731
-        return {
+        st = {
             "pos": z(jnp.int32),         # next cache position to write
             "last_tok": z(jnp.int32),    # decode input for the next step
             "active": z(bool),           # prompt fully ingested, generating
@@ -373,6 +457,16 @@ class BatchedEngine:
             "max_new": jnp.ones((B,), jnp.int32),
             "out_buf": jnp.zeros((B, self.max_len + 1), jnp.int32),
         }
+        if self.spec_cfg is not None:
+            # the draft head's feedback feature (the cut-layer feature at
+            # each slot's last verified position, as the draft channel
+            # delivered it) + the per-slot speculative counters the retire
+            # path folds into Request.accepted/rejected/rollbacks
+            st["draft_feat"] = jnp.zeros((B, self.cfg.d_model), jnp.float32)
+            st["accepted"] = z(jnp.int32)
+            st["rejected"] = z(jnp.int32)
+            st["rollbacks"] = z(jnp.int32)
+        return st
 
     def _build_programs(self):
         """Compile the engine's programs.  With an Adaptive-R codec this
@@ -384,6 +478,20 @@ class BatchedEngine:
         self._window_len = max(self.sync_every, self.interleave, 1)
         self._programs = codecs_lib.build_program_table(
             self.codec, self.codec_params, self._make_programs)
+        # speculative verify/commit programs, one per (engine R bucket,
+        # draft R bucket, k > 1) — jit is lazy, so unvisited combinations
+        # cost nothing until first dispatch, and a HOST-side (R, draft-R, k)
+        # switch lands on a pre-built entry: zero post-warmup recompiles,
+        # same contract the vanilla bucket table pins.  k = 1 IS the
+        # vanilla window program (speculation off) and has no entry here.
+        self._spec_programs: dict = {}
+        if self.spec_cfg is not None:
+            for dkey, dc, dp in self._draft_buckets():
+                for key, c, cp in self._codec_buckets():
+                    for k in self.spec_cfg.ladder:
+                        if k > 1:
+                            self._spec_programs[(key, dkey, k)] = \
+                                self._make_spec_program(c, cp, dc, dp, k)
 
         def reset_fn(cache, mask):
             """Layout-aware zeroing of the rows `mask` marks.  The cache
@@ -510,6 +618,138 @@ class BatchedEngine:
                 "legacy": jax.jit(legacy_step_fn)}
 
     # ------------------------------------------------------------------
+    # speculative verify/commit programs (repro.serving.spec)
+    # ------------------------------------------------------------------
+
+    def _codec_buckets(self):
+        """(program key, concrete codec, params) per engine R bucket —
+        the same host-side keying ``_bucket()`` dispatches on."""
+        if self._adaptive:
+            return [(R, self.codec.buckets[R],
+                     self.codec.params_for(self.codec_params, R))
+                    for R in self.codec.ladder]
+        return [(None, self.codec, self.codec_params)]
+
+    def _draft_buckets(self):
+        """Same, for the draft channel's codec (one (None, None, None)
+        entry when feedback ships raw / the head needs none)."""
+        dc = self.draft_codec
+        if isinstance(dc, codecs_lib.AdaptiveC3SL):
+            return [(R, dc.buckets[R], dc.params_for(self.draft_params, R))
+                    for R in dc.ladder]
+        return [(None, dc, self.draft_params)]
+
+    def _make_spec_program(self, codec, codec_params, d_codec, d_params,
+                           k: int):
+        """One (codec bucket, draft bucket, k) speculative window program:
+        a while_loop of verify/commit rounds, each advancing every live
+        slot by 1..k tokens in-graph.
+
+        Round shape (see repro.serving.spec for the invariants):
+
+        1. round-trip each slot's feedback feature through the DRAFT codec
+           and propose k-1 draft tokens (exactly what the client computes
+           from the feedback payload — drafts are deterministic argmax, so
+           simulating the client in-graph is bit-exact);
+        2. VERIFY: k-position chunk forward over [last_tok, drafts] on the
+           committed cache — per-position greedy targets; the cache this
+           phase writes is DISCARDED (lm.verify_chunk never returns it);
+        3. accept the longest matching prefix, group-lockstep under the
+           batch-wise codec, capped at EOS/budget (spec.accept_lengths);
+        4. COMMIT: re-ingest only the accepted tokens through the
+           valid-masked chunk_forward write path — rollback is pure
+           position truncation, rejected positions write nothing anywhere.
+
+        Greedy verification makes the emitted stream bit-identical to the
+        vanilla window program's (pinned in tests/test_spec_decode.py).
+        """
+        cfg = self.cfg
+        eos_id, max_len = self.eos_id, self.max_len
+        paged = self.paged
+        group = getattr(codec, "R", 1) if codec is not None else 1
+        head_mode = self.spec_cfg.draft_head
+        needs_feedback = self.spec_cfg.needs_feedback
+
+        def round_fn(params, cache, state):
+            live = state["active"] & ~state["done"]
+            B = live.shape[0]
+            rows = jnp.arange(B)
+            feat = state["draft_feat"]
+            if needs_feedback and d_codec is not None:
+                # the feedback payload crosses the draft channel: dead rows
+                # contribute zero to its superposition (same hygiene as the
+                # forward channel), live rows come back with the draft R's
+                # cross-talk — which can only cost acceptance, not
+                # correctness (the verify consumes raw tokens, never the
+                # lossy feature)
+                feat = jnp.where(live[:, None], feat, 0.0)
+                feat = d_codec.decode(d_params,
+                                      d_codec.encode(d_params, feat))
+            drafts = spec_lib.propose_drafts(params, feat,
+                                             state["last_tok"], k, head_mode)
+            toks_v = jnp.concatenate([state["last_tok"][:, None], drafts],
+                                     axis=1)
+            valid_v = live[:, None] & jnp.ones((1, k), bool)
+            logits, feat_seq = lm_lib.verify_chunk(
+                params, cache, toks_v, state["pos"], cfg, codec=codec,
+                codec_params=codec_params, valid=valid_v, paged=paged)
+            g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            e = spec_lib.accept_lengths(
+                toks_v, g, live, group=group, eos_id=eos_id,
+                rem_new=state["max_new"] - state["out_len"],
+                rem_pos=max_len - state["pos"])
+            out_buf = state["out_buf"]
+            cap = out_buf.shape[1]
+            for j in range(k):
+                write = live & (j < e)
+                col = jnp.where(write,
+                                jnp.minimum(state["out_len"] + j, cap - 1),
+                                cap)
+                out_buf = out_buf.at[rows, col].set(g[:, j], mode="drop")
+            e_live = jnp.where(live, e, 0)
+            out_len = state["out_len"] + e_live
+            pos = state["pos"] + e_live
+            toks_c = jnp.concatenate([state["last_tok"][:, None],
+                                      g[:, :k - 1]], axis=1)
+            valid_c = live[:, None] & (jnp.arange(k)[None, :] < e[:, None])
+            _, cache, _ = lm_lib.chunk_forward(
+                params, cache, toks_c, state["pos"], cfg, codec=codec,
+                codec_params=codec_params, valid=valid_c, paged=paged)
+            last_emitted = g[rows, e - 1]
+            last_tok = jnp.where(live, last_emitted, state["last_tok"])
+            new_feat = jnp.where(live[:, None], feat_seq[rows, e - 1],
+                                 state["draft_feat"])
+            fin = (out_len >= state["max_new"]) | (pos >= max_len)
+            if eos_id is not None:
+                fin |= last_emitted == eos_id
+            done = state["done"] | (live & fin)
+            rej = jnp.where(live, k - e, 0)
+            roll = (live & (e < k)).astype(jnp.int32)
+            state = {**state, "pos": pos, "last_tok": last_tok, "done": done,
+                     "out_len": out_len, "out_buf": out_buf,
+                     "draft_feat": new_feat,
+                     "accepted": state["accepted"] + e_live,
+                     "rejected": state["rejected"] + rej,
+                     "rollbacks": state["rollbacks"] + roll}
+            return cache, state, (e_live.sum(), rej.sum(), roll.sum())
+
+        def spec_window_fn(params, cache, state, n_rounds):
+            def cond(carry):
+                i, _, _, _, _, state = carry
+                return ((i < n_rounds)
+                        & jnp.any(state["active"] & ~state["done"]))
+
+            def body(carry):
+                i, acc, rej, rol, cache, state = carry
+                cache, state, (a, r, ro) = round_fn(params, cache, state)
+                return i + 1, acc + a, rej + r, rol + ro, cache, state
+
+            z = jnp.int32(0)
+            return jax.lax.while_loop(cond, body, (z, z, z, z, cache, state))
+
+        return jax.jit(spec_window_fn, donate_argnums=(1, 2))
+
+    # ------------------------------------------------------------------
     # codec-schedule dispatch + wire accounting
     # ------------------------------------------------------------------
 
@@ -556,6 +796,40 @@ class BatchedEngine:
         shape = codecs_lib.chunk_payload_shape(c, self.num_slots,
                                                self.chunk_size)
         return codecs_lib.payload_wire_bytes(c, shape)
+
+    def _draft_round_wire_bytes(self, k: int) -> int:
+        """Draft-channel bytes ONE verify round ships, both ways: the
+        server->client feedback payload (the cut-layer feature batch at
+        the draft codec's R; zero for the "copy" head, raw f32 without a
+        draft codec) plus the client->server draft token ids (k-1 per
+        slot at the smallest dtype covering the vocab).  The FORWARD
+        channel ships nothing during a verify round — the server already
+        knows every decode-time token id and replays the bottom stack
+        itself — which is exactly the amortization being bought."""
+        tok_b = spec_lib.token_wire_bytes(self.cfg.vocab_size)
+        ids = (k - 1) * self.num_slots * tok_b
+        if not self.spec_cfg.needs_feedback:
+            return ids
+        dc = self.draft_codec
+        if dc is None:
+            return ids + self.num_slots * self.cfg.d_model * 4
+        c = dc.current if isinstance(dc, codecs_lib.AdaptiveC3SL) else dc
+        return ids + codecs_lib.payload_wire_bytes(
+            c, c.payload_shape(self.num_slots))
+
+    def wire_per_token(self) -> dict:
+        """Wire bytes per GENERATED token across the serving channels —
+        the speculative amortization metric (satellite: first-class
+        per-token accounting, cross-checked in bench_serving).  Counts
+        tokens of RETIRED requests (the denominator the engine can attest
+        to); call after draining for exact totals."""
+        n = self._tokens_decoded
+        fwd = self.stats["wire_bytes_fwd"]
+        draft = self.stats["wire_bytes_draft"]
+        return {"generated_tokens": n,
+                "wire_bytes_fwd": fwd,
+                "wire_bytes_draft": draft,
+                "wire_bytes_per_token": (fwd + draft) / max(n, 1)}
 
     # ------------------------------------------------------------------
     # public API
@@ -607,10 +881,12 @@ class BatchedEngine:
                       for k, v in jax.device_get(self.state).items()}
                 n = int(st["out_len"][i])
                 req.out = [int(t) for t in st["out_buf"][i, :n]]
+                self._fold_spec_counters(i, req, st)
                 st["active"][i] = st["done"][i] = False
                 st["pos"][i] = st["last_tok"][i] = st["out_len"][i] = 0
                 st["out_buf"][i, :] = 0
                 self.state = jax.device_put(st)
+            self._stream_mark.pop(uid, None)
             req.evictions += 1
             req.done = False
             slot.req = None
@@ -699,11 +975,61 @@ class BatchedEngine:
     # fast path internals
     # ------------------------------------------------------------------
 
+    def _spec_k(self) -> int:
+        """The k the NEXT decode window speculates at (1 = vanilla).  A
+        starved page pool drops to vanilla windows: they support the
+        per-token EOS early exit that frees a finished slot's reservation
+        mid-window, which matters more than amortization right then."""
+        if self.spec_cfg is None or self._pool_starved():
+            return 1
+        return self._k_ctl.current_k
+
+    def _spec_window(self, n: int, k: int) -> int:
+        """Dispatch one speculative window: ceil(n/k) verify/commit rounds
+        in ONE jitted while_loop; returns tokens emitted.  The host reads
+        four scalars at the window end (rounds + the three counters) —
+        the same per-window sync cadence as the vanilla path's
+        ``executed = int(i)``, no per-round syncs."""
+        n_rounds = -(-min(n, self._window_len) // k)
+        bucket = self._bucket()
+        dkey = codecs_lib.program_key(self.draft_codec)
+        i, acc, rej, rol, self.cache, self.state = \
+            self._spec_programs[(bucket, dkey, k)](
+                self.params, self.cache, self.state, jnp.int32(n_rounds))
+        rounds, acc, rej, rol = (int(v) for v in
+                                 jax.device_get((i, acc, rej, rol)))
+        self.stats["dispatches"] += 1
+        self.stats["decode_steps"] += acc
+        self.stats["spec_windows"] += 1
+        self.stats["spec_rounds"] += rounds
+        self.stats["spec_accepted"] += acc
+        self.stats["spec_rejected"] += rej
+        self.stats["spec_rollbacks"] += rol
+        # forward channel: ZERO bytes (server-side bottom-stack replay);
+        # the draft channel carries the round's feedback + draft ids
+        self.stats["wire_bytes_draft"] += rounds * \
+            self._draft_round_wire_bytes(k)
+        if bucket is not None:
+            # keep r_served.total() == decode_steps + prefill_chunks: one
+            # count per token served through the bucket's codec
+            self.r_served[bucket] += acc
+        self.k_served[k] += rounds
+        if acc + rej:
+            self._k_ctl.observe(acc / (acc + rej))
+        if acc:
+            self._dirty = True
+        return acc
+
     def _decode_window(self, n: int) -> int:
         """Dispatch one jitted decode window of up to n steps; returns the
-        number of steps the device actually executed before draining."""
+        number of steps the device actually executed before draining.
+        Under spec_decode with current k > 1, the window is a speculative
+        verify/commit loop instead (bit-identical greedy outputs)."""
         if n <= 0:
             return 0
+        k = self._spec_k()
+        if k > 1:
+            return self._spec_window(n, k)
         n = min(n, self._window_len)
         keys = jax.random.split(self.rng, self._window_len + 1)
         self.rng = keys[0]
@@ -730,6 +1056,7 @@ class BatchedEngine:
                 # the early exit actually cut short a window that still had
                 # live slots (vs the batch simply draining)
                 self.stats["eos_early_exits"] += 1
+            self._collect_stream(st)
             if self._retire_done(st):
                 self.state = jax.device_put(st)
         if bucket is not None:
@@ -824,6 +1151,8 @@ class BatchedEngine:
                 slot.req.done = True
                 self.finished.append(slot.req)
                 self._tokens_decoded += n
+                self._fold_spec_counters(i, slot.req, st)
+                self._stream_mark.pop(slot.req.uid, None)
                 slot.req = None
                 slot.feed = []
                 self._free_slot_pages(i)
@@ -832,6 +1161,44 @@ class BatchedEngine:
                 st["out_buf"][i, :] = 0
                 touched = True
         return touched
+
+    def _fold_spec_counters(self, i: int, req: Request, st):
+        """Fold slot i's device-side speculative counters into the request
+        (retire/evict/withdraw — totals survive preemption) and zero the
+        slot's speculative state so the next resident starts clean."""
+        if "accepted" not in st:
+            return
+        req.accepted += int(st["accepted"][i])
+        req.rejected += int(st["rejected"][i])
+        req.rollbacks += int(st["rollbacks"][i])
+        st["accepted"][i] = st["rejected"][i] = st["rollbacks"][i] = 0
+        st["draft_feat"][i, :] = 0
+
+    def _collect_stream(self, st):
+        """Harvest tokens emitted since each resident request's stream
+        watermark into ``stream_events`` — piggybacks on host state copies
+        the engine already makes (boundaries, early retires), so streaming
+        costs no extra device round trips.  Drain with
+        :meth:`pop_stream_events`."""
+        for i, slot in enumerate(self.slots):
+            if slot.req is None:
+                continue
+            uid = slot.req.uid
+            n = int(st["out_len"][i])
+            mark = self._stream_mark.get(uid, 0)
+            if n > mark:
+                self.stream_events.append(
+                    (uid, mark, [int(t) for t in st["out_buf"][i, mark:n]]))
+                self._stream_mark[uid] = n
+
+    def pop_stream_events(self) -> list[tuple[int, int, list[int]]]:
+        """Drain the (uid, start, tokens) bursts collected since the last
+        call — the frontdoor turns each into one incremental TOKENS frame.
+        ``start`` is the burst's absolute offset in the request's output:
+        a receiver that missed a burst (dropped on a dying connection)
+        detects the gap instead of silently splicing."""
+        ev, self.stream_events = self.stream_events, []
+        return ev
 
     def _evict(self, i: int, st):
         """Preempt slot ``i`` mid-flight: capture the tokens it has emitted
@@ -846,6 +1213,7 @@ class BatchedEngine:
         req.out = [int(t) for t in st["out_buf"][i, :n]]
         req.evictions += 1
         self.stats["evictions"] += 1
+        self._fold_spec_counters(i, req, st)
         slot.req = None
         slot.feed = []
         slot.ingested = 0
@@ -902,6 +1270,7 @@ class BatchedEngine:
             return
         self._dirty = False
         st = {k: np.array(v) for k, v in jax.device_get(self.state).items()}
+        self._collect_stream(st)
         touched = self._retire_done(st)
         admitted: list[int] = []
         while self.queue:
@@ -928,6 +1297,9 @@ class BatchedEngine:
             st["out_buf"][i, :] = 0
             if k:
                 st["out_buf"][i, :k] = slot.req.out
+            # stream watermark: tokens in req.out were already delivered
+            # (or re-prefilled after eviction) — only NEW emissions stream
+            self._stream_mark.setdefault(slot.req.uid, k)
             admitted.append(i)
             touched = True
         if touched:

@@ -29,7 +29,8 @@ imports (same pattern PR 1 used for ``repro.core.codec``).
 """
 from repro.faults import ChannelErasure, FaultPlan, RecoveryPolicy
 from repro.transport.channel import Channel, grad_roundtrip, masked_decode
-from repro.transport.link import (SplitLink, as_link, build_link,
+from repro.transport.link import (BWD_PREFIX, DRAFT_PREFIX, LINK_SEP,
+                                  SplitLink, as_link, build_link,
                                   build_link_or_codec,
                                   build_link_program_table, is_link_spec,
                                   link_program_key, parse_link_spec, pin_link,
@@ -41,7 +42,7 @@ from repro.transport.split import (apply_codec, make_split_loss_fn,
 __all__ = [
     "Channel", "SplitLink", "grad_roundtrip", "roundtrip", "masked_decode",
     "as_link", "build_link", "build_link_or_codec", "is_link_spec",
-    "parse_link_spec",
+    "parse_link_spec", "LINK_SEP", "BWD_PREFIX", "DRAFT_PREFIX",
     "build_link_program_table", "link_program_key", "pin_link",
     "slice_link_params",
     "apply_codec", "make_split_loss_fn", "split_comm_bytes",

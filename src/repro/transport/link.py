@@ -2,7 +2,7 @@
 
 Spec grammar (extends the codec grammar in ``repro.codecs``)::
 
-    LINK := CODEC_SPEC [" >> bwd:" CODEC_SPEC]
+    LINK := CODEC_SPEC [" >> bwd:" CODEC_SPEC] [" >> draft:" CODEC_SPEC]
 
 The part before ``>>`` is the forward (client→server activation) codec; the
 ``bwd:``-prefixed part is the backward (server→client gradient) codec.  With
@@ -11,9 +11,20 @@ the backward payload simply has the forward's compressed shape — exactly the
 shared-codec behavior every pre-transport call site had, bit-identical
 (pinned in tests/test_transport.py).
 
+The ``draft:``-prefixed segment is the speculative-decoding DRAFT channel
+(``repro.serving.spec``): the server→client cut-feature feedback payload the
+client-side draft head reads between verify rounds.  It is a third
+:class:`Channel` with its own codec/R and wire accounting; it never touches
+the forward/backward numerics (draft-channel loss degrades only the draft
+ACCEPTANCE RATE, never output correctness — see
+src/repro/transport/README.md), so unlike ``bwd:`` it composes with any
+forward codec and may appear with or without a ``bwd:`` stage.
+
     build_link("c3sl:R=16|int8 >> bwd:c3sl:R=8", D=4096)
     build_link("adaptive:c3sl:R=8,min_R=2|int8 >> "
                "bwd:adaptive:c3sl:R=4,min_R=2|int8", D=256)
+    build_link("c3sl:R=16|int8 >> bwd:c3sl:R=8 >> draft:c3sl:R=32|int8",
+               D=4096)
 
 An asymmetric link inserts :func:`repro.transport.channel.grad_roundtrip` on
 the payload: the forward pass is unchanged (the seam is identity), and the
@@ -38,29 +49,48 @@ from repro.transport.channel import Channel, grad_roundtrip, masked_decode
 
 LINK_SEP = ">>"
 BWD_PREFIX = "bwd:"
+DRAFT_PREFIX = "draft:"
 
 
 def is_link_spec(spec: str) -> bool:
-    """True for per-direction specs (``... >> bwd:...``)."""
+    """True for per-direction specs (``... >> bwd:...`` / ``... >> draft:...``)."""
     return isinstance(spec, str) and LINK_SEP in spec
 
 
-def parse_link_spec(spec: str) -> tuple[str, str | None]:
-    """Split a link spec into (fwd_spec, bwd_spec-or-None)."""
+def parse_link_spec(spec: str) -> tuple[str, str | None, str | None]:
+    """Split a link spec into (fwd_spec, bwd_spec-or-None, draft_spec-or-None).
+
+    Tagged segments after the forward codec may appear in either order but
+    at most once each; every segment after ``>>`` must carry a ``bwd:`` or
+    ``draft:`` tag."""
     if not is_link_spec(spec):
-        return spec.strip(), None
-    fwd_text, sep, bwd_text = spec.partition(LINK_SEP)
-    bwd_text = bwd_text.strip()
-    if LINK_SEP in bwd_text:
-        raise ValueError(f"more than one '{LINK_SEP}' in link spec {spec!r}")
-    if not bwd_text.startswith(BWD_PREFIX):
-        raise ValueError(
-            f"the stage after '{LINK_SEP}' must be tagged '{BWD_PREFIX}', "
-            f"got {bwd_text!r} in {spec!r}")
-    bwd_spec = bwd_text[len(BWD_PREFIX):].strip()
-    if not bwd_spec:
-        raise ValueError(f"empty backward codec spec in {spec!r}")
-    return fwd_text.strip(), bwd_spec
+        return spec.strip(), None, None
+    parts = [p.strip() for p in spec.split(LINK_SEP)]
+    if len(parts) > 3:
+        raise ValueError(f"more than two '{LINK_SEP}' in link spec {spec!r}")
+    fwd_spec = parts[0]
+    if not fwd_spec:
+        raise ValueError(f"empty forward codec spec in {spec!r}")
+    bwd_spec = draft_spec = None
+    for part in parts[1:]:
+        if part.startswith(BWD_PREFIX):
+            if bwd_spec is not None:
+                raise ValueError(f"duplicate '{BWD_PREFIX}' stage in {spec!r}")
+            bwd_spec = part[len(BWD_PREFIX):].strip()
+            if not bwd_spec:
+                raise ValueError(f"empty backward codec spec in {spec!r}")
+        elif part.startswith(DRAFT_PREFIX):
+            if draft_spec is not None:
+                raise ValueError(
+                    f"duplicate '{DRAFT_PREFIX}' stage in {spec!r}")
+            draft_spec = part[len(DRAFT_PREFIX):].strip()
+            if not draft_spec:
+                raise ValueError(f"empty draft codec spec in {spec!r}")
+        else:
+            raise ValueError(
+                f"stages after '{LINK_SEP}' must be tagged '{BWD_PREFIX}' or "
+                f"'{DRAFT_PREFIX}', got {part!r} in {spec!r}")
+    return fwd_spec, bwd_spec, draft_spec
 
 
 def _has_trainable_params(codec) -> bool:
@@ -77,16 +107,24 @@ def _has_trainable_params(codec) -> bool:
 
 
 class SplitLink:
-    """(fwd: Channel, bwd: Channel) — the cut-layer exchange, both ways.
+    """(fwd: Channel, bwd: Channel[, draft: Channel]) — the cut-layer
+    exchange, both ways, plus the optional speculative draft channel.
 
     ``bwd_codec=None`` builds a MIRRORED link: the backward channel aliases
     the forward codec (one codec object, one params tree, the pre-transport
     behavior).  An explicit backward codec makes the link asymmetric: its
     params tree becomes ``{"fwd": ..., "bwd": ...}`` and the gradient seam
     is inserted at the payload.
+
+    ``draft_codec`` adds the serving-side draft channel (a third
+    :class:`Channel`, direction tag ``"draft"``).  It carries the
+    server→client cut-feature feedback the speculative draft head reads
+    (repro.serving.spec) — it is OUTSIDE the fwd/bwd numeric path, so its
+    presence never changes training or non-speculative serving numerics;
+    the params tree gains a ``"draft"`` key only when the channel exists.
     """
 
-    def __init__(self, fwd_codec, bwd_codec=None):
+    def __init__(self, fwd_codec, bwd_codec=None, draft_codec=None):
         if bwd_codec is not None:
             for tag, c in (("fwd", fwd_codec), ("bwd", bwd_codec)):
                 if getattr(c, "feature_layout", "flat") != "flat":
@@ -105,10 +143,24 @@ class SplitLink:
                     f"backward pass, where codec params receive no "
                     f"gradient — use a fixed-key codec (c3sl/identity) or "
                     f"wire stages on the bwd: side")
+        if draft_codec is not None:
+            if getattr(draft_codec, "feature_layout", "flat") != "flat":
+                raise ValueError(
+                    f"the draft channel supports flat codecs only, got "
+                    f"feature_layout="
+                    f"{getattr(draft_codec, 'feature_layout', None)!r}")
+            if _has_trainable_params(draft_codec):
+                raise ValueError(
+                    f"the draft channel cannot train codec params "
+                    f"({draft_codec.spec()}): serving never backpropagates "
+                    f"through the feedback payload — use a fixed-key codec "
+                    f"(c3sl/identity) or wire stages on the draft: side")
         self.fwd = Channel("fwd", fwd_codec)
         self.bwd = Channel("bwd", bwd_codec if bwd_codec is not None
                            else fwd_codec)
         self.mirrored = bwd_codec is None
+        self.draft = (Channel("draft", draft_codec)
+                      if draft_codec is not None else None)
 
     # ---- codec-protocol-ish surface (forward channel's view) -------------
 
@@ -120,26 +172,47 @@ class SplitLink:
     def D(self) -> int:
         return self.fwd.codec.D
 
+    @property
+    def _nested(self) -> bool:
+        """True when the params tree is the tagged ``{"fwd": ...}`` dict
+        (any non-mirrored or draft-carrying link); a mirrored draft-free
+        link keeps the bare forward tree for checkpoint back-compat."""
+        return (not self.mirrored) or (self.draft is not None)
+
     def init(self, rng=None):
-        """Codec params.  Mirrored: exactly the forward codec's params (the
-        pre-transport tree, so existing checkpoints/tests line up).
-        Asymmetric: ``{"fwd": ..., "bwd": ...}``, both from the SAME rng so
-        equal fwd/bwd specs get bit-identical key tables."""
-        if self.mirrored:
+        """Codec params.  Mirrored (no draft): exactly the forward codec's
+        params (the pre-transport tree, so existing checkpoints/tests line
+        up).  Otherwise ``{"fwd": ...[, "bwd": ...][, "draft": ...]}``, all
+        from the SAME rng so equal specs get bit-identical key tables."""
+        if not self._nested:
             return self.fwd.codec.init(rng)
-        return {"fwd": self.fwd.codec.init(rng),
-                "bwd": self.bwd.codec.init(rng)}
+        tree = {"fwd": self.fwd.codec.init(rng)}
+        if not self.mirrored:
+            tree["bwd"] = self.bwd.codec.init(rng)
+        if self.draft is not None:
+            tree["draft"] = self.draft.codec.init(rng)
+        return tree
 
     def fwd_params(self, params):
-        return params if self.mirrored else params["fwd"]
+        return params["fwd"] if self._nested else params
 
     def bwd_params(self, params):
-        return params if self.mirrored else params["bwd"]
+        if self.mirrored:
+            return self.fwd_params(params)
+        return params["bwd"]
+
+    def draft_params(self, params):
+        if self.draft is None:
+            raise ValueError("link has no draft channel")
+        return params["draft"]
 
     def spec(self) -> str:
-        if self.mirrored:
-            return self.fwd.spec()
-        return f"{self.fwd.spec()} {LINK_SEP} {BWD_PREFIX}{self.bwd.spec()}"
+        out = self.fwd.spec()
+        if not self.mirrored:
+            out = f"{out} {LINK_SEP} {BWD_PREFIX}{self.bwd.spec()}"
+        if self.draft is not None:
+            out = f"{out} {LINK_SEP} {DRAFT_PREFIX}{self.draft.spec()}"
+        return out
 
     def __repr__(self) -> str:
         return f"SplitLink({self.spec()!r}{', mirrored' if self.mirrored else ''})"
@@ -201,6 +274,14 @@ class SplitLink:
         rows = B // self.fwd.current_R
         return self.bwd.wire_bytes(rows)
 
+    def wire_bytes_draft(self, B: int) -> int:
+        """Bytes one draft-feedback payload ships (the (B, D) cut feature of
+        the last accepted position, through the draft channel's current
+        bucket).  0 without a draft channel."""
+        if self.draft is None:
+            return 0
+        return self.draft.wire_bytes(B)
+
     def total_wire_bytes(self, B: int) -> int:
         return self.wire_bytes_fwd(B) + self.wire_bytes_bwd(B)
 
@@ -211,13 +292,16 @@ class SplitLink:
         then the backward channel to the SMALLEST gradient-payload row count
         any forward bucket can produce (``max_R / max_R_fwd`` rows per
         forward group) — so no (R_fwd, R_bwd) pair can hit a divisibility
-        error mid-schedule."""
+        error mid-schedule.  The draft channel's payload is the full B-row
+        feedback feature, so it clamps to the batch like the forward one."""
         f2 = clamp_R(self.fwd.codec, max_R)
+        d2 = (clamp_R(self.draft.codec, max_R)
+              if self.draft is not None else None)
         if self.mirrored:
-            return SplitLink(f2)
+            return SplitLink(f2, draft_codec=d2)
         max_R_f = getattr(f2, "max_R", getattr(f2, "R", 1))
         b2 = clamp_R(self.bwd.codec, max(max_R // max(max_R_f, 1), 1))
-        return SplitLink(f2, b2)
+        return SplitLink(f2, b2, draft_codec=d2)
 
 
 def as_link(codec_or_link) -> SplitLink:
@@ -228,13 +312,15 @@ def as_link(codec_or_link) -> SplitLink:
 
 
 def build_link(spec: str, /, **defaults) -> SplitLink:
-    """Build a ``SplitLink`` from a link spec (both halves share the keyword
-    ``defaults``, e.g. the runtime ``D``)."""
-    fwd_spec, bwd_spec = parse_link_spec(spec)
+    """Build a ``SplitLink`` from a link spec (all segments share the
+    keyword ``defaults``, e.g. the runtime ``D``)."""
+    fwd_spec, bwd_spec, draft_spec = parse_link_spec(spec)
     fwd_codec = codecs.build(fwd_spec, **defaults)
-    if bwd_spec is None:
-        return SplitLink(fwd_codec)
-    return SplitLink(fwd_codec, codecs.build(bwd_spec, **defaults))
+    bwd_codec = (codecs.build(bwd_spec, **defaults)
+                 if bwd_spec is not None else None)
+    draft_codec = (codecs.build(draft_spec, **defaults)
+                   if draft_spec is not None else None)
+    return SplitLink(fwd_codec, bwd_codec, draft_codec)
 
 
 def build_link_or_codec(spec: str, /, *, quant_bits=None, **defaults):
@@ -322,18 +408,22 @@ def link_program_key(codec_or_link):
 
 
 def _static_pair(link: SplitLink, params, kf, kb):
-    """Resolve one (fwd bucket, bwd bucket) pair to a static link+params."""
+    """Resolve one (fwd bucket, bwd bucket) pair to a static link+params.
+    The draft channel is NOT part of the fwd/bwd numeric path (it never
+    enters ``roundtrip``), so static pairs drop it — the serving engine
+    builds its own per-(bucket, k) speculative programs."""
     fwd_c = link.fwd.codec.buckets[kf] if kf is not None else link.fwd.codec
     if link.mirrored:
         static = SplitLink(fwd_c)
-        p = None if params is None else link.fwd.params_for(params, kf)
+        p = (None if params is None
+             else link.fwd.params_for(link.fwd_params(params), kf))
         return static, p
     bwd_c = link.bwd.codec.buckets[kb] if kb is not None else link.bwd.codec
     static = SplitLink(fwd_c, bwd_c)
     if params is None:
         return static, None
-    return static, {"fwd": link.fwd.params_for(params["fwd"], kf),
-                    "bwd": link.bwd.params_for(params["bwd"], kb)}
+    return static, {"fwd": link.fwd.params_for(link.fwd_params(params), kf),
+                    "bwd": link.bwd.params_for(link.bwd_params(params), kb)}
 
 
 def build_link_program_table(codec_or_link, params, make):
@@ -376,6 +466,6 @@ def pin_link(link: SplitLink) -> SplitLink:
 def slice_link_params(link: SplitLink, params):
     """Current-bucket params matching :func:`pin_link`'s static link."""
     if link.mirrored:
-        return link.fwd.params_for(params)
-    return {"fwd": link.fwd.params_for(params["fwd"]),
-            "bwd": link.bwd.params_for(params["bwd"])}
+        return link.fwd.params_for(link.fwd_params(params))
+    return {"fwd": link.fwd.params_for(link.fwd_params(params)),
+            "bwd": link.bwd.params_for(link.bwd_params(params))}

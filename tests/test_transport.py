@@ -21,17 +21,32 @@ def test_is_link_spec_and_parse():
     assert transport.is_link_spec("c3sl:R=8 >> bwd:c3sl:R=4")
     assert not transport.is_link_spec("c3sl:R=8|int8")
     assert transport.parse_link_spec("c3sl:R=8|int8 >> bwd:c3sl:R=4") == \
-        ("c3sl:R=8|int8", "c3sl:R=4")
-    assert transport.parse_link_spec("c3sl:R=8") == ("c3sl:R=8", None)
+        ("c3sl:R=8|int8", "c3sl:R=4", None)
+    assert transport.parse_link_spec("c3sl:R=8") == ("c3sl:R=8", None, None)
+    assert transport.parse_link_spec(
+        "c3sl:R=16|int8 >> bwd:c3sl:R=8 >> draft:c3sl:R=32|int8") == \
+        ("c3sl:R=16|int8", "c3sl:R=8", "c3sl:R=32|int8")
+    # draft-only links need no bwd: stage, and tag order is free
+    assert transport.parse_link_spec("c3sl:R=8 >> draft:c3sl:R=4") == \
+        ("c3sl:R=8", None, "c3sl:R=4")
+    assert transport.parse_link_spec(
+        "c3sl:R=8 >> draft:c3sl:R=4 >> bwd:c3sl:R=2") == \
+        ("c3sl:R=8", "c3sl:R=2", "c3sl:R=4")
 
 
 def test_link_spec_errors():
     with pytest.raises(ValueError, match="bwd:"):
         transport.parse_link_spec("c3sl:R=8 >> c3sl:R=4")
-    with pytest.raises(ValueError, match="more than one"):
+    with pytest.raises(ValueError, match="duplicate"):
         transport.parse_link_spec("a >> bwd:b >> bwd:c")
+    with pytest.raises(ValueError, match="more than two"):
+        transport.parse_link_spec("a >> bwd:b >> draft:c >> draft:d")
+    with pytest.raises(ValueError, match="duplicate"):
+        transport.parse_link_spec("a >> draft:b >> draft:c")
     with pytest.raises(ValueError, match="empty backward"):
         transport.parse_link_spec("c3sl:R=8 >> bwd:")
+    with pytest.raises(ValueError, match="empty draft"):
+        transport.parse_link_spec("c3sl:R=8 >> draft:")
     with pytest.raises(ValueError, match="flat"):
         SplitLink(build("bnpp:R=4,C=8,H=4,W=4"), build("c3sl:R=2,D=64"))
 
